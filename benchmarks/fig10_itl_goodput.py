@@ -1,0 +1,11 @@
+"""Paper Fig 10: goodput under the ITL-only SLO (TTFT unconstrained —
+isolates the inter-token latency behaviour after saturation)."""
+from benchmarks.fig9_goodput import main as fig9_main
+
+
+def main():
+    return fig9_main(metric="itl_goodput_req_s", tag="fig10")
+
+
+if __name__ == "__main__":
+    main()

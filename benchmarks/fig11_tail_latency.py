@@ -1,0 +1,51 @@
+"""Paper Fig 11/12: p95 TTFT and p95 ITL, normalized to chunked(512) at
+the lowest QPS.  The paper's headline: RAPID p95 TTFT up to 220x lower
+than chunked (no chunking, no transfer); disagg shows ~2x lower p95 ITL
+than RAPID but at lower throughput."""
+from benchmarks.common import MODELS, emit, run_point
+
+QPS = (2.0, 8.0, 16.0)
+BASELINES = [("hybrid", 512), ("hybrid", 2048), ("disagg", 512),
+             ("rapid", 512)]
+
+
+def main():
+    rows = []
+    ttft_ratios, itl_ratios = [], []
+    for arch, mcfg in MODELS.items():
+        for trace in ("lmsys", "arxiv"):
+            res = {}
+            for mode, chunk in BASELINES:
+                label = mode if mode != "hybrid" else f"hybrid{chunk}"
+                for qps in QPS:
+                    s = run_point(arch, mode, trace, qps,
+                                  mcfg["slo_itl_ms"], chunk)
+                    res[(label, qps)] = s
+                    rows.append(
+                        (f"fig11_{arch}_{trace}_{label}_qps{qps}_ttft_p95_s",
+                         f"{s['ttft_p95_s']:.3f}", "seconds"))
+                    rows.append(
+                        (f"fig11_{arch}_{trace}_{label}_qps{qps}_itl_p95_ms",
+                         f"{s['itl_p95_s'] * 1e3:.1f}", "ms"))
+            for qps in QPS:
+                hy, ra = res[("hybrid512", qps)], res[("rapid", qps)]
+                if ra["ttft_p95_s"] > 0:
+                    ttft_ratios.append(hy["ttft_p95_s"] / ra["ttft_p95_s"])
+                if ra["itl_p95_s"] > 0:
+                    itl_ratios.append(hy["itl_p95_s"] / ra["itl_p95_s"])
+    rows.append(("fig11_ttft_p95_hybrid_over_rapid_max",
+                 f"{max(ttft_ratios):.1f}", "paper: up to 220x"))
+    rows.append(("fig11_ttft_p95_hybrid_over_rapid_avg",
+                 f"{sum(ttft_ratios) / len(ttft_ratios):.1f}",
+                 "paper: avg 53x"))
+    rows.append(("fig11_itl_p95_hybrid_over_rapid_max",
+                 f"{max(itl_ratios):.1f}", "paper: up to 6x"))
+    rows.append(("fig11_itl_p95_hybrid_over_rapid_avg",
+                 f"{sum(itl_ratios) / len(itl_ratios):.1f}",
+                 "paper: avg 1.9x"))
+    emit(rows)
+    return dict(ttft_max=max(ttft_ratios), itl_max=max(itl_ratios))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Fig 3: phase performance vs compute-resource fraction.
+
+Prefill (compute-bound) degrades ~proportionally as its share shrinks;
+decode (bandwidth-bound) holds performance down to ~40-50% compute.
+Values are normalized slowdown vs f=1.0 (lower is better, 1 = peak).
+"""
+from repro.config import get_config
+from repro.perfmodel import costs as C
+from repro.perfmodel import interference as I
+from repro.perfmodel.hw import TPU_V5E
+
+from benchmarks.common import CHIPS, emit
+
+FRACS = (1.0, 0.9, 0.75, 0.5, 0.4, 0.25)
+
+
+def main():
+    cfg = get_config("llama3-70b")
+    rows = []
+    p = C.prefill_cost(cfg, [4096], CHIPS)
+    base_p = I.phase_time(p, TPU_V5E, CHIPS, f=1.0)
+    for f in FRACS:
+        t = I.phase_time(p, TPU_V5E, CHIPS, f=f)
+        rows.append((f"fig3a_prefill_slowdown_f{f}", f"{t / base_p:.3f}",
+                     "norm_to_f1"))
+    for bs in (8, 64, 256):
+        d = C.decode_cost(cfg, bs, bs * 2048.0, CHIPS)
+        base_d = I.phase_time(d, TPU_V5E, CHIPS, f=1.0)
+        for f in FRACS:
+            t = I.phase_time(d, TPU_V5E, CHIPS, f=f)
+            rows.append((f"fig3b_decode_bs{bs}_slowdown_f{f}",
+                         f"{t / base_d:.3f}", "norm_to_f1"))
+    emit(rows)
+    return dict(rows=[r[:2] for r in rows])
+
+
+if __name__ == "__main__":
+    main()

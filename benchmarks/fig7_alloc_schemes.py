@@ -1,0 +1,50 @@
+"""Paper Fig 7: decode latency vs batch size under allocation schemes.
+
+P100-D100 (overallocation) vs distinct splits (D25/P75 ... D75/P25),
+with a co-resident saturating prefill.  Shows the overallocation curve
+crossing the ITL SLO as the decode batch grows — the trigger for the
+Adaptive Resource Manager's mode switch.
+"""
+from repro.config import get_config
+from repro.perfmodel import costs as C
+from repro.perfmodel import interference as I
+from repro.perfmodel.hw import TPU_V5E
+
+from benchmarks.common import CHIPS, emit
+
+BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+SCHEMES = {"P100-D100": None, "D25-P75": 0.25, "D50-P50": 0.5,
+           "D75-P25": 0.75}
+CTX = 8192
+# v5e-32 is bandwidth-rich relative to the paper's 8x MI300X node, so
+# the overallocation curve crosses tighter SLOs (25/50 ms) at practical
+# batch sizes while the 100 ms SLO holds almost everywhere — an
+# adaptation finding recorded in EXPERIMENTS.md.
+SLOS_S = (0.025, 0.050, 0.100)
+
+
+def main():
+    cfg = get_config("llama3-70b")
+    p = C.prefill_cost(cfg, [8192], CHIPS)
+    rows = []
+    crossover = {}
+    for bs in BATCHES:
+        d = C.decode_cost(cfg, bs, bs * float(CTX), CHIPS)
+        for name, f in SCHEMES.items():
+            r = I.overlapped_times(p, d, TPU_V5E, CHIPS, f_decode=f)
+            rows.append((f"fig7_decode_ms_bs{bs}_{name}",
+                         f"{r.t_decode * 1e3:.2f}", f"ctx={CTX}"))
+            if name == "P100-D100":
+                for slo in SLOS_S:
+                    if r.t_decode <= slo:
+                        crossover[slo] = bs
+    for slo in SLOS_S:
+        rows.append((f"fig7_overalloc_crossover_bs_slo{int(slo*1e3)}ms",
+                     str(crossover.get(slo)),
+                     "largest bs meeting SLO under overallocation"))
+    emit(rows)
+    return dict(crossover=crossover)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Paper §3.1 + §3.2 overhead quantification.
+
+  * chunked-prefill tradeoff: hybrid chunk 1024 vs 512 throughput/ITL
+    (paper: ~+20% thpt, ~+30% ITL on its hardware)
+  * disaggregation KV-transfer overhead: throughput and TTFT vs an
+    identical no-transfer configuration (paper: 1.4x thpt / 1.9x TTFT)
+  * async one-step-ahead scheduling benefit (Fig 6a vs 6b)
+"""
+from benchmarks.common import emit, run_point
+
+
+def main():
+    rows = []
+    # --- §3.1 chunk tradeoff (hybrid engine, saturating load) ----------
+    # evaluated with sync scheduling: the per-iteration host cost is the
+    # fixed overhead that larger chunks amortize; under fully-async
+    # scheduling on a bandwidth-rich v5e instance the effect shrinks to
+    # ~nothing (recorded as a hardware-adaptation finding)
+    import copy
+    import dataclasses
+    from repro.config import SLOConfig, get_config
+    from repro.core import DisaggEngine, HybridEngine
+    from repro.serving import TRACES, generate_trace, summarize
+    from benchmarks.common import serve_cfg
+    cfg = get_config("llama3-70b")
+    slo = SLOConfig(itl_ms=100.0)
+    reqs_ch = generate_trace(TRACES["arxiv"], qps=12.0, duration_s=45,
+                             seed=0)
+    chunk_res = {}
+    for chunk in (512, 1024):
+        eng = HybridEngine(cfg, serve_cfg("hybrid", 100.0, chunk=chunk,
+                                          async_sched=False))
+        recs, span = eng.run([copy.deepcopy(r) for r in reqs_ch])
+        chunk_res[chunk] = summarize(recs, slo, span)
+    s512, s1k = chunk_res[512], chunk_res[1024]
+    rows.append(("ovh_chunk1k_thpt_gain",
+                 f"{s1k['throughput_tok_s'] / s512['throughput_tok_s']:.3f}",
+                 "paper ~1.2x (sync sched)"))
+    rows.append(("ovh_chunk1k_itl_ratio",
+                 f"{s1k['itl_p95_s'] / s512['itl_p95_s']:.3f}",
+                 "paper ~1.3x"))
+    # --- §3.2.1 KV transfer overhead -----------------------------------
+    # two transports: in-pod ICI (50 GB/s — cheap, an adaptation finding)
+    # and NIC/DCN-class 2.5 GB/s (the paper's network regime).  Load is
+    # kept under the prefill instance's capacity so queueing delay does
+    # not mask the transfer term.
+    reqs = generate_trace(TRACES["arxiv"], qps=1.5, duration_s=45, seed=0)
+    res = {}
+    for label, gbps in (("ici50", 50.0), ("nic2.5", 2.5), ("free", 1e9)):
+        eng = DisaggEngine(cfg, serve_cfg("disagg", 100.0))
+        eng.serve = dataclasses.replace(eng.serve, kv_transfer_gbps=gbps)
+        recs, span = eng.run([copy.deepcopy(r) for r in reqs])
+        res[label] = summarize(recs, slo, span)
+    for label in ("ici50", "nic2.5"):
+        rows.append((f"ovh_kv_transfer_ttft_ratio_{label}",
+                     f"{res[label]['ttft_p95_s'] / max(res['free']['ttft_p95_s'], 1e-9):.2f}",
+                     "paper ~1.9x TTFT (network transport)"))
+        rows.append((f"ovh_kv_transfer_thpt_ratio_{label}",
+                     f"{res['free']['throughput_tok_s'] / max(res[label]['throughput_tok_s'], 1e-9):.2f}",
+                     "paper ~1.4x thpt"))
+    # --- Fig 6: async scheduling ----------------------------------------
+    from repro.core import RapidEngine
+    sync_cfg = serve_cfg("rapid", 100.0, async_sched=False)
+    async_cfg = serve_cfg("rapid", 100.0, async_sched=True)
+    e1 = RapidEngine(cfg, sync_cfg)
+    r1, sp1 = e1.run([copy.deepcopy(r) for r in reqs])
+    e2 = RapidEngine(cfg, async_cfg)
+    r2, sp2 = e2.run([copy.deepcopy(r) for r in reqs])
+    a = summarize(r1, slo, sp1)
+    b = summarize(r2, slo, sp2)
+    rows.append(("ovh_async_sched_itl_gain",
+                 f"{a['itl_p95_s'] / max(b['itl_p95_s'], 1e-9):.3f}",
+                 "sync p95 ITL / async p95 ITL (Fig 6a vs 6b)"))
+    emit(rows)
+    return dict(rows=[r[:2] for r in rows])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Render the §Dry-run/§Roofline tables of EXPERIMENTS.md from
+dryrun_results.json (so the tables are regenerable from artifacts)."""
+import json
+import sys
+
+from repro.launch.roofline import RooflineTerms
+
+
+def render(path="dryrun_results.json"):
+    rs = [RooflineTerms(**r) for r in json.load(open(path))]
+    out = []
+    out.append("| arch | shape | mesh | t_compute | t_memory | "
+               "t_collective | bottleneck | useful | MFU |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for t in sorted(rs, key=lambda t: (t.mesh, t.shape, t.arch)):
+        tc, tm, tl = t.terms()
+        out.append(
+            f"| {t.arch} | {t.shape} | {t.mesh} | {tc:.3e} | {tm:.3e} | "
+            f"{tl:.3e} | {t.bottleneck} | {t.useful_flops_ratio:.2f} | "
+            f"{t.roofline_fraction():.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1] if len(sys.argv) > 1 else
+                 "dryrun_results.json"))

@@ -1,0 +1,51 @@
+"""§Roofline table from the dry-run JSON (launch/dryrun.py --json).
+
+Reads dryrun_results.json if present and prints the per-(arch x shape x
+mesh) three-term roofline + bottleneck + useful-FLOPs ratio rows that
+EXPERIMENTS.md §Roofline embeds.  (The dry-run itself needs 512 fake
+devices, so it cannot run inside this process — see launch/dryrun.py.)
+"""
+import json
+import os
+
+from repro.config import SHAPES, get_config
+from repro.launch.roofline import RooflineTerms, model_flops_for
+from repro.perfmodel.hw import TPU_V5E
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..",
+                       "dryrun_results.json")
+
+
+def load_terms():
+    if not os.path.exists(RESULTS):
+        return []
+    with open(RESULTS) as f:
+        raw = json.load(f)
+    return [RooflineTerms(**r) for r in raw]
+
+
+def main():
+    terms = load_terms()
+    rows = []
+    if not terms:
+        rows.append(("roofline_table", "SKIPPED",
+                     "run: python -m repro.launch.dryrun --all "
+                     "--both-meshes --json dryrun_results.json"))
+        emit(rows)
+        return dict(cells=0)
+    for t in terms:
+        tc, tm, tl = t.terms()
+        rows.append((
+            f"roofline_{t.arch}_{t.shape}_{t.mesh}",
+            f"{max(tc, tm) + tl:.4e}",
+            f"compute={tc:.3e}s memory={tm:.3e}s collective={tl:.3e}s "
+            f"bottleneck={t.bottleneck} useful={t.useful_flops_ratio:.2f} "
+            f"mfu={t.roofline_fraction():.3f}"))
+    emit(rows)
+    return dict(cells=len(terms))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig8,fig9]
+
+Prints ``name,value,derived`` CSV rows per datapoint.
+"""
+import argparse
+import sys
+import time
+
+MODULES = [
+    ("fig3", "benchmarks.fig3_phase_sensitivity"),
+    ("fig7", "benchmarks.fig7_alloc_schemes"),
+    ("fig8", "benchmarks.fig8_throughput"),
+    ("fig9", "benchmarks.fig9_goodput"),
+    ("fig10", "benchmarks.fig10_itl_goodput"),
+    ("fig11", "benchmarks.fig11_tail_latency"),
+    ("util", "benchmarks.util_table"),
+    ("overheads", "benchmarks.overheads"),
+    ("kernels", "benchmarks.kernel_costs"),
+    ("roofline", "benchmarks.roofline_table"),
+]
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   help="comma-separated subset of: " +
+                        ",".join(k for k, _ in MODULES))
+    args = p.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        print(f"# === {key} ({modname}) ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main()
+            print(f"# {key} done in {time.time() - t0:.0f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((key, repr(e)))
+            print(f"# {key} FAILED: {e!r}", file=sys.stderr, flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark(s) failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: build a model, generate tokens, run one RAPID serving
+simulation — the 60-second tour of the public API.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (SLOConfig, ServeConfig, get_config,
+                          get_reduced_config, list_archs)
+from repro.core import RapidEngine
+from repro.models.transformer import (decode_forward, forward,
+                                      greedy_sample, init_cache,
+                                      init_model, write_prefill_to_cache)
+from repro.serving import TRACES, generate_trace, summarize
+
+print("architectures:", ", ".join(list_archs()))
+
+# ---- 1. build a (reduced) model and generate 8 tokens ------------------
+cfg = get_reduced_config("granite-8b")
+params, specs = init_model(jax.random.PRNGKey(0), cfg)
+prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0,
+                            cfg.vocab_size)
+pos = jnp.arange(12)[None]
+logits, kv = forward(params, cfg, prompt, pos, 1, return_aux=True)
+cache = init_cache(cfg, batch=1, max_seq=32, tp=1)
+cache = write_prefill_to_cache(cfg, cache, kv, 12)
+tok = greedy_sample(logits[:, -1:], cfg.vocab_size)
+out = [int(tok[0, 0])]
+seq_lens = jnp.array([12], jnp.int32)
+for _ in range(7):
+    lg, cache = decode_forward(params, cfg, tok, seq_lens[:, None],
+                               cache, seq_lens, 1)
+    seq_lens = seq_lens + 1
+    tok = greedy_sample(lg, cfg.vocab_size)
+    out.append(int(tok[0, 0]))
+print("generated token ids:", out)
+
+# ---- 2. serve a trace with the RAPID engine (virtual clock) -------------
+big = get_config("llama3-70b")
+serve = ServeConfig(mode="rapid", chips=32, slo=SLOConfig(itl_ms=100.0))
+reqs = generate_trace(TRACES["lmsys"], qps=4.0, duration_s=30, seed=0)
+eng = RapidEngine(big, serve)
+recs, span = eng.run([copy.deepcopy(r) for r in reqs])
+s = summarize(recs, serve.slo, span)
+print(f"RAPID on lmsys@4qps: {s['throughput_tok_s']:.0f} tok/s, "
+      f"goodput {s['goodput_req_s']:.2f} req/s, "
+      f"p95 ITL {s['itl_p95_s'] * 1e3:.0f} ms, "
+      f"p95 TTFT {s['ttft_p95_s']:.2f} s")

@@ -1,0 +1,50 @@
+"""Scheduler comparison: RAPID vs hybrid batching vs disaggregated on
+the same trace, reproducing the shape of the paper's Figs 8-11 in one
+table.
+
+    PYTHONPATH=src python examples/scheduler_comparison.py --qps 16
+"""
+import argparse
+import copy
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core import make_engine
+from repro.serving import TRACES, generate_trace, summarize
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-70b")
+    ap.add_argument("--trace", default="lmsys", choices=list(TRACES))
+    ap.add_argument("--qps", type=float, default=16.0)
+    ap.add_argument("--duration", type=float, default=45.0)
+    ap.add_argument("--chips", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    slo = SLOConfig(itl_ms=100.0)
+    reqs = generate_trace(TRACES[args.trace], qps=args.qps,
+                          duration_s=args.duration, seed=0)
+    print(f"{args.arch} / {args.trace} @ {args.qps} qps "
+          f"({len(reqs)} requests, {args.chips} chips)\n")
+    print(f"{'engine':10s} {'thpt tok/s':>11s} {'goodput/s':>10s} "
+          f"{'ITL-gp/s':>9s} {'p95 TTFT':>9s} {'p95 ITL':>8s} "
+          f"{'SLO ok':>7s}")
+    for mode in ("rapid", "hybrid", "disagg"):
+        serve = ServeConfig(mode=mode, chips=args.chips, slo=slo,
+                            disagg_split=(args.chips // 2,
+                                          args.chips // 2),
+                            max_batch_slots=128)
+        eng = make_engine(mode, cfg, serve)
+        recs, span = eng.run([copy.deepcopy(r) for r in reqs])
+        s = summarize(recs, slo, span)
+        print(f"{mode:10s} {s['throughput_tok_s']:11.0f} "
+              f"{s['goodput_req_s']:10.2f} "
+              f"{s['itl_goodput_req_s']:9.2f} "
+              f"{s['ttft_p95_s']:8.2f}s {s['itl_p95_s'] * 1e3:6.0f}ms "
+              f"{s['slo_attainment'] * 100:6.1f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,121 @@
+"""End-to-end REAL serving driver: batched requests against a reduced
+model on CPU, run through the actual RAPID concurrent-P/D control flow —
+decode-owned block allocation, whole-prompt prefill, batched decode with
+the paged-attention kernel path, continuous batching, per-request
+TTFT/ITL measured in wall-clock.
+
+    PYTHONPATH=src python examples/serve_real.py --requests 12
+"""
+import argparse
+import collections
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_reduced_config
+from repro.kvcache import KVCacheManager
+from repro.models.transformer import (decode_forward, forward,
+                                      greedy_sample, init_cache,
+                                      init_model, write_prefill_to_cache)
+
+MAX_SEQ = 96
+SLOTS = 4      # decode batch slots
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced_config(args.arch)
+    params, _ = init_model(jax.random.PRNGKey(args.seed), cfg)
+    rng = np.random.default_rng(args.seed)
+
+    # request stream: (prompt tokens, max_new)
+    waiting = collections.deque()
+    for rid in range(args.requests):
+        plen = int(rng.integers(6, 24))
+        toks = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        waiting.append(dict(rid=rid, prompt=toks,
+                            max_new=int(rng.integers(4, 12)),
+                            t_arrive=time.perf_counter()))
+
+    # decode-owned KV bookkeeping (Fig 4): blocks allocated at admission
+    kv_mgr = KVCacheManager(num_blocks=SLOTS * MAX_SEQ // 16 + 8,
+                            page_size=16)
+    cache = init_cache(cfg, SLOTS, MAX_SEQ, 1)
+    seq_lens = jnp.zeros((SLOTS,), jnp.int32)
+    cur_tok = jnp.zeros((SLOTS, 1), jnp.int32)
+    slot_req = [None] * SLOTS
+
+    decode_fn = jax.jit(lambda p, t, ps, c, sl: decode_forward(
+        p, cfg, t, ps, c, sl, 1))
+    done = []
+
+    def admit(slot):
+        """Prefill one waiting request into `slot` (whole prompt)."""
+        nonlocal cache, seq_lens, cur_tok
+        r = waiting.popleft()
+        kv_mgr.allocate_prompt(r["rid"], len(r["prompt"]))   # decode-owned
+        prompt = jnp.asarray(r["prompt"])[None]
+        pos = jnp.arange(prompt.shape[1])[None]
+        logits, aux = forward(params, cfg, prompt, pos, 1, return_aux=True)
+        one = init_cache(cfg, 1, MAX_SEQ, 1)
+        one = write_prefill_to_cache(cfg, one, aux, prompt.shape[1])
+        cache = jax.tree.map(
+            lambda c, o: c.at[:, slot:slot + 1].set(o), cache, one)
+        tok = greedy_sample(logits[:, -1:], cfg.vocab_size)
+        r["t_first"] = time.perf_counter()
+        r["tokens"] = [int(tok[0, 0])]
+        r["itl"] = []
+        seq_lens = seq_lens.at[slot].set(prompt.shape[1])
+        cur_tok = cur_tok.at[slot].set(tok[0])
+        slot_req[slot] = r
+
+    t0 = time.perf_counter()
+    steps = 0
+    while waiting or any(slot_req):
+        for s in range(SLOTS):
+            if slot_req[s] is None and waiting:
+                admit(s)
+        # one concurrent decode step over all active slots
+        lg, cache = decode_fn(params, cur_tok, seq_lens[:, None], cache,
+                              seq_lens)
+        nxt = greedy_sample(lg, cfg.vocab_size)
+        now = time.perf_counter()
+        steps += 1
+        for s in range(SLOTS):
+            r = slot_req[s]
+            if r is None:
+                continue
+            kv_mgr.append_token(r["rid"])
+            r["itl"].append(now - (r.get("t_last") or r["t_first"]))
+            r["t_last"] = now
+            r["tokens"].append(int(nxt[s, 0]))
+            seq_lens = seq_lens.at[s].add(1)
+            cur_tok = cur_tok.at[s].set(nxt[s])
+            if len(r["tokens"]) >= r["max_new"]:
+                kv_mgr.free(r["rid"])
+                r["t_done"] = now
+                done.append(r)
+                slot_req[s] = None
+
+    wall = time.perf_counter() - t0
+    total_tokens = sum(len(r["tokens"]) for r in done)
+    itls = [i for r in done for i in r["itl"]]
+    print(f"served {len(done)} requests, {total_tokens} tokens in "
+          f"{wall:.1f}s ({steps} decode steps)")
+    print(f"  mean ITL {1e3 * np.mean(itls):.1f} ms   "
+          f"p95 ITL {1e3 * np.percentile(itls, 95):.1f} ms")
+    print(f"  KV pool fully reclaimed: "
+          f"{kv_mgr.allocator.free_count == kv_mgr.allocator.num_blocks}")
+    assert kv_mgr.allocator.free_count == kv_mgr.allocator.num_blocks
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

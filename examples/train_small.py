@@ -1,0 +1,72 @@
+"""Train a ~100M-class reduced model for a few hundred steps on CPU with
+the full production substrate: microbatched grad accumulation, WSD
+schedule, async checkpointing, an injected failure + restart, and
+gradient compression — loss must descend through all of it.
+
+    PYTHONPATH=src python examples/train_small.py --steps 300
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_reduced_config, replace
+from repro.data import TokenPipeline
+from repro.training.checkpoint import CheckpointManager
+from repro.training.optimizer import OptConfig
+from repro.training.resilience import FailureEvent, TrainingSupervisor
+from repro.training.train_lib import init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_small")
+    ap.add_argument("--fail-at", type=int, default=150)
+    args = ap.parse_args(argv)
+
+    # xlstm-125m-family reduced, scaled up a bit (~15M params — enough
+    # to show real learning on CPU in minutes)
+    cfg = replace(get_reduced_config("xlstm-125m"),
+                  num_layers=6, d_model=128, vocab_size=2048)
+    opt = OptConfig(lr=3e-3, warmup_steps=20,
+                    stable_steps=args.steps, decay_steps=50,
+                    grad_accum_dtype="float32")
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"model: {cfg.num_layers}L d={cfg.d_model} "
+          f"({n_params / 1e6:.1f}M params)")
+
+    step_fn = jax.jit(make_train_step(cfg, opt, microbatches=2,
+                                      compress_grads=True))
+    pipe = TokenPipeline(cfg.vocab_size, args.batch, args.seq_len, seed=0)
+    pos = jnp.broadcast_to(jnp.arange(args.seq_len)[None],
+                           (args.batch, args.seq_len))
+
+    def batches():
+        for _ in range(args.steps):
+            x, y = pipe.next_batch()
+            yield {"inputs": jnp.asarray(x), "labels": jnp.asarray(y),
+                   "positions": pos}
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2, async_save=True)
+    sup = TrainingSupervisor(step_fn, ckpt, ckpt_every=50)
+    t0 = time.time()
+    state = sup.run(state, batches(),
+                    failures=[FailureEvent(step=args.fail_at)])
+    losses = [e["loss"] for e in sup.log if e["event"] == "step"]
+    dt = time.time() - t0
+    print(f"steps: {len(losses)}  restarts: {sup.restarts}  "
+          f"wall: {dt:.0f}s ({dt / max(len(losses), 1) * 1e3:.0f} ms/step)")
+    print(f"loss: {losses[0]:.3f} -> min {min(losses):.3f} "
+          f"-> final {losses[-1]:.3f}")
+    assert losses[-1] < losses[0] - 1.0, "training failed to learn"
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

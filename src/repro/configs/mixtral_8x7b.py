@@ -1,0 +1,43 @@
+"""Mixtral-8x7B — the paper's MoE evaluation model.  [arXiv:2401.04088]
+
+32L, d_model=4096, 32H (GQA kv=8), expert d_ff=14336, vocab=32000,
+8 experts top-2, sliding window 4096.
+"""
+from repro.config import ModelConfig, MoEConfig, register
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    head_dim=128,
+    ffn_pattern=("moe",),
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=14336),
+    sliding_window=4096,
+    train_microbatches=16,
+    source="[arXiv:2401.04088; hf]",
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b",
+        family="moe",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=128,
+        vocab_size=500,
+        head_dim=32,
+        ffn_pattern=("moe",),
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=128),
+        sliding_window=16,
+    )
+
+
+register(CONFIG, reduced)

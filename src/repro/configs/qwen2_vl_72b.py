@@ -1,0 +1,46 @@
+"""Qwen2-VL-72B backbone: M-RoPE, dynamic resolution.  [arXiv:2409.12191; hf]
+
+80L, d_model=8192, 64H (GQA kv=8), d_ff=29568, vocab=152064.  The vision
+tower is a STUB: ``input_specs()`` provides precomputed patch embeddings
+(frontend='embed_stub') plus 3-D (t,h,w) position ids consumed by M-RoPE.
+"""
+from repro.config import ModelConfig, register
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152_064,
+    head_dim=128,
+    qkv_bias=True,
+    rope_type="mrope",
+    rope_theta=1_000_000.0,
+    frontend="embed_stub",
+    opt_dtype="bfloat16",
+    train_microbatches=16,
+    source="[arXiv:2409.12191; hf]",
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=256,
+        vocab_size=512,
+        head_dim=32,
+        qkv_bias=True,
+        rope_type="mrope",
+        frontend="embed_stub",
+    )
+
+
+register(CONFIG, reduced)

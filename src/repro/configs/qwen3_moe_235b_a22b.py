@@ -1,0 +1,43 @@
+"""Qwen3-MoE-235B-A22B: 128 experts top-8.  [hf:Qwen/Qwen3-30B-A3B; hf]
+
+94L, d_model=4096, 64H (GQA kv=4), expert d_ff=1536, vocab=151936.
+Every layer is MoE (no dense FFN layers).
+"""
+from repro.config import ModelConfig, MoEConfig, register
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    d_ff=1536,
+    vocab_size=151_936,
+    head_dim=128,
+    ffn_pattern=("moe",),
+    moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=1536),
+    rope_theta=1_000_000.0,
+    opt_dtype="bfloat16",
+    train_microbatches=16,
+    source="[hf:Qwen/Qwen3-30B-A3B; hf]",
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-235b-a22b",
+        family="moe",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=64,
+        vocab_size=512,
+        head_dim=32,
+        ffn_pattern=("moe",),
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=64),
+    )
+
+
+register(CONFIG, reduced)

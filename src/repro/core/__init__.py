@@ -1,0 +1,10 @@
+"""RAPID-Serve core: the paper's serving engine + baselines."""
+from repro.core.request import Request, State  # noqa: F401
+from repro.core.resource_manager import (  # noqa: F401
+    AdaptiveResourceManager, Allocation, DecodeProfile,
+    build_decode_profile,
+)
+from repro.core.engines import (  # noqa: F401
+    BaseEngine, DisaggEngine, HybridEngine, RapidEngine, make_engine,
+    kv_pool_blocks,
+)

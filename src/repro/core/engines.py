@@ -1,0 +1,531 @@
+"""Serving engines: RAPID (the paper), hybrid batching, disaggregated.
+
+All three are *real* control code — FCFS queues, decode-owned paged-KV
+allocation, notifications, preemption, admission — driven by the
+discrete-event loop; only step durations come from the perfmodel
+(DESIGN.md §6).  The same engine classes also drive the real CPU serving
+example (examples/serve_trace.py) where durations are wall-clock.
+
+RapidEngine (paper §4):
+  * prefill and decode are two concurrent actors on the SAME chips;
+    whole-prompt prefill (no chunking), separate batches, overlapping
+    steps.
+  * decode owns the KV manager; arrival -> decode allocates prompt blocks
+    -> notify prefill -> prefill runs -> notify decode -> join batch
+    (Fig 4), all lock-free message passing.
+  * Adaptive Resource Manager picks overallocation vs distinct f_d per
+    step from the offline profile (§4.5.3).
+  * async one-step-ahead scheduling (NanoFlow-style): host work is hidden
+    under device execution (Fig 6b) => step time = max(device, host).
+
+HybridEngine (Sarathi/vLLM-v1 chunked prefill):
+  * one lockstep batch per iteration: all running decodes + prefill
+    chunks up to the token budget.  Decode ITL is coupled to the full
+    hybrid step duration — the §3.1 overhead RAPID removes.
+
+DisaggEngine (DistServe/Splitwise-style, vLLM v1 semantics):
+  * separate prefill/decode chip pools, KV transferred over ICI on the
+    critical path; the first token is *recomputed* on the decode instance
+    after transfer (vLLM v1 behaviour, paper §3.2.1).
+  * memory imbalance: only the decode pool holds long-lived KV (§3.2.2).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional
+
+from repro.config import ServeConfig
+from repro.core.request import Request, State
+from repro.core.resource_manager import (AdaptiveResourceManager,
+                                         build_decode_profile)
+from repro.kvcache import KVCacheManager, OutOfBlocks, kv_pages_for
+from repro.perfmodel import costs as C
+from repro.perfmodel import interference as I
+from repro.perfmodel.hw import TPU_V5E, HardwareSpec
+from repro.serving.metrics import RequestRecord
+from repro.serving.sim import EventLoop
+
+
+def kv_pool_blocks(cfg, hw: HardwareSpec, chips: int, page_size: int,
+                   reserve_frac: float = 0.05) -> int:
+    """Pool size: chip-group HBM minus weights, minus activation reserve."""
+    total = chips * hw.hbm_bytes * (1.0 - reserve_frac)
+    weights = C.weight_bytes(cfg)
+    free = total - weights
+    if free <= 0:
+        raise ValueError(
+            f"{cfg.name}: weights ({weights/2**30:.0f} GiB) exceed "
+            f"{chips}x{hw.hbm_bytes/2**30:.0f} GiB; increase chips")
+    per_block = page_size * cfg.kv_bytes_per_token()
+    return max(64, int(free // per_block))
+
+
+@dataclasses.dataclass
+class UtilSample:
+    t: float
+    kv_util: float
+    busy: bool
+
+
+class BaseEngine:
+    def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E):
+        self.cfg = cfg
+        self.serve = serve
+        self.hw = hw
+        self.loop = EventLoop()
+        self.finished: List[Request] = []
+        self.util_samples: List[UtilSample] = []
+        self._all: List[Request] = []
+
+    # -- host-side scheduling overhead (Fig 6a vs 6b) -----------------------
+    def _step_time(self, device_s: float) -> float:
+        cpu = self.serve.scheduler_overhead_ms / 1e3
+        if self.serve.async_scheduling:
+            return max(device_s, cpu)
+        return device_s + cpu
+
+    def _finish(self, r: Request) -> None:
+        r.state = State.FINISHED
+        r.t_finish = self.loop.now
+        self.finished.append(r)
+
+    def run(self, requests: List[Request], drain: bool = True):
+        self._all = list(requests)
+        for r in requests:
+            self.loop.at(r.arrival, lambda r=r: self.submit(r))
+        self.loop.run()
+        span = self.loop.now if self.loop.now > 0 else 1.0
+        return [RequestRecord.from_request(r) for r in self._all], span
+
+    def submit(self, r: Request) -> None:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# RAPID-Serve
+# ---------------------------------------------------------------------------
+
+
+class RapidEngine(BaseEngine):
+    def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E,
+                 avg_ctx_hint: int = 4096):
+        super().__init__(cfg, serve, hw)
+        tp = serve.chips
+        blocks = kv_pool_blocks(cfg, hw, serve.chips, serve.page_size)
+        self.kv = KVCacheManager(blocks, serve.page_size)
+        profile = build_decode_profile(
+            cfg, hw, serve.chips, serve.slo.itl_ms / 1e3, avg_ctx_hint,
+            tp=tp)
+        self.arm = AdaptiveResourceManager(profile)
+        self.tp = tp
+        # queues (Fig 4)
+        self.waiting_kv: Deque[Request] = collections.deque()
+        self.waiting_prefill: Deque[Request] = collections.deque()
+        self.pending_join: Deque[Request] = collections.deque()
+        self.running: List[Request] = []
+        # actor state
+        self.prefill_busy = False
+        self.decode_busy = False
+        self.cur_prefill_cost: Optional[C.StepCost] = None
+        self.cur_decode_cost: Optional[C.StepCost] = None
+        self.cur_f_decode: Optional[float] = None
+
+    # -- Fig 4: arrival -> decode-side block allocation ---------------------
+    def submit(self, r: Request) -> None:
+        r.state = State.WAITING_KV
+        self.waiting_kv.append(r)
+        self._drain_waiting_kv()
+
+    def _drain_waiting_kv(self) -> None:
+        progressed = False
+        while self.waiting_kv and \
+                self.kv.can_allocate(self.waiting_kv[0].prompt_len):
+            r = self.waiting_kv.popleft()
+            r.blocks = self.kv.allocate_prompt(r.rid, r.prompt_len)
+            r.t_blocks = self.loop.now
+            r.state = State.WAITING_PREFILL
+            self.waiting_prefill.append(r)   # notification to prefill
+            progressed = True
+        if progressed:
+            self._kick_prefill()
+
+    # -- prefill actor -------------------------------------------------------
+    def _kick_prefill(self) -> None:
+        if self.prefill_busy or not self.waiting_prefill:
+            return
+        batch: List[Request] = []
+        tokens = 0
+        while self.waiting_prefill:
+            nxt = self.waiting_prefill[0]
+            if batch and tokens + nxt.prompt_len > self.serve.prefill_max_tokens:
+                break
+            batch.append(self.waiting_prefill.popleft())
+            tokens += nxt.prompt_len
+        for r in batch:
+            r.state = State.PREFILLING
+            r.t_prefill_start = self.loop.now
+        self.prefill_busy = True
+        p_cost = C.prefill_cost(self.cfg, [r.prompt_len for r in batch],
+                                self.tp)
+        self.cur_prefill_cost = p_cost
+        dur = self._prefill_duration(p_cost)
+        self.loop.after(self._step_time(dur),
+                        lambda: self._prefill_done(batch))
+
+    def _prefill_duration(self, p_cost: C.StepCost) -> float:
+        if not self.decode_busy or self.cur_decode_cost is None:
+            return I.phase_time(p_cost, self.hw, self.serve.chips)
+        r = I.overlapped_times(p_cost, self.cur_decode_cost, self.hw,
+                               self.serve.chips, f_decode=self.cur_f_decode)
+        return r.t_prefill
+
+    def _prefill_done(self, batch: List[Request]) -> None:
+        now = self.loop.now
+        for r in batch:
+            r.t_prefill_end = now
+            r.emit_token(now)             # first token from prefill
+            r.state = State.PREFILL_FINISHED
+            if r.done:                    # single-token request
+                self.kv.free(r.rid)
+                self._finish(r)
+                self._drain_waiting_kv()
+            else:
+                self.pending_join.append(r)   # notification to decode
+        self.prefill_busy = False
+        self.cur_prefill_cost = None
+        self._kick_prefill()
+        self._kick_decode()
+
+    # -- decode actor ---------------------------------------------------------
+    def _kick_decode(self) -> None:
+        if self.decode_busy:
+            return
+        while self.pending_join and \
+                len(self.running) < self.serve.max_batch_slots:
+            r = self.pending_join.popleft()
+            r.state = State.DECODING
+            self.running.append(r)
+        if not self.running:
+            return
+        bs = len(self.running)
+        alloc = self.arm.allocate(bs, self.prefill_busy)
+        ctx_total = float(sum(r.context_len for r in self.running))
+        d_cost = C.decode_cost(self.cfg, bs, ctx_total, self.tp)
+        self.cur_decode_cost = d_cost
+        self.cur_f_decode = alloc.f_decode
+        if self.prefill_busy and self.cur_prefill_cost is not None:
+            res = I.overlapped_times(self.cur_prefill_cost, d_cost, self.hw,
+                                     self.serve.chips,
+                                     f_decode=alloc.f_decode)
+            dur = res.t_decode
+        else:
+            dur = I.phase_time(d_cost, self.hw, self.serve.chips)
+        self.decode_busy = True
+        batch = list(self.running)
+        self.loop.after(self._step_time(dur),
+                        lambda: self._decode_done(batch))
+
+    def _decode_done(self, batch: List[Request]) -> None:
+        now = self.loop.now
+        freed = False
+        for r in batch:
+            if r not in self.running:     # preempted mid-loop
+                continue
+            try:
+                self.kv.append_token(r.rid)
+            except OutOfBlocks:
+                victim = self._preempt_victim()
+                if victim is None or victim is r:
+                    continue
+                self.kv.append_token(r.rid)
+            r.emit_token(now)
+            if r.done:
+                self.kv.free(r.rid)
+                self.running.remove(r)
+                self._finish(r)
+                freed = True
+        self.decode_busy = False
+        self.cur_decode_cost = None
+        self.util_samples.append(
+            UtilSample(now, self.kv.utilization, True))
+        if freed:
+            self._drain_waiting_kv()
+        self._kick_decode()
+
+    def _preempt_victim(self) -> Optional[Request]:
+        """Preempt the newest running request (recompute on resume)."""
+        if not self.running:
+            return None
+        victim = max(self.running, key=lambda r: r.arrival)
+        self.running.remove(victim)
+        self.kv.preempt(victim.rid)
+        victim.preemptions += 1
+        victim.state = State.WAITING_KV
+        victim.blocks = None
+        self.waiting_kv.appendleft(victim)
+        return victim
+
+
+# ---------------------------------------------------------------------------
+# Hybrid batching with chunked prefill (Sarathi / vLLM-v1)
+# ---------------------------------------------------------------------------
+
+
+class HybridEngine(BaseEngine):
+    def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E):
+        super().__init__(cfg, serve, hw)
+        self.tp = serve.chips
+        blocks = kv_pool_blocks(cfg, hw, serve.chips, serve.page_size)
+        self.kv = KVCacheManager(blocks, serve.page_size)
+        self.waiting: Deque[Request] = collections.deque()
+        self.chunking: List[Request] = []   # admitted, prompt in progress
+        self.running: List[Request] = []
+        self.busy = False
+
+    def submit(self, r: Request) -> None:
+        r.state = State.WAITING_KV
+        self.waiting.append(r)
+        self._kick()
+
+    def _admit(self) -> None:
+        while self.waiting and \
+                self.kv.can_allocate(self.waiting[0].prompt_len) and \
+                len(self.chunking) + len(self.running) < \
+                self.serve.max_batch_slots:
+            r = self.waiting.popleft()
+            r.blocks = self.kv.allocate_prompt(r.rid, r.prompt_len)
+            r.t_blocks = self.loop.now
+            r.state = State.PREFILLING
+            r.t_prefill_start = self.loop.now
+            self.chunking.append(r)
+
+    def _kick(self) -> None:
+        if self.busy:
+            return
+        self._admit()
+        bs = len(self.running)
+        if bs == 0 and not self.chunking:
+            return
+        # Sarathi: budget filled with decodes first, then prefill chunks
+        budget = max(0, self.serve.token_budget - bs)
+        cost = C.ZERO_COST
+        chunks: List[tuple] = []
+        for r in self.chunking:
+            if budget <= 0:
+                break
+            take = min(self.serve.chunk_size, budget,
+                       r.prompt_len - r.prefill_tokens_done)
+            if take <= 0:
+                continue
+            cost = cost + C.chunk_prefill_cost(
+                self.cfg, take, r.prefill_tokens_done, self.tp)
+            chunks.append((r, take))
+            budget -= take
+        if bs:
+            ctx_total = float(sum(r.context_len for r in self.running))
+            cost = cost + C.decode_cost(self.cfg, bs, ctx_total, self.tp)
+        if not chunks and bs == 0:
+            return
+        self.busy = True
+        dur = I.phase_time(cost, self.hw, self.serve.chips)
+        batch = list(self.running)
+        self.loop.after(self._step_time(dur),
+                        lambda: self._step_done(batch, chunks))
+
+    def _step_done(self, decode_batch: List[Request],
+                   chunks: List[tuple]) -> None:
+        now = self.loop.now
+        freed = False
+        for r, take in chunks:
+            r.prefill_tokens_done += take
+            if r.prefill_tokens_done >= r.prompt_len:
+                r.t_prefill_end = now
+                r.emit_token(now)     # last chunk produces first token
+                self.chunking.remove(r)
+                if r.done:
+                    self.kv.free(r.rid)
+                    self._finish(r)
+                    freed = True
+                else:
+                    r.state = State.DECODING
+                    self.running.append(r)
+        for r in decode_batch:
+            if r not in self.running:     # preempted mid-loop
+                continue
+            try:
+                self.kv.append_token(r.rid)
+            except OutOfBlocks:
+                victim = self._preempt_victim()
+                if victim is None or victim is r:
+                    continue
+                self.kv.append_token(r.rid)
+            r.emit_token(now)
+            if r.done:
+                self.kv.free(r.rid)
+                self.running.remove(r)
+                self._finish(r)
+                freed = True
+        self.busy = False
+        self.util_samples.append(UtilSample(now, self.kv.utilization, True))
+        del freed
+        self._kick()
+
+    def _preempt_victim(self) -> Optional[Request]:
+        if not self.running:
+            return None
+        victim = max(self.running, key=lambda r: r.arrival)
+        self.running.remove(victim)
+        self.kv.preempt(victim.rid)
+        victim.preemptions += 1
+        # recompute-on-resume: the whole context becomes the new "prompt"
+        victim.prefill_tokens_done = 0
+        victim.state = State.WAITING_KV
+        self.waiting.appendleft(victim)
+        return victim
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated serving (DistServe-style, vLLM v1 transfer semantics)
+# ---------------------------------------------------------------------------
+
+
+class DisaggEngine(BaseEngine):
+    def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E):
+        super().__init__(cfg, serve, hw)
+        self.chips_p, self.chips_d = serve.disagg_split
+        # each pool holds a full weight replica; KV capacity only matters
+        # on the decode side (the §3.2.2 imbalance)
+        blocks_d = kv_pool_blocks(cfg, hw, self.chips_d, serve.page_size)
+        blocks_p = kv_pool_blocks(cfg, hw, self.chips_p, serve.page_size)
+        self.kv = KVCacheManager(blocks_d, serve.page_size)       # decode
+        self.kv_p = KVCacheManager(blocks_p, serve.page_size)     # transient
+        self.waiting_prefill: Deque[Request] = collections.deque()
+        self.pending_join: Deque[Request] = collections.deque()
+        self.running: List[Request] = []
+        self.prefill_busy = False
+        self.decode_busy = False
+
+    def submit(self, r: Request) -> None:
+        r.state = State.WAITING_PREFILL
+        self.waiting_prefill.append(r)
+        self._kick_prefill()
+
+    def _kick_prefill(self) -> None:
+        if self.prefill_busy or not self.waiting_prefill:
+            return
+        batch: List[Request] = []
+        tokens = 0
+        while self.waiting_prefill:
+            nxt = self.waiting_prefill[0]
+            if not self.kv_p.can_allocate(nxt.prompt_len):
+                break
+            if batch and tokens + nxt.prompt_len > self.serve.prefill_max_tokens:
+                break
+            r = self.waiting_prefill.popleft()
+            self.kv_p.allocate_prompt(r.rid, r.prompt_len)
+            batch.append(r)
+            tokens += nxt.prompt_len
+        if not batch:
+            return
+        for r in batch:
+            r.state = State.PREFILLING
+            r.t_prefill_start = self.loop.now
+        self.prefill_busy = True
+        p_cost = C.prefill_cost(self.cfg, [r.prompt_len for r in batch],
+                                self.chips_p)
+        dur = I.phase_time(p_cost, self.hw, self.chips_p)
+        self.loop.after(self._step_time(dur),
+                        lambda: self._prefill_done(batch))
+
+    def _prefill_done(self, batch: List[Request]) -> None:
+        now = self.loop.now
+        for r in batch:
+            r.t_prefill_end = now
+            # KV transfer on the critical path (ICI), then decode-side
+            # admission + first-token recompute (vLLM v1, §3.2.1)
+            xfer = C.kv_transfer_bytes(self.cfg, r.prompt_len) / \
+                (self.serve.kv_transfer_gbps * 1e9)
+            self.loop.after(xfer, lambda r=r: self._kv_arrived(r))
+        self.prefill_busy = False
+        self._kick_prefill()
+
+    def _kv_arrived(self, r: Request) -> None:
+        self.kv_p.free(r.rid)           # prefill-side memory released
+        self._kick_prefill()
+        if not self.kv.can_allocate(r.prompt_len):
+            # decode pool full: back-pressure; retry on next decode step
+            self.loop.after(self.serve.slo.itl_ms / 1e3,
+                            lambda: self._kv_arrived(r))
+            return
+        r.blocks = self.kv.allocate_prompt(r.rid, r.prompt_len)
+        r.state = State.PREFILL_FINISHED
+        self.pending_join.append(r)
+        self._kick_decode()
+
+    def _kick_decode(self) -> None:
+        if self.decode_busy:
+            return
+        while self.pending_join and \
+                len(self.running) < self.serve.max_batch_slots:
+            r = self.pending_join.popleft()
+            r.state = State.DECODING
+            self.running.append(r)
+        if not self.running:
+            return
+        bs = len(self.running)
+        ctx_total = float(sum(r.context_len for r in self.running))
+        d_cost = C.decode_cost(self.cfg, bs, ctx_total, self.chips_d)
+        dur = I.phase_time(d_cost, self.hw, self.chips_d)
+        self.decode_busy = True
+        batch = list(self.running)
+        self.loop.after(self._step_time(dur),
+                        lambda: self._decode_done(batch))
+
+    def _decode_done(self, batch: List[Request]) -> None:
+        now = self.loop.now
+        for r in batch:
+            if r not in self.running:     # preempted mid-loop
+                continue
+            try:
+                self.kv.append_token(r.rid)
+            except OutOfBlocks:
+                victim = self._preempt_victim()
+                if victim is None or victim is r:
+                    continue
+                self.kv.append_token(r.rid)
+            # first emission after transfer = the recomputed token 1
+            # (TTFT lands here, vLLM v1 semantics — paper §3.2.1)
+            r.emit_token(now)
+            if r.done:
+                self.kv.free(r.rid)
+                self.running.remove(r)
+                self._finish(r)
+        self.decode_busy = False
+        self.util_samples.append(UtilSample(now, self.kv.utilization, True))
+        self._kick_decode()
+
+    def _preempt_victim(self) -> Optional[Request]:
+        if not self.running:
+            return None
+        victim = max(self.running, key=lambda r: r.arrival)
+        self.running.remove(victim)
+        self.kv.preempt(victim.rid)
+        victim.preemptions += 1
+        victim.state = State.WAITING_PREFILL
+        victim.prefill_tokens_done = 0
+        self.waiting_prefill.appendleft(victim)
+        self._kick_prefill()
+        return victim
+
+
+ENGINES = {
+    "rapid": RapidEngine,
+    "hybrid": HybridEngine,
+    "disagg": DisaggEngine,
+}
+
+
+def make_engine(mode: str, cfg, serve: ServeConfig,
+                hw: HardwareSpec = TPU_V5E) -> BaseEngine:
+    return ENGINES[mode](cfg, serve, hw)

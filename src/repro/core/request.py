@@ -1,0 +1,68 @@
+"""Request lifecycle — the queue states of paper Fig 4.
+
+A request is directed simultaneously to both the prefill and decode sides:
+  decode side : WAITING_KV -> (blocks allocated) -> notifies prefill
+  prefill side: PENDING_KV -> WAITING_PREFILL -> PREFILLING -> done
+  decode side : PREFILL_FINISHED -> DECODING -> FINISHED
+
+Timestamps are recorded at every transition; TTFT/ITL metrics derive from
+``token_times`` (token 1 is produced by the prefill step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class State(enum.Enum):
+    ARRIVED = "arrived"
+    WAITING_KV = "waiting_kv"          # decode: waiting for block alloc
+    WAITING_PREFILL = "waiting_prefill"  # prefill: has blocks, in queue
+    PREFILLING = "prefilling"
+    PREFILL_FINISHED = "prefill_finished"  # decode notified, joining batch
+    DECODING = "decoding"
+    FINISHED = "finished"
+    PREEMPTED = "preempted"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: float
+    prompt_len: int
+    max_new_tokens: int
+
+    state: State = State.ARRIVED
+    blocks: Optional[list] = None
+    # progress
+    prefill_tokens_done: int = 0       # for chunked prefill baselines
+    tokens_generated: int = 0          # includes the prefill-produced token
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    # timestamps
+    t_blocks: Optional[float] = None
+    t_prefill_start: Optional[float] = None
+    t_prefill_end: Optional[float] = None
+    t_finish: Optional[float] = None
+    preemptions: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return self.token_times[0] - self.arrival if self.token_times else None
+
+    @property
+    def itls(self) -> List[float]:
+        ts = self.token_times
+        return [b - a for a, b in zip(ts, ts[1:])]
+
+    @property
+    def context_len(self) -> int:
+        return self.prompt_len + self.tokens_generated
+
+    @property
+    def done(self) -> bool:
+        return self.tokens_generated >= self.max_new_tokens
+
+    def emit_token(self, now: float) -> None:
+        self.tokens_generated += 1
+        self.token_times.append(now)

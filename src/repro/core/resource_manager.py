@@ -1,0 +1,98 @@
+"""Adaptive Resource Manager (paper §4.5.3) + offline profiling.
+
+Two regimes, switched at runtime on the decode batch size:
+
+  * overallocation — both phases get 100% of compute (f=None); the
+    hardware scheduler (TPU analogue: occupancy-demand sharing, see
+    perfmodel/interference.py) fills gaps.  Used while the decode batch is
+    small enough that inter-stream interference keeps ITL under the SLO.
+
+  * distinct allocation — decode gets the *minimum* capacity fraction
+    that meets the ITL SLO (from an offline profile, the CU-mask table
+    analogue); prefill gets the rest.
+
+The offline profile is built with the same perfmodel the simulator uses —
+the moral equivalent of the paper's microbenchmark profiling pass, and it
+is regenerated per (model, chips, SLO) triple.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.perfmodel import costs as C
+from repro.perfmodel import interference as I
+from repro.perfmodel.hw import HardwareSpec
+
+# capacity-fraction grid matching the paper's profiled CU-mask settings
+F_GRID = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.75, 0.8, 0.85, 0.9]
+BS_BUCKETS = [1, 2, 4, 8, 16, 32, 48, 64, 96, 128, 192, 256]
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeProfile:
+    """bs bucket -> min f_d meeting the SLO; and the largest bs for which
+    overallocation still meets the SLO (the Fig 7 crossover)."""
+    buckets: List[int]
+    min_f: Dict[int, float]
+    overalloc_bs_limit: int
+    slo_itl_s: float
+
+
+def build_decode_profile(cfg, hw: HardwareSpec, chips: int,
+                         slo_itl_s: float, avg_ctx: int,
+                         tp: Optional[int] = None) -> DecodeProfile:
+    """Offline profiling pass: sweep (bs, f) and record SLO frontiers."""
+    tp = tp or chips
+    min_f: Dict[int, float] = {}
+    overalloc_limit = 0
+    # a representative co-resident prefill (saturating, compute-bound)
+    p_cost = C.prefill_cost(cfg, [4096], tp)
+    for bs in BS_BUCKETS:
+        d_cost = C.decode_cost(cfg, bs, float(bs * avg_ctx), tp)
+        # overallocation check (P100-D100 of Fig 7)
+        r = I.overlapped_times(p_cost, d_cost, hw, chips)
+        if r.t_decode <= slo_itl_s:
+            overalloc_limit = bs
+        # distinct-allocation frontier
+        for f in F_GRID:
+            t_d = I.phase_time(d_cost, hw, chips, f=f,
+                               mem_interference=I.MEM_INTERFERENCE_DECODE)
+            if t_d <= slo_itl_s:
+                min_f[bs] = f
+                break
+        else:
+            min_f[bs] = F_GRID[-1]  # best effort: SLO unreachable at this bs
+    return DecodeProfile(list(BS_BUCKETS), min_f, overalloc_limit, slo_itl_s)
+
+
+@dataclasses.dataclass
+class Allocation:
+    f_decode: Optional[float]   # None => overallocation
+    mode: str
+
+    @property
+    def f_prefill(self) -> float:
+        return 1.0 if self.f_decode is None else 1.0 - self.f_decode
+
+
+class AdaptiveResourceManager:
+    """Runtime allocation policy driven by the offline profile."""
+
+    def __init__(self, profile: DecodeProfile):
+        self.profile = profile
+        self.history: List[Allocation] = []
+
+    def allocate(self, decode_bs: int, prefill_active: bool) -> Allocation:
+        if decode_bs == 0 or not prefill_active:
+            a = Allocation(None, "solo")
+        elif decode_bs <= self.profile.overalloc_bs_limit:
+            a = Allocation(None, "overalloc")
+        else:
+            i = bisect.bisect_left(self.profile.buckets, decode_bs)
+            i = min(i, len(self.profile.buckets) - 1)
+            a = Allocation(self.profile.min_f[self.profile.buckets[i]],
+                           "distinct")
+        self.history.append(a)
+        return a

@@ -1,0 +1,134 @@
+"""Causal flash attention (prefill) — Pallas TPU kernel.
+
+Grid: (B, Hq, num_q_blocks, num_k_blocks); the k-block dim is innermost
+and sequential, carrying the running (max, sum, acc) in VMEM scratch —
+the canonical TPU flash schedule.  GQA is handled in the k/v BlockSpec
+index maps (kv head = q head // group), so no KV repeat is materialized.
+
+VMEM working set per program:
+    q block  (block_q, D)           bf16
+    k block  (block_k, D)           bf16
+    v block  (block_k, D)           bf16
+    acc      (block_q, D)           f32 scratch
+    m, l     (block_q,)             f32 scratch
+With block_q = block_k = 512, D = 128: ~0.9 MB — far under the ~16 MB
+VMEM budget, leaving room for double buffering; dims are multiples of
+(8, 128) so the MXU tiles cleanly.
+
+Causality is enforced at two levels: whole k-blocks strictly above the
+diagonal are skipped (no MXU work), and the diagonal block is masked
+elementwise.  Sliding windows additionally skip k-blocks entirely below
+the window.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, num_k_blocks: int,
+                  window: Optional[int], sm_scale: float):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = kj * block_k
+    # block-level causal / window culling
+    needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        needed &= (k_start + block_k - 1) > (q_start - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (block_q, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (block_k, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(kj == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "block_q", "block_k", "interpret"))
+def flash_prefill(q, k, v, *, window: Optional[int] = None,
+                  block_q: int = 512, block_k: int = 512,
+                  interpret: bool = False):
+    """q (B,Hq,S,D), k/v (B,Hkv,S,D) -> (B,Hq,S,D).  S padded to blocks."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    pad_q = (-S) % block_q
+    pad_k = (-S) % block_k
+    if pad_q or pad_k:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq, Sk = S + pad_q, S + pad_k
+    nq, nk = Sq // block_q, Sk // block_k
+    grid = (B, Hq, nq, nk)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, num_k_blocks=nk,
+        window=window, sm_scale=1.0 / (D ** 0.5))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S]

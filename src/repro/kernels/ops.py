@@ -1,0 +1,98 @@
+"""Jit'd model-facing wrappers around the Pallas kernels.
+
+The models pass (B, S, H, D)-layout tensors; the kernels want
+(B, H, S, D).  On CPU (this container) every kernel runs interpret=True;
+on TPU the same call sites compile to Mosaic.  ``INTERPRET`` is resolved
+once from the backend.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_prefill as _fp
+from repro.kernels import paged_attention as _pa
+from repro.kernels import ssm_scan as _ssm
+from repro.kernels import unified_pd as _updk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_prefill(q, k, v, *, window: Optional[int] = None,
+                  block_q: int = 512, block_k: int = 512):
+    """q (B,S,Hq,D), k/v (B,S,Hkv,D) -> (B,S,Hq,D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    S = q.shape[1]
+    bq = min(block_q, max(8, S))
+    bk = min(block_k, max(8, S))
+    o = _fp.flash_prefill(qt, kt, vt, window=window, block_q=bq,
+                          block_k=bk, interpret=_interpret())
+    return o.transpose(0, 2, 1, 3)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens):
+    """q (B,Hq,D) over paged cache -> (B,Hq,D)."""
+    return _pa.paged_attention(q, k_pages, v_pages, block_tables,
+                               seq_lens, interpret=_interpret())
+
+
+def paged_attention_dense(q, cache_k, cache_v, seq_lens, *,
+                          window: Optional[int] = None,
+                          page: int = 64):
+    """Decode attention over a *dense slot* cache via the paged kernel.
+
+    q (B,Hq,D); cache_k/v (B,Sc,Hkv,D); seq_lens (B,) valid tokens
+    (for ring-buffer windows pass min(len, window) — all slots valid).
+    The dense cache is viewed as trivially-paged: sequence b owns pages
+    [b*np, (b+1)*np), identity block table.
+    """
+    B, Sc, Hkv, D = cache_k.shape
+    page = min(page, Sc)
+    while Sc % page:
+        page -= 1
+    n_pages = Sc // page
+    kp = cache_k.reshape(B * n_pages, page, Hkv, D)
+    vp = cache_v.reshape(B * n_pages, page, Hkv, D)
+    tables = (jnp.arange(B)[:, None] * n_pages +
+              jnp.arange(n_pages)[None, :]).astype(jnp.int32)
+    lens = seq_lens.astype(jnp.int32)
+    if window is not None:
+        lens = jnp.minimum(lens, window)
+    return _pa.paged_attention(q, kp, vp, tables, lens,
+                               interpret=_interpret())
+
+
+def ssm_scan(xs, dt, A, Bm, Cm, *, h0=None, chunk: int = 128,
+             tile_d: int = 256):
+    """Chunked selective scan.  h0 continuation falls back to the jnp
+    reference (state injection is not expressible as a rank-1 step; only
+    the serving chunked-prefill path needs it)."""
+    if h0 is not None:
+        from repro.kernels import ref
+        return ref.ssm_scan(xs, dt, A, Bm, Cm, h0=h0)
+    return _ssm.ssm_scan(xs, dt, A, Bm, Cm, chunk=chunk, tile_d=tile_d,
+                         interpret=_interpret())
+
+
+def unified_pd(q_p, k_p, v_p, q_d, k_pages, v_pages, block_tables,
+               seq_lens, *, f_decode: float = 0.5,
+               window: Optional[int] = None, block_q: int = 512,
+               block_k: int = 512):
+    """Fused concurrent P/D attention step (layouts as models produce):
+    q_p/k_p/v_p (Bp,S,H,D); q_d (Bd,Hq,D).  Returns
+    (o_p (Bp,S,Hq,D), o_d (Bd,Hq,D))."""
+    Sp = q_p.shape[1]
+    bq = min(block_q, max(8, Sp))
+    bk = min(block_k, max(8, Sp))
+    o_p, o_d = _updk.unified_pd(
+        q_p.transpose(0, 2, 1, 3), k_p.transpose(0, 2, 1, 3),
+        v_p.transpose(0, 2, 1, 3), q_d, k_pages, v_pages, block_tables,
+        seq_lens, f_decode=f_decode, window=window, block_q=bq,
+        block_k=bk, interpret=_interpret())
+    return o_p.transpose(0, 2, 1, 3), o_d

@@ -1,0 +1,4 @@
+from repro.kvcache.manager import (  # noqa: F401
+    BlockAllocator, KVCacheManager, OutOfBlocks, kv_pages_for,
+    paged_cache_shape,
+)

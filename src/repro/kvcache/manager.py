@@ -1,0 +1,145 @@
+"""Paged KV-cache block allocator — decode-owned (paper §4.5.1, Fig 4).
+
+The paper's central lock-free protocol: only the *decode* process runs the
+KV cache manager.  Prompt block counts are computable from the context
+length, so on request arrival the decode side allocates the prompt's
+blocks and hands the block IDs to prefill; prefill fills them and sends a
+notification back — no KV transfer, no locks, single owner.
+
+``BlockAllocator`` is the page-pool (vLLM PagedAttention-style);
+``KVCacheManager`` layers request lifecycle on top: allocate-for-prompt,
+append-slot during decode, free on completion/preemption, plus occupancy
+accounting used by the §5.4 memory-utilization benchmark and by engine
+admission control.
+
+Device-side layout (consumed by kernels/paged_attention.py):
+    k_pages, v_pages : (num_blocks, page_size, kv_heads, head_dim)
+    block_tables     : (max_requests, max_blocks_per_seq) int32
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+class OutOfBlocks(Exception):
+    """Raised when the pool cannot satisfy an allocation (triggers
+    engine-level preemption or admission back-pressure)."""
+
+
+def kv_pages_for(num_tokens: int, page_size: int) -> int:
+    return -(-num_tokens // page_size)
+
+
+def paged_cache_shape(cfg, num_blocks: int, page_size: int, tp: int = 1):
+    return (num_blocks, page_size, cfg.kv_heads_padded(tp), cfg.head_dim)
+
+
+class BlockAllocator:
+    """Free-list page pool.  O(1) alloc/free, LIFO reuse for locality."""
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise OutOfBlocks(f"need {n}, have {len(self._free)}")
+        out = self._free[-n:][::-1]
+        del self._free[-n:]
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        self._free.extend(reversed(blocks))
+        assert len(self._free) <= self.num_blocks
+
+
+@dataclasses.dataclass
+class _SeqAlloc:
+    blocks: List[int]
+    num_tokens: int          # tokens with cache entries (prompt + generated)
+    page_size: int
+
+    @property
+    def capacity(self) -> int:
+        return len(self.blocks) * self.page_size
+
+
+class KVCacheManager:
+    """Decode-owned per-request block bookkeeping (single owner => no
+    locks; the prefill side only ever *reads* block IDs it was handed)."""
+
+    def __init__(self, num_blocks: int, page_size: int):
+        self.allocator = BlockAllocator(num_blocks)
+        self.page_size = page_size
+        self._seqs: Dict[int, _SeqAlloc] = {}
+
+    # -- Fig 4 step 2: decode allocates the prompt's blocks ----------------
+    def allocate_prompt(self, rid: int, prompt_len: int) -> List[int]:
+        if rid in self._seqs:
+            raise ValueError(f"request {rid} already allocated")
+        n = kv_pages_for(prompt_len, self.page_size)
+        blocks = self.allocator.alloc(n)
+        self._seqs[rid] = _SeqAlloc(blocks, prompt_len, self.page_size)
+        return blocks
+
+    def can_allocate(self, prompt_len: int) -> bool:
+        return kv_pages_for(prompt_len, self.page_size) <= \
+            self.allocator.free_count
+
+    # -- decode step: one new token per running request ---------------------
+    def append_token(self, rid: int) -> Optional[int]:
+        """Returns a newly-allocated block id when a page boundary is
+        crossed, else None."""
+        seq = self._seqs[rid]
+        new_block = None
+        if seq.num_tokens + 1 > seq.capacity:
+            new_block = self.allocator.alloc(1)[0]
+            seq.blocks.append(new_block)
+        seq.num_tokens += 1
+        return new_block
+
+    def free(self, rid: int) -> None:
+        seq = self._seqs.pop(rid)
+        self.allocator.free(seq.blocks)
+
+    def preempt(self, rid: int) -> int:
+        """Free a request's blocks (victim of preemption); returns the
+        number of tokens whose KV must be recomputed on resume."""
+        seq = self._seqs[rid]
+        tokens = seq.num_tokens
+        self.free(rid)
+        return tokens
+
+    # -- accounting ---------------------------------------------------------
+    def blocks_of(self, rid: int) -> List[int]:
+        return list(self._seqs[rid].blocks)
+
+    def tokens_of(self, rid: int) -> int:
+        return self._seqs[rid].num_tokens
+
+    @property
+    def num_requests(self) -> int:
+        return len(self._seqs)
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of the pool holding live KV (paper §5.4 metric)."""
+        if self.allocator.num_blocks == 0:
+            return 0.0
+        return self.allocator.used_count / self.allocator.num_blocks
+
+    @property
+    def token_occupancy(self) -> float:
+        """Live tokens / pool token capacity — excludes page-tail waste."""
+        cap = self.allocator.num_blocks * self.page_size
+        live = sum(s.num_tokens for s in self._seqs.values())
+        return live / cap if cap else 0.0

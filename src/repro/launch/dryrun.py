@@ -1,0 +1,114 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:  jit(step, in_shardings=..., donate=...)
+                    .lower(**ShapeDtypeStruct stand-ins)
+                    .compile()
+then print memory_analysis() (fits 16 GB/chip?) and cost_analysis()
+(FLOPs/bytes for §Roofline), plus the parsed collective-byte breakdown.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-70b --shape decode_32k
+    python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first init) — 512 placeholder CPU devices back the
+16x16 (single-pod) and 2x16x16 (multi-pod) meshes.  Nothing here
+allocates a real buffer: params/caches enter as ShapeDtypeStructs.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+
+from repro.config import SHAPES, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import RooflineTerms, analyze
+from repro.launch.steps import build_cell, cells_for_arch
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             verbose: bool = True, **cell_kw):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.size
+    t0 = time.time()
+    cell = build_cell(cfg, shape, mesh, **cell_kw)
+    with mesh:
+        lowered = cell.lower()
+        compiled = lowered.compile()
+    dt = time.time() - t0
+    mem = compiled.memory_analysis()
+    terms = analyze(compiled, cfg, shape, mesh_name, chips)
+    if verbose:
+        print(f"== {arch} x {shape_name} x {mesh_name} "
+              f"(compile {dt:.1f}s)")
+        print(f"   memory_analysis: {mem}")
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        print(f"   cost_analysis: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}")
+        tc, tm, tl = terms.terms()
+        print(f"   roofline: compute={tc*1e3:.2f}ms memory={tm*1e3:.2f}ms "
+              f"collective={tl*1e3:.2f}ms -> {terms.bottleneck}-bound; "
+              f"useful-FLOPs={terms.useful_flops_ratio:.2f} "
+              f"peak_mem/chip={terms.peak_mem_per_chip/2**30:.2f}GiB")
+        print(f"   collectives: " + ", ".join(
+            f"{k}={v/2**20:.0f}MiB" for k, v in
+            sorted(terms.coll_by_op.items())) if terms.coll_by_op
+            else "   collectives: none")
+    return terms
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None, choices=list_archs() + [None])
+    p.add_argument("--shape", default=None,
+                   choices=list(SHAPES) + [None])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--json", default=None)
+    args = p.parse_args(argv)
+
+    results = []
+    failures = []
+    if args.all:
+        archs = list_archs()
+    elif args.arch:
+        archs = [args.arch]
+    else:
+        p.error("--arch or --all required")
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([SHAPES[args.shape]] if args.shape
+                  else cells_for_arch(cfg))
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(run_cell(arch, shape.name, mp))
+                except Exception as e:  # noqa: BLE001 - report & continue
+                    failures.append((arch, shape.name, mp, repr(e)))
+                    print(f"!! FAILED {arch} x {shape.name} "
+                          f"(multi_pod={mp}): {e}", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([dataclasses.asdict(r) for r in results], f,
+                      indent=1)
+    print(f"\n{len(results)} cells compiled, {len(failures)} failed")
+    for f_ in failures:
+        print("  FAIL:", *f_[:3])
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,72 @@
+"""Serving launcher: run RAPID / hybrid / disagg on a trace and report
+throughput, goodput and tail latencies (the paper's §5 methodology).
+
+    python -m repro.launch.serve --arch llama3-70b --trace lmsys \
+        --qps 8 --duration 60 --mode rapid
+
+Engine logic is real; step durations come from the calibrated TPU-v5e
+perfmodel (this container has no accelerator — DESIGN.md §6).  Use
+examples/serve_real.py for actual on-CPU token generation with a
+reduced model.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+
+from repro.config import SLOConfig, ServeConfig, get_config, list_archs
+from repro.core import make_engine
+from repro.serving import TRACES, generate_trace, summarize
+
+
+def run_one(arch: str, mode: str, trace: str, qps: float, duration: float,
+            chips: int, slo_itl_ms: float, chunk: int = 512,
+            seed: int = 0, max_slots: int = 128):
+    cfg = get_config(arch)
+    slo = SLOConfig(itl_ms=slo_itl_ms)
+    serve = ServeConfig(mode=mode, chips=chips, slo=slo,
+                        chunk_size=chunk,
+                        disagg_split=(chips // 2, chips // 2),
+                        max_batch_slots=max_slots)
+    reqs = generate_trace(TRACES[trace], qps=qps, duration_s=duration,
+                          seed=seed)
+    eng = make_engine(mode, cfg, serve)
+    recs, span = eng.run([copy.deepcopy(r) for r in reqs])
+    return summarize(recs, slo, span)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="llama3-70b", choices=list_archs())
+    p.add_argument("--mode", default="rapid",
+                   choices=["rapid", "hybrid", "disagg", "all"])
+    p.add_argument("--trace", default="lmsys", choices=list(TRACES))
+    p.add_argument("--qps", type=float, default=8.0)
+    p.add_argument("--duration", type=float, default=60.0)
+    p.add_argument("--chips", type=int, default=32)
+    p.add_argument("--slo-itl-ms", type=float, default=100.0)
+    p.add_argument("--chunk", type=int, default=512)
+    p.add_argument("--json", default=None)
+    args = p.parse_args(argv)
+
+    modes = (["rapid", "hybrid", "disagg"] if args.mode == "all"
+             else [args.mode])
+    out = {}
+    for mode in modes:
+        s = run_one(args.arch, mode, args.trace, args.qps, args.duration,
+                    args.chips, args.slo_itl_ms, args.chunk)
+        out[mode] = s
+        print(f"{mode:7s} thpt={s['throughput_tok_s']:9.1f} tok/s  "
+              f"goodput={s['goodput_req_s']:6.2f} req/s  "
+              f"ttft_p95={s['ttft_p95_s']:7.2f}s  "
+              f"itl_p95={s['itl_p95_s'] * 1e3:6.0f}ms  "
+              f"slo_ok={s['slo_attainment'] * 100:5.1f}%")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,347 @@
+"""Cell builders: (arch x input-shape x mesh) -> jitted step + arg specs.
+
+Every dry-run/launch entry point goes through ``build_cell``; it returns
+the step function, ShapeDtypeStruct stand-ins for all inputs (no device
+allocation — the shannon/kernels pattern), and the in/out shardings.
+
+Shapes lower:
+  train_4k     -> train_step(state, batch)       (donates state)
+  prefill_32k  -> prefill_step(params, inputs, positions)
+  decode_32k   -> serve_step(params, inputs, positions, cache, seq_lens)
+  long_500k    -> serve_step with context-parallel KV (seq->data axis)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig, SHAPES
+from repro.models.transformer import (cache_specs, decode_forward, forward,
+                                      init_cache, init_model)
+from repro.sharding import (ShardingRules, make_constrain, param_sharding,
+                            rules_for_mesh, spec_to_pspec)
+from repro.training.optimizer import OptConfig
+from repro.training.train_lib import (TrainState, init_train_state,
+                                      make_train_step, train_state_specs)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    step_fn: Any
+    args: tuple              # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    donate_argnums: tuple = ()
+
+    def jitted(self):
+        return jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+SMALL_MODEL_PARAMS = 2_000_000_000
+
+
+def _small_dp_only(cfg: Optional[ModelConfig], shape: ShapeConfig) -> bool:
+    """§Perf hillclimb #3: sub-2B models (xlstm-125m) are pathologically
+    over-sharded at TP=16 (96-wide matmul shards).  Replicate the
+    weights (250 MB) and run pure DP: 2x prefill MFU, zero serving
+    collectives, and — after hoisting the sLSTM input projections out
+    of its token scan (whose in-loop dW all-reduce initially made this
+    look like a regression, see §Perf iteration 3) — a 1.34x faster
+    train step than TP-16 as well."""
+    return (cfg is not None and cfg.param_count() < SMALL_MODEL_PARAMS)
+
+
+def _rules(mesh: Mesh, shape: ShapeConfig,
+           cfg: Optional[ModelConfig] = None) -> ShardingRules:
+    rules = rules_for_mesh(mesh)
+    if _small_dp_only(cfg, shape):
+        axes = (("pod", "data", "model") if "pod" in mesh.axis_names
+                else ("data", "model"))
+        if shape.global_batch % mesh.size:
+            axes = axes[:-1]
+        return dataclasses.replace(rules, model=None, expert=None,
+                                   data=None, batch=axes)
+    if shape.kind == "long_decode":
+        # context parallelism: shard the KV/cache sequence dim over the
+        # (otherwise idle at batch=1) data axis
+        rules = dataclasses.replace(rules, seq="data")
+    elif shape.kind == "train":
+        # sequence parallelism: inter-block residuals (and their remat
+        # checkpoints) shard S over the TP axis
+        rules = dataclasses.replace(rules, seq="model")
+    return rules
+
+
+def _tp_for(cfg: ModelConfig, mesh: Mesh,
+            shape: Optional[ShapeConfig] = None) -> int:
+    """Effective TP degree: 1 under the small-model DP-only serving
+    policy (no head/vocab padding, no TP collectives)."""
+    if shape is not None and _small_dp_only(cfg, shape):
+        return 1
+    return mesh.shape["model"]
+
+
+def _serve_fsdp(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """§Perf hillclimb #1: FSDP-sharded weights force a full weight
+    all-gather EVERY decode token (llama decode_32k: 16.5 GB/chip/step,
+    0.33 s of ICI time vs a 46 ms memory floor).  Serve TP-only whenever
+    the per-chip TP shard fits in HBM with room for KV."""
+    from repro.perfmodel.hw import TPU_V5E
+    tp = mesh.shape["model"]
+    per_chip = cfg.param_count() * 2 / tp
+    return per_chip > 0.75 * TPU_V5E.hbm_bytes
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _input_tokens(cfg: ModelConfig, B: int, S: int):
+    if cfg.frontend == "embed_stub":
+        return _sds((B, S, cfg.d_model), cfg.dtype)
+    return _sds((B, S), "int32")
+
+
+def _positions(cfg: ModelConfig, B: int, S: int):
+    if cfg.rope_type == "mrope":
+        return _sds((B, S, 3), "int32")
+    return _sds((B, S), "int32")
+
+
+def _input_sharding(cfg, mesh, rules, sds, batch_axes):
+    return NamedSharding(mesh, spec_to_pspec(batch_axes, mesh, rules,
+                                             sds.shape))
+
+
+def input_specs(arch_cfg: ModelConfig, shape: ShapeConfig):
+    """Public helper: ShapeDtypeStructs for every model input of a cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {
+            "inputs": _input_tokens(arch_cfg, B, S),
+            "labels": _sds((B, S), "int32"),
+            "positions": _positions(arch_cfg, B, S),
+        }
+    if shape.kind == "prefill":
+        return {
+            "inputs": _input_tokens(arch_cfg, B, S),
+            "positions": _positions(arch_cfg, B, S),
+        }
+    # decode / long_decode: one new token against an S-token cache
+    return {
+        "inputs": _input_tokens(arch_cfg, B, 1),
+        "positions": _positions(arch_cfg, B, 1),
+        "seq_lens": _sds((B,), "int32"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cells
+# ---------------------------------------------------------------------------
+
+
+def build_train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     *, fsdp: bool = True, impl: str = "ref") -> Cell:
+    tp = _tp_for(cfg, mesh, shape)
+    rules = _rules(mesh, shape, cfg)
+    constrain = make_constrain(mesh, rules)
+    # bf16 moments AND bf16 gradient accumulation for the archs whose
+    # f32 state would not fit 16 GB/chip (config-recorded deployment plan)
+    opt = OptConfig(moment_dtype=cfg.opt_dtype,
+                    grad_accum_dtype=cfg.opt_dtype)
+    # microbatch count adapts to the mesh: per-microbatch batch is kept
+    # at the minimum that still shards over all data-parallel rows
+    # (the full mesh under the small-model DP-only policy)
+    dp_total = mesh.size // tp
+    mb = max(1, min(cfg.train_microbatches,
+                    shape.global_batch // dp_total))
+
+    rng = jax.random.PRNGKey(0)
+    closure = {}
+
+    def init(r):
+        p, s = init_model(r, cfg, tp)
+        closure["specs"] = s
+        from repro.training.optimizer import adamw_init
+        return TrainState(p, adamw_init(p, opt), jnp.zeros((), jnp.int32))
+
+    state_sds = jax.eval_shape(init, rng)
+    spec_state = train_state_specs(closure["specs"])
+    state_shardings = param_sharding(spec_state, state_sds, mesh,
+                                     rules=rules, fsdp=fsdp)
+    step = make_train_step(cfg, opt, tp, microbatches=mb, impl=impl,
+                           constrain=constrain, remat=True,
+                           grad_shardings=state_shardings.params)
+
+    ins = input_specs(cfg, shape)
+    batch_sds = {"inputs": ins["inputs"], "labels": ins["labels"],
+                 "positions": ins["positions"]}
+    bsh = {
+        "inputs": _input_sharding(cfg, mesh, rules, ins["inputs"],
+                                  ("batch",) + (None,) *
+                                  (len(ins["inputs"].shape) - 1)),
+        "labels": _input_sharding(cfg, mesh, rules, ins["labels"],
+                                  ("batch", None)),
+        "positions": _input_sharding(cfg, mesh, rules, ins["positions"],
+                                     ("batch",) + (None,) *
+                                     (len(ins["positions"].shape) - 1)),
+    }
+    return Cell(cfg.name, shape.name, step, (state_sds, batch_sds),
+                (state_shardings, bsh), donate_argnums=(0,))
+
+
+def _param_setup(cfg, mesh, rules, fsdp, shape=None):
+    tp = _tp_for(cfg, mesh, shape)
+    rng = jax.random.PRNGKey(0)
+    closure = {}
+
+    def init(r):
+        p, s = init_model(r, cfg, tp)
+        closure["specs"] = s
+        return p
+
+    p_sds = jax.eval_shape(init, rng)
+    p_shard = param_sharding(closure["specs"], p_sds, mesh, rules=rules,
+                             fsdp=fsdp)
+    return tp, p_sds, p_shard
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       *, fsdp: bool = None, impl: str = "ref") -> Cell:
+    if fsdp is None:
+        fsdp = _serve_fsdp(cfg, mesh)
+    rules = _rules(mesh, shape, cfg)
+    constrain = make_constrain(mesh, rules)
+    tp, p_sds, p_shard = _param_setup(cfg, mesh, rules, fsdp, shape)
+
+    def prefill_step(params, inputs, positions):
+        logits, aux = forward(params, cfg, inputs, positions, tp,
+                              impl=impl, return_aux=True,
+                              constrain=constrain, last_only=True)
+        return logits, aux
+
+    ins = input_specs(cfg, shape)
+    ish = {
+        "inputs": _input_sharding(cfg, mesh, rules, ins["inputs"],
+                                  ("batch",) + (None,) *
+                                  (len(ins["inputs"].shape) - 1)),
+        "positions": _input_sharding(cfg, mesh, rules, ins["positions"],
+                                     ("batch",) + (None,) *
+                                     (len(ins["positions"].shape) - 1)),
+    }
+    return Cell(cfg.name, shape.name, prefill_step,
+                (p_sds, ins["inputs"], ins["positions"]),
+                (p_shard, ish["inputs"], ish["positions"]))
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      *, fsdp: bool = None, impl: str = "ref") -> Cell:
+    if fsdp is None:
+        fsdp = _serve_fsdp(cfg, mesh)
+    rules = _rules(mesh, shape, cfg)
+    constrain = make_constrain(mesh, rules)
+    tp, p_sds, p_shard = _param_setup(cfg, mesh, rules, fsdp, shape)
+    B, S = shape.global_batch, shape.seq_len
+
+    cache_sds = jax.eval_shape(lambda: init_cache(cfg, B, S, tp))
+    c_specs = cache_specs(cfg, tp)
+    c_shard = param_sharding(c_specs, cache_sds, mesh, rules=rules,
+                             fsdp=False)
+
+    def serve_step(params, inputs, positions, cache, seq_lens):
+        logits, new_cache = decode_forward(params, cfg, inputs, positions,
+                                           cache, seq_lens, tp, impl=impl,
+                                           constrain=constrain)
+        return logits, new_cache
+
+    ins = input_specs(cfg, shape)
+    ish = {
+        "inputs": _input_sharding(cfg, mesh, rules, ins["inputs"],
+                                  ("batch",) + (None,) *
+                                  (len(ins["inputs"].shape) - 1)),
+        "positions": _input_sharding(cfg, mesh, rules, ins["positions"],
+                                     ("batch",) + (None,) *
+                                     (len(ins["positions"].shape) - 1)),
+        "seq_lens": _input_sharding(cfg, mesh, rules, ins["seq_lens"],
+                                    ("batch",)),
+    }
+    return Cell(cfg.name, shape.name, serve_step,
+                (p_sds, ins["inputs"], ins["positions"], cache_sds,
+                 ins["seq_lens"]),
+                (p_shard, ish["inputs"], ish["positions"], c_shard,
+                 ish["seq_lens"]),
+                donate_argnums=(3,))
+
+
+def build_fused_pd_cell(cfg: ModelConfig, mesh: Mesh, *,
+                        prefill_batch: int = 2, prefill_seq: int = 4096,
+                        decode_batch: int = 64, decode_ctx: int = 8192,
+                        fsdp: bool = None, impl: str = "ref") -> Cell:
+    """The RAPID concurrent step as ONE XLA program: the prefill subgraph
+    and the decode subgraph are data-disjoint, so XLA is free to
+    interleave decode's HBM-bound attention with prefill's MXU-bound
+    GEMMs — the fused-overlap analogue of the paper's two HW queues
+    (DESIGN.md §2).  Used by the §Perf hillclimb."""
+    if fsdp is None:
+        fsdp = _serve_fsdp(cfg, mesh)
+    shape = ShapeConfig("fused_pd", decode_ctx, decode_batch, "decode")
+    rules = _rules(mesh, shape, cfg)
+    constrain = make_constrain(mesh, rules)
+    tp, p_sds, p_shard = _param_setup(cfg, mesh, rules, fsdp, shape)
+    Bp, Sp, Bd, Sc = prefill_batch, prefill_seq, decode_batch, decode_ctx
+
+    def fused_step(params, p_inputs, p_positions, d_inputs, d_positions,
+                   cache, seq_lens):
+        p_logits, aux = forward(params, cfg, p_inputs, p_positions, tp,
+                                impl=impl, return_aux=True,
+                                constrain=constrain, last_only=True)
+        d_logits, new_cache = decode_forward(params, cfg, d_inputs,
+                                             d_positions, cache, seq_lens,
+                                             tp, impl=impl,
+                                             constrain=constrain)
+        return p_logits, aux, d_logits, new_cache
+
+    cache_sds = jax.eval_shape(lambda: init_cache(cfg, Bd, Sc, tp))
+    c_shard = param_sharding(cache_specs(cfg, tp), cache_sds, mesh,
+                             rules=rules, fsdp=False)
+    args = (p_sds, _input_tokens(cfg, Bp, Sp), _positions(cfg, Bp, Sp),
+            _input_tokens(cfg, Bd, 1), _positions(cfg, Bd, 1),
+            cache_sds, _sds((Bd,), "int32"))
+
+    def bsh(sds):
+        return _input_sharding(cfg, mesh, rules, sds,
+                               ("batch",) + (None,) * (len(sds.shape) - 1))
+
+    shardings = (p_shard, bsh(args[1]), bsh(args[2]), bsh(args[3]),
+                 bsh(args[4]), c_shard, bsh(args[6]))
+    return Cell(cfg.name, "fused_pd", fused_step, args, shardings,
+                donate_argnums=(5,))
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               **kw) -> Cell:
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh, **kw)
+    return build_decode_cell(cfg, shape, mesh, **kw)
+
+
+def cells_for_arch(cfg: ModelConfig):
+    """The shape list for an arch: decode/long shapes obey the
+    sub-quadratic / family rules (DESIGN.md §5)."""
+    shapes = [SHAPES["train_4k"], SHAPES["prefill_32k"],
+              SHAPES["decode_32k"]]
+    if cfg.sub_quadratic:
+        shapes.append(SHAPES["long_500k"])
+    return shapes

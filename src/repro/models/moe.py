@@ -1,0 +1,153 @@
+"""Mixture-of-Experts FFN with grouped top-k dispatch (T5X/Mesh-style).
+
+Tokens are processed in groups of ``group_size``; per group each expert has
+capacity ``ceil(g * top_k / E * capacity_factor)``.  Dispatch/combine are
+one-hot einsums — fully static shapes, shardable under GSPMD.
+
+Expert partitioning:
+  * ``ep`` (experts % tp == 0): expert dim sharded over the model axis;
+    GSPMD materializes the token all-to-all at the dispatch einsum.
+  * ``tp`` (else, e.g. Mixtral 8e over 16 chips): every expert's hidden dim
+    sharded over the model axis (pure tensor parallelism).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamBuilder, act_fn
+
+
+def moe_partition(cfg, tp: int) -> str:
+    """'ep': experts sharded over the data axis (GShard all-to-all
+    dataflow) + hidden over model.  'tp': experts replicated over data
+    with d FSDP-sharded (contracted dim -> cheap per-layer weight
+    all-gather) + hidden over model — used when E doesn't divide the
+    data axis (e.g. Mixtral's 8 experts on a 16-wide axis)."""
+    m = cfg.moe
+    if m.partition != "auto":
+        return m.partition
+    return "ep" if m.num_experts % tp == 0 else "tp"
+
+
+def init_moe(b: ParamBuilder, cfg, tp: int):
+    m = cfg.moe
+    d, E, f = cfg.d_model, m.num_experts, m.d_ff_expert
+    if moe_partition(cfg, tp) == "ep":
+        w_spec_in = ("expert", None, "model")
+        w_spec_out = ("expert", "model", None)
+    else:
+        w_spec_in = (None, "data", "model")
+        w_spec_out = (None, "model", "data")
+    b.param("router", (d, E), (None, None))
+    b.param("w_gate", (E, d, f), w_spec_in)
+    b.param("w_in", (E, d, f), w_spec_in)
+    b.param("w_out", (E, f, d), w_spec_out)
+
+
+def moe_ffn(params, cfg, x, *, group_size: int = 256, constrain=None,
+            dropless: bool = False, inference: bool = False):
+    """x (B, S, d) -> (B, S, d).
+
+    Capacity policy (a dropped token corrupts *generation*, but is a
+    mild regularizer in *training* — Switch):
+      * dropless=True   — C = group size, exact; used for decode and any
+        small-group path (cheap there).
+      * inference=True  — serving prefill: capacity factor boosted to
+        >= 2.0 (P(drop) is ~4-sigma-rare at group>=256) and exact
+        dropless for small groups.  Exact sort-based dropless dispatch
+        is future kernel work (DESIGN.md §8).
+      * default         — training: cfg capacity_factor (1.25).
+    """
+    m = cfg.moe
+    act = act_fn(cfg.act)
+    constrain = constrain or (lambda a, spec: a)
+    B, S, d = x.shape
+    T = B * S
+    g = min(group_size, T)
+    while T % g:
+        g -= 1
+    N = T // g
+    E, k = m.num_experts, m.top_k
+    if inference and g <= 64:
+        dropless = True
+    if dropless:
+        C = g
+    else:
+        cf = max(m.capacity_factor, 2.0) if inference else m.capacity_factor
+        C = max(1, math.ceil(g * k / E * cf))
+
+    xg = x.reshape(N, g, d)
+    logits = jnp.einsum("ngd,de->nge", xg, params["router"])
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_k, idx_k = jax.lax.top_k(probs, k)          # (N,g,k)
+    gate_k = gate_k / jnp.clip(gate_k.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot_e = jax.nn.one_hot(idx_k, E, dtype=jnp.float32)   # (N,g,k,E)
+    flat = onehot_e.reshape(N, g * k, E)
+    pos = jnp.cumsum(flat, axis=1) - 1.0                      # (N,g*k,E)
+    pos = pos.reshape(N, g, k, E)
+    in_cap = (pos < C) & (onehot_e > 0)
+    pos_cap = jnp.clip(pos, 0, C - 1).astype(jnp.int32)
+    onehot_c = jax.nn.one_hot(pos_cap, C, dtype=jnp.float32)  # (N,g,k,E,C)
+    combine = jnp.einsum("ngk,ngke,ngkec->ngec",
+                         gate_k.astype(jnp.float32),
+                         (onehot_e * in_cap).astype(jnp.float32), onehot_c)
+    dispatch = (combine > 0).astype(x.dtype)                  # (N,g,E,C)
+
+    ep = (m.num_experts % 16 == 0 if m.partition == "auto"
+          else m.partition == "ep")
+    if ep:
+        # expert-space layout: e sharded ("expert" -> data axis), token
+        # d sharded over model (the capacity buffers stay 1/(ep*tp)
+        # sized), n replicated — the n@data -> e@data reshard IS the
+        # GShard dispatch all-to-all.
+        in_spec = (None, "expert", None, "model")
+        h_spec = (None, "expert", None, "model")
+    else:
+        # 'tp' layout: experts replicated, tokens stay data-sharded,
+        # hidden on model; expert weights FSDP-gathered per layer.
+        in_spec = ("batch", None, None, None)
+        h_spec = ("batch", None, None, "model")
+    # dispatch: compute locally in token space (n@data), THEN reshard to
+    # expert space (e@data) — the back-to-back constraints force GSPMD to
+    # lower the reshard as an all-to-all moving 1/|data| of the tokens;
+    # constraining only the einsum output lets it all-gather ALL tokens
+    # to every chip in f32 instead (2 GB/chip at jamba scale, §Perf log).
+    expert_in = jnp.einsum("ngec,ngd->necd", dispatch, xg)
+    expert_in = constrain(expert_in, ("batch", None, None, None))
+    expert_in = constrain(expert_in, in_spec)
+    h = act(jnp.einsum("necd,edf->necf", expert_in, params["w_gate"])) * \
+        jnp.einsum("necd,edf->necf", expert_in, params["w_in"])
+    h = constrain(h, h_spec)
+    out = jnp.einsum("necf,efd->necd", h, params["w_out"])
+    out = constrain(out, in_spec)
+    out = constrain(out, ("batch", None, None, None))  # combine: back to
+    y = jnp.einsum("ngec,necd->ngd", combine.astype(x.dtype), out)
+    y = constrain(y, ("batch", None, None))            # token space
+    return y.reshape(B, S, d)
+
+
+def init_dense_ffn(b: ParamBuilder, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.ffn_glu:
+        b.param("w_gate", (d, f), (None, "model"))
+    b.param("w_in", (d, f), (None, "model"))
+    b.param("w_out", (f, d), ("model", None))
+
+
+def dense_ffn(params, cfg, x, constrain=None):
+    act = act_fn(cfg.act)
+    constrain = constrain or (lambda a, spec: a)
+    if cfg.ffn_glu:
+        h = act(jnp.einsum("bsd,df->bsf", x, params["w_gate"])) * \
+            jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    else:
+        h = act(jnp.einsum("bsd,df->bsf", x, params["w_in"]))
+    # pin the hidden to TP-sharded: left to itself GSPMD sometimes picks
+    # full-f activations + replicated dW (dry-run §Perf log)
+    h = constrain(h, ("batch", None, "model"))
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"])

@@ -1,0 +1,303 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM.
+
+mLSTM — pre-up-projection block (proj factor 2).  Training/prefill uses the
+*chunkwise-recurrent* formulation: within a chunk the gated attention-like
+quadratic form is evaluated in parallel; the stabilized matrix state
+(C, n, m) is carried across chunks with ``lax.scan``.  Decode is the O(1)
+recurrent update.  This is the linear-cost analogue of the paper's parallel
+form and shares its numerics (exp input gate, sigmoid-in-log-space forget
+gate, max-stabilizer m).
+
+sLSTM — scalar memory with head-block-diagonal recurrent connections; it is
+inherently sequential (h_{t-1} feeds the gates), so prefill is a
+``lax.scan`` over tokens.  Post-up-projection GLU (proj factor 4/3) follows
+the cell, per the xLSTM paper.
+
+States replace the KV cache for these layers and flow through the same
+decode-owned allocation protocol (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamBuilder
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg):
+    x = cfg.xlstm
+    din = int(x.proj_factor * cfg.d_model)
+    H = x.num_heads
+    # pad inner dim to a multiple of heads
+    din = int(math.ceil(din / H) * H)
+    return din, H, din // H
+
+
+def init_mlstm(b: ParamBuilder, cfg):
+    d = cfg.d_model
+    din, H, _ = _mlstm_dims(cfg)
+    b.param("w_up", (d, 2 * din), (None, "model"))
+    b.param("wq", (din, din), (None, "model"))
+    b.param("wk", (din, din), (None, "model"))
+    b.param("wv", (din, din), (None, "model"))
+    # per-head scalar gates from the pre-projection features
+    b.param("w_i", (din, H), (None, None))
+    b.param("b_i", (H,), (None,), init="zeros")
+    b.param("w_f", (din, H), (None, None))
+    b.param("b_f", (H,), (None,),
+            init=lambda rng, shape: jnp.full(shape, 3.0, jnp.float32))
+    b.param("w_down", (din, d), ("model", None))
+
+
+def mlstm_init_state(cfg, batch: int, dtype=jnp.float32):
+    din, H, Dh = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, Dh, Dh), dtype),
+        "n": jnp.zeros((batch, H, Dh), dtype),
+        "m": jnp.full((batch, H), NEG_INF, dtype),
+    }
+
+
+def _mlstm_qkvgates(params, cfg, x):
+    """x (B,L,d) -> q,k,v (B,L,H,Dh); log_i, log_f (B,L,H) f32."""
+    din, H, Dh = _mlstm_dims(cfg)
+    B, L, _ = x.shape
+    up = jnp.einsum("bld,dk->blk", x, params["w_up"])
+    xs, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("blk,kj->blj", xs, params["wq"]).reshape(B, L, H, Dh)
+    k = jnp.einsum("blk,kj->blj", xs, params["wk"]).reshape(B, L, H, Dh)
+    k = k / (Dh ** 0.5)
+    v = jnp.einsum("blk,kj->blj", xs, params["wv"]).reshape(B, L, H, Dh)
+    xs32 = xs.astype(jnp.float32)
+    log_i = jnp.einsum("blk,kh->blh", xs32,
+                       params["w_i"].astype(jnp.float32)) + params["b_i"]
+    pre_f = jnp.einsum("blk,kh->blh", xs32,
+                       params["w_f"].astype(jnp.float32)) + params["b_f"]
+    log_f = jax.nn.log_sigmoid(pre_f)
+    return q, k, v, log_i, log_f, z
+
+
+def mlstm_chunk_scan(q, k, v, log_i, log_f, state, *, chunk: int = 128):
+    """Chunkwise-recurrent mLSTM.  q/k/v (B,L,H,Dh), gates (B,L,H) f32.
+
+    Returns h (B,L,H,Dh) and the final (C, n, m) state.
+    """
+    B, L, H, Dh = q.shape
+    c = min(chunk, L)
+    while L % c:
+        c -= 1
+    nc = L // c
+
+    def chunked(t):
+        return t.reshape(B, nc, c, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    qc, kc, vc = map(chunked, (q, k, v))
+    lic, lfc = map(chunked, (log_i, log_f))
+
+    @jax.checkpoint
+    def body(carry, args):
+        C0, n0, m0 = carry
+        qt, kt, vt, li, lf = args          # (B,c,H,*)
+        qt32 = qt.astype(jnp.float32)
+        kt32 = kt.astype(jnp.float32)
+        vt32 = vt.astype(jnp.float32)
+        F = jnp.cumsum(lf, axis=1)          # (B,c,H) inclusive log-f prefix
+        # intra-chunk decay matrix D[t,s] = F_t - F_s + log i_s for s<=t
+        Dmat = (F[:, :, None] - F[:, None, :] + li[:, None, :, :])
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        Dmat = jnp.where(tri[None, :, :, None], Dmat, NEG_INF)  # (B,t,s,H)
+        m_intra = jnp.max(Dmat, axis=2)                  # (B,c,H)
+        m_inter = F + m0[:, None]                        # (B,c,H)
+        m_t = jnp.maximum(m_intra, m_inter)
+        w_intra = jnp.exp(Dmat - m_t[:, :, None])        # (B,t,s,H)
+        w_inter = jnp.exp(m_inter - m_t)                 # (B,c,H)
+        scores = jnp.einsum("bthd,bshd->btsh", qt32, kt32)
+        num = jnp.einsum("btsh,btsh,bshd->bthd", scores, w_intra, vt32)
+        num += w_inter[..., None] * jnp.einsum("bthd,bhde->bthe", qt32, C0)
+        den = jnp.einsum("btsh,btsh->bth", scores, w_intra)
+        den += w_inter * jnp.einsum("bthd,bhd->bth", qt32, n0)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- state to end of chunk -------------------------------------
+        Fc = F[:, -1]                                     # (B,H)
+        decay_s = Fc[:, None] - F + li                    # (B,c,H)
+        m_new = jnp.maximum(Fc + m0, jnp.max(decay_s, axis=1))
+        w_s = jnp.exp(decay_s - m_new[:, None])           # (B,c,H)
+        w_0 = jnp.exp(Fc + m0 - m_new)                    # (B,H)
+        C_new = w_0[..., None, None] * C0 + \
+            jnp.einsum("bsh,bshd,bshe->bhde", w_s, kt32, vt32)
+        n_new = w_0[..., None] * n0 + jnp.einsum("bsh,bshd->bhd", w_s, kt32)
+        return (C_new, n_new, m_new), h
+
+    init = (state["C"].astype(jnp.float32), state["n"].astype(jnp.float32),
+            state["m"].astype(jnp.float32))
+    (C, n, m), hs = jax.lax.scan(body, init, (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, L, H, Dh)
+    return h, {"C": C, "n": n, "m": m}
+
+
+def mlstm_forward(params, cfg, x, *, state=None, return_state=False,
+                  chunk: int = 128):
+    B, L, _ = x.shape
+    din, H, Dh = _mlstm_dims(cfg)
+    q, k, v, log_i, log_f, z = _mlstm_qkvgates(params, cfg, x)
+    st = state if state is not None else mlstm_init_state(cfg, B)
+    h, new_state = mlstm_chunk_scan(q, k, v, log_i, log_f, st, chunk=chunk)
+    h = h.reshape(B, L, din).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("blk,kd->bld", h, params["w_down"])
+    if return_state:
+        return out, new_state
+    return out
+
+
+def mlstm_decode_step(params, cfg, x, state):
+    """x (B,1,d) -> (out (B,1,d), state).  O(1) recurrent update."""
+    B = x.shape[0]
+    din, H, Dh = _mlstm_dims(cfg)
+    q, k, v, log_i, log_f, z = _mlstm_qkvgates(params, cfg, x)
+    q1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    li, lf = log_i[:, 0], log_f[:, 0]                    # (B,H)
+    m0, C0, n0 = state["m"], state["C"], state["n"]
+    m_t = jnp.maximum(lf + m0, li)
+    fp = jnp.exp(lf + m0 - m_t)
+    ip = jnp.exp(li - m_t)
+    C = fp[..., None, None] * C0 + \
+        ip[..., None, None] * jnp.einsum("bhd,bhe->bhde", k1, v1)
+    n = fp[..., None] * n0 + ip[..., None] * k1
+    num = jnp.einsum("bhd,bhde->bhe", q1, C)
+    den = jnp.einsum("bhd,bhd->bh", q1, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+    h = h.reshape(B, 1, din).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("blk,kd->bld", h, params["w_down"])
+    return out, {"C": C, "n": n, "m": m_t}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def _slstm_dims(cfg):
+    H = cfg.xlstm.num_heads
+    d = cfg.d_model
+    assert d % H == 0
+    return H, d // H
+
+
+def init_slstm(b: ParamBuilder, cfg):
+    d = cfg.d_model
+    H, Dh = _slstm_dims(cfg)
+    for g in ("z", "i", "f", "o"):
+        b.param(f"w_{g}", (d, d), (None, "model"))
+        # head-block-diagonal recurrent weights
+        b.param(f"r_{g}", (H, Dh, Dh), (None, None, None),
+                scale=1.0 / math.sqrt(Dh))
+        b.param(f"b_{g}", (d,), (None,),
+                init="zeros" if g != "f" else
+                (lambda rng, shape: jnp.full(shape, 3.0, jnp.float32)))
+    # post-up-projection GLU (factor 4/3)
+    f = int(math.ceil(4 * d / 3 / 64) * 64)
+    b.param("up_gate", (d, f), (None, "model"))
+    b.param("up", (d, f), (None, "model"))
+    b.param("down", (f, d), ("model", None))
+
+
+def slstm_init_state(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), dtype),
+        "n": jnp.zeros((batch, d), dtype),
+        "h": jnp.zeros((batch, d), dtype),
+        "m": jnp.full((batch, d), NEG_INF, dtype),
+    }
+
+
+def _slstm_cell(params, cfg, xt, st, wx=None):
+    """One step.  xt (B,d) f32; state leaves (B,d) f32.
+
+    ``wx``: precomputed input projections {g: (B,d)} — the W_g·x_t terms
+    are NOT recurrent and must be batched outside the token scan: inside
+    it, their weight-gradient all-reduce runs once PER TOKEN per layer
+    (360 GB/chip/step at xlstm/train_4k, §Perf log)."""
+    H, Dh = _slstm_dims(cfg)
+    B, d = xt.shape
+    hprev = st["h"].reshape(B, H, Dh)
+
+    def gate(g):
+        w = wx[g] if wx is not None else \
+            xt @ params[f"w_{g}"].astype(jnp.float32)
+        rh = jnp.einsum("bhd,hde->bhe", hprev,
+                        params[f"r_{g}"].astype(jnp.float32)).reshape(B, d)
+        return w + rh + params[f"b_{g}"].astype(jnp.float32)
+
+    z = jnp.tanh(gate("z"))
+    log_i = gate("i")
+    log_f = jax.nn.log_sigmoid(gate("f"))
+    o = jax.nn.sigmoid(gate("o"))
+    m_t = jnp.maximum(log_f + st["m"], log_i)
+    fp = jnp.exp(log_f + st["m"] - m_t)
+    ip = jnp.exp(log_i - m_t)
+    c = fp * st["c"] + ip * z
+    n = fp * st["n"] + ip
+    h = o * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_t}
+
+
+def slstm_forward(params, cfg, x, *, state=None, return_state=False,
+                  chunk: int = 64):
+    """x (B,L,d).  Sequential over tokens (inherent recurrence), but:
+    input projections are batched OUTSIDE the scan, and the scan runs in
+    checkpointed chunks so the recurrent-weight grad reduction happens
+    per chunk, not per token."""
+    B, L, d = x.shape
+    st = state if state is not None else slstm_init_state(cfg, B)
+    st = {k: v.astype(jnp.float32) for k, v in st.items()}
+    x32 = x.astype(jnp.float32)
+    # batched, non-recurrent input projections (L, B, d) per gate
+    wx_all = {g: jnp.einsum("bld,de->lbe", x32,
+                            params[f"w_{g}"].astype(jnp.float32))
+              for g in ("z", "i", "f", "o")}
+
+    c = min(chunk, L)
+    while L % c:
+        c -= 1
+    nc = L // c
+
+    def tok_body(s, wx_t):
+        s2 = _slstm_cell(params, cfg, s["h"], s, wx=wx_t)
+        return s2, s2["h"]
+
+    @jax.checkpoint
+    def chunk_body(s, wx_c):
+        return jax.lax.scan(tok_body, s, wx_c)
+
+    wx_chunks = jax.tree.map(
+        lambda t: t.reshape(nc, c, B, d), wx_all)
+    st, hs = jax.lax.scan(chunk_body, st, wx_chunks)
+    h = hs.reshape(L, B, d).transpose(1, 0, 2).astype(x.dtype)  # (B,L,d)
+    y = jax.nn.silu(jnp.einsum("bld,df->blf", h, params["up_gate"])) * \
+        jnp.einsum("bld,df->blf", h, params["up"])
+    out = jnp.einsum("blf,fd->bld", y, params["down"])
+    if return_state:
+        return out, st
+    return out
+
+
+def slstm_decode_step(params, cfg, x, state):
+    """x (B,1,d)."""
+    st = {k: v.astype(jnp.float32) for k, v in state.items()}
+    s2 = _slstm_cell(params, cfg, x[:, 0].astype(jnp.float32), st)
+    h = s2["h"][:, None].astype(x.dtype)
+    y = jax.nn.silu(jnp.einsum("bld,df->blf", h, params["up_gate"])) * \
+        jnp.einsum("bld,df->blf", h, params["up"])
+    out = jnp.einsum("blf,fd->bld", y, params["down"])
+    return out, s2

@@ -1,0 +1,181 @@
+"""Analytic per-step FLOP / HBM-byte / collective-byte counts.
+
+These drive the discrete-event simulator's step durations (the container
+has no TPU).  The same three terms are independently derived from the
+*compiled* HLO by launch/roofline.py for EXPERIMENTS.md §Roofline; tests
+assert the analytic and HLO-derived FLOP counts agree within tolerance,
+which keeps the simulator honest.
+
+Conventions:
+  * matmul FLOPs = 2*M*N*K;   causal attention scores halved.
+  * weights are streamed from HBM once per step (valid for serving batch
+    sizes; prefill is compute-bound anyway so its byte term rarely binds).
+  * TP collectives: 2 all-reduces per block over the activation slab,
+    ring cost 2*(tp-1)/tp of the payload per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.perfmodel.hw import HardwareSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCost:
+    flops: float          # total FLOPs for the step (all chips)
+    hbm_bytes: float      # HBM traffic per chip-group, summed over chips
+    coll_bytes: float     # per-chip collective payload bytes
+
+    def __add__(self, other: "StepCost") -> "StepCost":
+        return StepCost(self.flops + other.flops,
+                        self.hbm_bytes + other.hbm_bytes,
+                        self.coll_bytes + other.coll_bytes)
+
+    def scale(self, k: float) -> "StepCost":
+        return StepCost(self.flops * k, self.hbm_bytes * k,
+                        self.coll_bytes * k)
+
+
+ZERO_COST = StepCost(0.0, 0.0, 0.0)
+
+
+def model_flops_per_token(cfg) -> float:
+    """6*N_active per trained token; 2*N_active per inferred token is
+    obtained by scaling."""
+    return 6.0 * cfg.active_param_count()
+
+
+def weight_bytes(cfg, dtype_bytes: int = 2) -> float:
+    """Bytes of weights streamed per step (MoE: only routed experts are
+    read in expectation when the batch is small; we charge min(full,
+    per-token-active * tokens) at the call sites)."""
+    return cfg.param_count() * dtype_bytes
+
+
+def active_weight_bytes(cfg, tokens: int, dtype_bytes: int = 2) -> float:
+    """Expected weight bytes touched by `tokens` tokens in one step.
+
+    Dense: all weights.  MoE: each token touches top_k experts; with E
+    experts the expected fraction of expert weights touched is
+    1-(1-k/E)^tokens, capped at 1.
+    """
+    if cfg.moe is None:
+        return cfg.param_count() * dtype_bytes
+    total = cfg.param_count()
+    moe_layers = sum(1 for i in range(cfg.num_layers)
+                     if cfg.ffn_at(i) == "moe")
+    glu = 3
+    expert_params = moe_layers * cfg.moe.num_experts * glu * \
+        cfg.d_model * cfg.moe.d_ff_expert
+    rest = total - expert_params
+    p_touch = 1.0 - (1.0 - cfg.moe.top_k / cfg.moe.num_experts) ** tokens
+    return (rest + expert_params * min(1.0, p_touch)) * dtype_bytes
+
+
+def kv_read_bytes(cfg, context_tokens: float, dtype_bytes: int = 2) -> float:
+    """KV bytes read for one query token against `context_tokens` cache."""
+    per_tok = cfg.kv_bytes_per_token(dtype_bytes)
+    if cfg.sliding_window:
+        context_tokens = min(context_tokens, cfg.sliding_window)
+    return per_tok * context_tokens
+
+
+def _attn_flops(cfg, q_tokens: float, ctx_tokens: float,
+                causal_half: bool) -> float:
+    """Score + AV FLOPs across attention layers for q_tokens queries
+    attending to ctx_tokens keys (per sequence averages are fine)."""
+    if cfg.sliding_window:
+        ctx_tokens = min(ctx_tokens, cfg.sliding_window)
+    per_layer = 2 * 2 * q_tokens * ctx_tokens * cfg.num_heads * cfg.head_dim
+    if causal_half:
+        per_layer *= 0.5
+    return per_layer * cfg.attn_layer_count
+
+
+def _ssm_flops(cfg, tokens: float) -> float:
+    """Selective-scan / xLSTM recurrence FLOPs (non-matmul part)."""
+    total = 0.0
+    for i in range(cfg.num_layers):
+        mx = cfg.mixer_at(i)
+        if mx == "mamba":
+            m = cfg.mamba
+            total += 9.0 * tokens * cfg.d_inner * m.d_state
+        elif mx == "mlstm":
+            x = cfg.xlstm
+            din = int(x.proj_factor * cfg.d_model)
+            dh = din // x.num_heads
+            total += 8.0 * tokens * din * dh
+        elif mx == "slstm":
+            total += 10.0 * tokens * cfg.d_model
+    return total
+
+
+def _tp_collective_bytes(cfg, tokens: float, tp: int,
+                         dtype_bytes: int = 2) -> float:
+    """2 all-reduces per block of the (tokens, d_model) slab."""
+    if tp <= 1:
+        return 0.0
+    payload = tokens * cfg.d_model * dtype_bytes
+    ring = 2.0 * (tp - 1) / tp
+    return 2.0 * cfg.num_layers * payload * ring
+
+
+def prefill_cost(cfg, seq_lens: Sequence[int], tp: int = 1,
+                 dtype_bytes: int = 2) -> StepCost:
+    """One prefill step over whole prompts (RAPID: no chunking)."""
+    T = float(sum(seq_lens))
+    if T == 0:
+        return ZERO_COST
+    sq = float(sum(s * s for s in seq_lens))
+    del sq
+    n_active = cfg.active_param_count()
+    flops = 2.0 * n_active * T + \
+        (sum(_attn_flops(cfg, s, s, True) for s in seq_lens)
+         if cfg.attn_layer_count else 0.0) + _ssm_flops(cfg, T)
+    bytes_ = active_weight_bytes(cfg, int(T), dtype_bytes)
+    bytes_ += 2.0 * T * cfg.kv_bytes_per_token(dtype_bytes)  # KV write+read
+    bytes_ += 4.0 * T * cfg.d_model * dtype_bytes            # act traffic
+    coll = _tp_collective_bytes(cfg, T, tp, dtype_bytes) / max(tp, 1)
+    return StepCost(flops, bytes_, coll)
+
+
+def chunk_prefill_cost(cfg, chunk_tokens: int, ctx_so_far: int,
+                       tp: int = 1, dtype_bytes: int = 2) -> StepCost:
+    """One chunk of a chunked prefill: chunk_tokens queries attend to
+    (ctx_so_far + chunk) keys — the repeated KV re-read is the chunking
+    overhead the paper quantifies in §3.1."""
+    T = float(chunk_tokens)
+    n_active = cfg.active_param_count()
+    flops = 2.0 * n_active * T + \
+        _attn_flops(cfg, T, ctx_so_far + T / 2, False) + _ssm_flops(cfg, T)
+    bytes_ = active_weight_bytes(cfg, int(T), dtype_bytes)
+    bytes_ += kv_read_bytes(cfg, ctx_so_far, dtype_bytes) * 1.0
+    bytes_ += 2.0 * T * cfg.kv_bytes_per_token(dtype_bytes)
+    bytes_ += 4.0 * T * cfg.d_model * dtype_bytes
+    coll = _tp_collective_bytes(cfg, T, tp, dtype_bytes) / max(tp, 1)
+    return StepCost(flops, bytes_, coll)
+
+
+def decode_cost(cfg, batch: int, ctx_tokens_total: float, tp: int = 1,
+                dtype_bytes: int = 2) -> StepCost:
+    """One decode iteration: `batch` single-token queries, total live
+    context of ctx_tokens_total across the batch."""
+    if batch == 0:
+        return ZERO_COST
+    B = float(batch)
+    n_active = cfg.active_param_count()
+    flops = 2.0 * n_active * B
+    flops += _attn_flops(cfg, B, ctx_tokens_total / B, False)
+    flops += _ssm_flops(cfg, B)
+    bytes_ = active_weight_bytes(cfg, batch, dtype_bytes)
+    bytes_ += kv_read_bytes(cfg, ctx_tokens_total / B, dtype_bytes) * B
+    bytes_ += B * cfg.state_bytes_per_seq(dtype_bytes)
+    bytes_ += 4.0 * B * cfg.d_model * dtype_bytes
+    coll = _tp_collective_bytes(cfg, B, tp, dtype_bytes) / max(tp, 1)
+    return StepCost(flops, bytes_, coll)
+
+
+def kv_transfer_bytes(cfg, prompt_len: int, dtype_bytes: int = 2) -> float:
+    """Disaggregated serving: KV moved prefill->decode instance."""
+    return float(prompt_len) * cfg.kv_bytes_per_token(dtype_bytes)

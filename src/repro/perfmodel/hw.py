@@ -1,0 +1,34 @@
+"""Hardware constants.  TPU v5e is the target part (per task spec):
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI, 16 GB HBM."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float          # bf16 FLOP/s per chip
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per link
+    dcn_bw: float              # bytes/s per chip, cross-pod
+    hbm_bytes: int             # capacity per chip
+    # host-side per-step scheduling cost (hidden under async scheduling)
+    sched_overhead_s: float = 2e-3
+    # device-side per-program dispatch latency
+    launch_overhead_s: float = 50e-6
+
+    @property
+    def balance(self) -> float:
+        """Machine balance: FLOPs per byte at the roofline ridge."""
+        return self.peak_flops / self.hbm_bw
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    dcn_bw=25e9,
+    hbm_bytes=16 * 1024 ** 3,
+)

@@ -1,0 +1,3 @@
+from repro.serving.sim import EventLoop  # noqa: F401
+from repro.serving.traces import TRACES, generate_trace, TraceSpec  # noqa: F401
+from repro.serving.metrics import summarize, RequestRecord  # noqa: F401

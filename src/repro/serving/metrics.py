@@ -1,0 +1,87 @@
+"""TTFT / ITL / throughput / goodput metrics (paper §5.2-§5.3).
+
+SLO attainment (paper's definition):
+  * ITL : the request's p95 inter-token latency must not exceed itl_ms.
+  * TTFT: length-dependent ceiling — prompts of 0-1000 tokens within 1 s,
+          1000-2000 within 2 s, proportionally thereafter.
+
+goodput        = SLO-satisfying requests completed per second (both SLOs)
+itl_goodput    = same with only the ITL constraint (paper Fig 10)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.config import SLOConfig
+from repro.core.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    rid: int
+    arrival: float
+    prompt_len: int
+    output_len: int
+    ttft: Optional[float]
+    itl_p95: Optional[float]
+    finish: Optional[float]
+    preemptions: int = 0
+
+    @classmethod
+    def from_request(cls, r: Request) -> "RequestRecord":
+        itls = r.itls
+        return cls(
+            rid=r.rid, arrival=r.arrival, prompt_len=r.prompt_len,
+            output_len=r.tokens_generated, ttft=r.ttft,
+            itl_p95=float(np.percentile(itls, 95)) if itls else None,
+            finish=r.t_finish, preemptions=r.preemptions)
+
+
+def ttft_ceiling(prompt_len: int, slo: SLOConfig) -> float:
+    return slo.ttft_base_s * max(
+        1, -(-prompt_len // slo.ttft_tokens_per_ceiling))
+
+
+def meets_itl(rec: RequestRecord, slo: SLOConfig) -> bool:
+    if rec.finish is None:
+        return False
+    return rec.itl_p95 is None or rec.itl_p95 <= slo.itl_ms / 1e3
+
+
+def meets_ttft(rec: RequestRecord, slo: SLOConfig) -> bool:
+    if rec.finish is None or rec.ttft is None:
+        return False
+    return rec.ttft <= ttft_ceiling(rec.prompt_len, slo)
+
+
+def _pct(vals: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(vals), q)) if len(vals) else \
+        float("nan")
+
+
+def summarize(records: List[RequestRecord], slo: SLOConfig,
+              span_s: float) -> Dict[str, float]:
+    done = [r for r in records if r.finish is not None]
+    ttfts = [r.ttft for r in done if r.ttft is not None]
+    itls = [r.itl_p95 for r in done if r.itl_p95 is not None]
+    tokens = sum(r.output_len for r in done)
+    ok_both = [r for r in done if meets_itl(r, slo) and meets_ttft(r, slo)]
+    ok_itl = [r for r in done if meets_itl(r, slo)]
+    return {
+        "requests": len(records),
+        "completed": len(done),
+        "tokens": tokens,
+        "throughput_tok_s": tokens / span_s if span_s else 0.0,
+        "throughput_req_s": len(done) / span_s if span_s else 0.0,
+        "goodput_req_s": len(ok_both) / span_s if span_s else 0.0,
+        "itl_goodput_req_s": len(ok_itl) / span_s if span_s else 0.0,
+        "slo_attainment": len(ok_both) / len(done) if done else 0.0,
+        "ttft_p50_s": _pct(ttfts, 50),
+        "ttft_p95_s": _pct(ttfts, 95),
+        "itl_p50_s": _pct(itls, 50),
+        "itl_p95_s": _pct(itls, 95),
+        "preemptions": sum(r.preemptions for r in done),
+    }

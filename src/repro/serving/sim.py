@@ -1,0 +1,41 @@
+"""Virtual-clock discrete-event loop.
+
+The serving engines are real control-flow code (queues, block allocation,
+scheduling decisions); only *durations* come from the perfmodel.  The loop
+is a plain heapq of (time, seq, callback) — engines schedule their own
+step completions; arrivals are seeded up front from a trace.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, Optional
+
+
+class EventLoop:
+    def __init__(self):
+        self._heap = []
+        self._seq = itertools.count()
+        self.now = 0.0
+
+    def at(self, t: float, fn: Callable[[], None]) -> None:
+        if t < self.now - 1e-12:
+            t = self.now
+        heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def after(self, dt: float, fn: Callable[[], None]) -> None:
+        self.at(self.now + dt, fn)
+
+    def run(self, until: Optional[float] = None,
+            max_events: int = 50_000_000) -> None:
+        n = 0
+        while self._heap and n < max_events:
+            t, _, fn = heapq.heappop(self._heap)
+            if until is not None and t > until:
+                self.now = until
+                return
+            self.now = t
+            fn()
+            n += 1
+        if n >= max_events:
+            raise RuntimeError("event budget exceeded (runaway sim?)")

@@ -1,0 +1,141 @@
+"""Logical-axis -> mesh-axis translation (GSPMD/pjit substrate).
+
+Params and activations carry *logical* axis names ("model", "batch",
+"model_ep", None).  A ``ShardingRules`` maps logical names to mesh axes for
+a given mesh topology; FSDP additionally shards one replicated dim of each
+large weight over the data axis (ZeRO-3-style parameter sharding, needed
+for the >=70B-class archs to fit 16 GB/chip — DESIGN.md §4).
+
+Single pod : mesh ("data", "model") = (16, 16)
+Multi pod  : mesh ("pod", "data", "model") = (2, 16, 16); "pod" is the
+             outermost data-parallel axis (DCN), TP stays inside a pod
+             (ICI), FSDP param sharding stays inside a pod so parameter
+             all-gathers never cross DCN.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    model: Union[str, tuple, None] = "model"
+    batch: Union[str, tuple, None] = "data"       # activations / tokens
+    data: Union[str, tuple, None] = "data"        # param FSDP dim
+    seq: Union[str, tuple, None] = None           # sequence parallelism
+    # expert parallelism: the expert dim lives on the DATA axis (GShard
+    # layout — dispatch/combine lower to all-to-alls between the token
+    # sharding n@data and the expert sharding e@data).  Putting experts
+    # or their hidden dim on "data" via FSDP instead forces GSPMD to
+    # all-gather the token-capacity tensors (+7 GB/chip at jamba scale,
+    # dry-run buffer dump — EXPERIMENTS.md §Perf).
+    expert: Union[str, tuple, None] = "data"
+
+    def resolve(self, name):
+        if name is None:
+            return None
+        return getattr(self, name)
+
+
+def rules_for_mesh(mesh: Mesh) -> ShardingRules:
+    if "pod" in mesh.axis_names:
+        return ShardingRules(batch=("pod", "data"))
+    return ShardingRules()
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_to_pspec(spec, mesh: Mesh, rules: ShardingRules,
+                  shape=None) -> P:
+    """Translate a logical spec tuple to a PartitionSpec.
+
+    Drops shardings that do not divide the dim evenly (with ``shape``)
+    rather than failing — the caller's roofline accounting still sees the
+    padded/logical sizes via the config.
+    """
+    out = []
+    for i, name in enumerate(spec):
+        axes = rules.resolve(name)
+        if axes is not None and shape is not None:
+            if shape[i] % _axis_size(mesh, axes):
+                axes = None
+        out.append(axes)
+    return P(*out)
+
+
+def _fsdp_spec(spec, shape, mesh: Mesh, rules: ShardingRules,
+               min_size: int = 1 << 20):
+    """Shard the first replicated dim over the data axis when it divides.
+
+    Only applied to weights with >= min_size elements — biases and norm
+    scales stay replicated (tiny, and odd dims).  Leaves that already
+    consume the data axis ("expert"/"data" logical names) are skipped.
+    """
+    if shape is None or int(np.prod(shape)) < min_size:
+        return spec
+    if any(s in ("data", "expert") for s in spec):
+        return spec
+    dp = _axis_size(mesh, rules.data)
+    if dp == 1:
+        return spec
+    spec = list(spec)
+    # prefer the largest eligible dim (cheapest all-gather layout)
+    cand = [i for i, name in enumerate(spec)
+            if name is None and shape[i] % dp == 0]
+    if not cand:
+        return spec
+    best = max(cand, key=lambda i: shape[i])
+    spec[best] = "data"
+    return tuple(spec)
+
+
+def param_sharding(specs, shapes, mesh: Mesh, *,
+                   rules: Optional[ShardingRules] = None,
+                   fsdp: bool = False):
+    """Tree of NamedShardings for a (specs, shapes) pair of trees."""
+    rules = rules or rules_for_mesh(mesh)
+
+    def one(spec, shp):
+        shape = shp.shape if hasattr(shp, "shape") else tuple(shp)
+        s = tuple(spec)
+        if fsdp:
+            s = _fsdp_spec(s, shape, mesh, rules)
+        return NamedSharding(mesh, spec_to_pspec(s, mesh, rules, shape))
+
+    return jax.tree.map(one, specs, shapes,
+                        is_leaf=lambda s: isinstance(s, tuple))
+
+
+def input_sharding(mesh: Mesh, *logical_axes,
+                   rules: Optional[ShardingRules] = None):
+    rules = rules or rules_for_mesh(mesh)
+    return NamedSharding(mesh, spec_to_pspec(logical_axes, mesh, rules))
+
+
+def make_constrain(mesh: Mesh, rules: Optional[ShardingRules] = None):
+    """Returns constrain(a, logical_spec) for use inside jitted fns."""
+    rules = rules or rules_for_mesh(mesh)
+
+    def constrain(a, spec):
+        pspec = spec_to_pspec(tuple(spec), mesh, rules, a.shape)
+        return jax.lax.with_sharding_constraint(a, NamedSharding(mesh, pspec))
+
+    return constrain
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

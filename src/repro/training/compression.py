@@ -1,0 +1,44 @@
+"""Gradient compression for cross-pod (DCN) reductions.
+
+int8 block-quantized gradients with per-block f32 scales: 4x less DCN
+traffic for the pod-level all-reduce (the ICI-level reduce-scatter stays
+full precision).  The quantize->reduce->dequantize round trip is modeled
+here as quantize->dequantize (GSPMD inserts the actual reduction); tests
+bound the quantization error and the training example verifies loss
+still descends with compression on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quantize(g):
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), g.shape, pad
+
+
+def _dequantize(q, scale, shape, pad):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def compress_gradients(grads):
+    return jax.tree.map(_quantize, grads)
+
+
+def decompress_gradients(compressed):
+    return jax.tree.map(
+        lambda t: _dequantize(*t), compressed,
+        is_leaf=lambda t: isinstance(t, tuple) and len(t) == 4
+        and hasattr(t[0], "dtype"))

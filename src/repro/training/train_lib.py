@@ -1,0 +1,136 @@
+"""Training step builder: microbatched grad accumulation + remat + ZeRO.
+
+The built ``train_step(state, batch) -> (state, metrics)`` is what the
+multi-pod dry-run lowers for the ``train_4k`` shape of every arch, and
+what launch/train.py jits for the real CPU example run.  Gradient
+accumulation is a ``lax.scan`` over microbatches (sequential — peak
+activation memory is one microbatch); per-layer remat is on by default
+(transformer.forward(remat=True)); gradient compression (int8 +
+per-leaf scale) optionally wraps the cross-pod reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import lm_loss
+from repro.training.compression import (compress_gradients,
+                                        decompress_gradients)
+from repro.training.optimizer import (AdamWState, OptConfig, adamw_init,
+                                      adamw_update)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+
+    def tree_flatten(self):  # pragma: no cover - pytree protocol
+        return (self.params, self.opt.mu, self.opt.nu, self.opt.count,
+                self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):  # pragma: no cover
+        params, mu, nu, count, step = children
+        return cls(params, AdamWState(mu, nu, count), step)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: s.tree_flatten(),
+    TrainState.tree_unflatten)
+
+
+def train_state_specs(param_specs):
+    """Logical specs for the TrainState pytree (moments mirror params)."""
+    return TrainState(params=param_specs,
+                      opt=AdamWState(mu=param_specs, nu=param_specs,
+                                     count=()),
+                      step=())
+
+
+def init_train_state(rng, cfg, opt: OptConfig, tp: int = 1) -> TrainState:
+    from repro.models.transformer import init_model
+    params, _ = init_model(rng, cfg, tp)
+    return TrainState(params=params, opt=adamw_init(params, opt),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg, opt: OptConfig, tp: int = 1, *,
+                    microbatches: int = 1, impl: str = "ref",
+                    constrain=None, remat: bool = True,
+                    compress_grads: bool = False,
+                    grad_shardings: Optional[Any] = None) -> Callable:
+    """Returns train_step(state, batch)->(state, metrics).
+
+    batch: {"inputs": (B,S) int32 | (B,S,d) f32, "labels": (B,S) int32,
+            "positions": (B,S[,3]) int32}.  B must divide by microbatches;
+    each microbatch is forward+backward'd inside a lax.scan; gradients
+    accumulate in ``opt.grad_accum_dtype`` (bf16 for the >=70B archs —
+    f32 grads alone would be 1.6 TB for jamba-398B).
+
+    ``grad_shardings`` (tree of NamedSharding matching params) pins the
+    accumulator's layout: without it GSPMD replicates the scan carry and
+    every device holds FULL f32 gradients (+65 GB/chip at 398B scale —
+    found by the dry-run, see EXPERIMENTS.md §Perf).
+    """
+    constrain = constrain or (lambda a, spec: a)
+    acc_dt = jnp.dtype(opt.grad_accum_dtype)
+
+    def loss_fn(params, inputs, labels, positions):
+        return lm_loss(params, cfg, inputs, labels, positions, tp,
+                       impl=impl, constrain=constrain, remat=remat)
+
+    def pin(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def train_step(state: TrainState, batch):
+        B = batch["labels"].shape[0]
+        mb = microbatches
+        assert B % mb == 0, (B, mb)
+
+        def split(x):
+            return x.reshape(mb, B // mb, *x.shape[1:])
+
+        mbatch = jax.tree.map(split, batch)
+        g_zero = pin(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dt), state.params))
+
+        def accum(carry, mb_batch):
+            g_acc, loss_acc = carry
+            # barrier the params INSIDE the loop body: the CPU backend
+            # upcasts bf16 weights to f32 at each dot and LICM would
+            # otherwise hoist those converts out of the scan, pinning
+            # f32 copies of all expert weights for the whole step
+            # (+5 GB/chip at jamba scale, §Perf log).  No-op on TPU
+            # (bf16 feeds the MXU directly).
+            # (tied to the loop-varying microbatch: a barrier over the
+            # params alone is itself loop-invariant and hoists too)
+            params_local, mb_batch = jax.lax.optimization_barrier(
+                (state.params, mb_batch))
+            loss, g = jax.value_and_grad(loss_fn)(
+                params_local, mb_batch["inputs"], mb_batch["labels"],
+                mb_batch["positions"])
+            g_acc = pin(jax.tree.map(
+                lambda a, b: a + (b / mb).astype(acc_dt), g_acc, pin(g)))
+            return (g_acc, loss_acc + loss / mb), None
+
+        (grads, loss), _ = jax.lax.scan(accum, (g_zero, 0.0), mbatch)
+        if compress_grads:
+            grads = decompress_gradients(compress_gradients(grads))
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads,
+                             state.params)
+        params, opt_state, om = adamw_update(state.params, grads,
+                                             state.opt, opt)
+        metrics = {"loss": loss, **om, "step": state.step + 1}
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,221 @@
+"""Serving-engine behaviour + property tests (hypothesis).
+
+The invariants the RAPID protocol (paper Fig 4) must keep:
+  * conservation — every submitted request finishes exactly once (given
+    enough virtual time), emits <= max_new_tokens tokens, monotone
+    token times;
+  * decode-owned KV — block allocation precedes prefill; blocks are
+    freed exactly once; the pool never leaks (all blocks free at drain);
+  * lock-freedom proxy — prefill and decode steps overlap in virtual
+    time under concurrent load;
+  * SLO structure — RAPID's p95 ITL <= hybrid's at equal load (the
+    paper's core claim).
+"""
+import copy
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core import (DisaggEngine, HybridEngine, RapidEngine,
+                        build_decode_profile, make_engine)
+from repro.core.request import Request
+from repro.kvcache import BlockAllocator, KVCacheManager, OutOfBlocks
+from repro.perfmodel.hw import TPU_V5E
+from repro.serving import TRACES, generate_trace, summarize
+
+CFG = get_config("llama3-70b")
+SERVE = dict(chips=32, slo=SLOConfig(itl_ms=100.0),
+             disagg_split=(16, 16), max_batch_slots=128)
+
+
+def _run(mode, reqs, **over):
+    serve = ServeConfig(mode=mode, **{**SERVE, **over})
+    eng = make_engine(mode, CFG, serve)
+    recs, span = eng.run([copy.deepcopy(r) for r in reqs])
+    return eng, recs, span
+
+
+# ---------------------------------------------------------------------------
+# Block allocator / KV manager properties
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.integers(1, 500), st.integers(0, 40)),
+                min_size=1, max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_kv_manager_never_leaks(ops):
+    """Allocate prompts, append random decode tokens, free — pool full."""
+    kv = KVCacheManager(num_blocks=256, page_size=16)
+    live = []
+    for i, (plen, extra) in enumerate(ops):
+        if kv.can_allocate(plen):
+            kv.allocate_prompt(i, plen)
+            live.append((i, extra))
+    for rid, extra in live:
+        for _ in range(extra):
+            try:
+                kv.append_token(rid)
+            except OutOfBlocks:
+                break
+    for rid, _ in live:
+        kv.free(rid)
+    assert kv.allocator.free_count == 256
+    assert kv.num_requests == 0
+
+
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_block_allocator_unique(sizes):
+    """No block handed out twice while live."""
+    alloc = BlockAllocator(512)
+    seen = set()
+    held = []
+    for n in sizes:
+        if n > alloc.free_count:
+            continue
+        blocks = alloc.alloc(n)
+        assert not (set(blocks) & seen)
+        seen.update(blocks)
+        held.append(blocks)
+    for b in held:
+        alloc.free(b)
+        seen.difference_update(b)
+    assert alloc.free_count == 512
+
+
+# ---------------------------------------------------------------------------
+# Engine conservation + protocol invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["rapid", "hybrid", "disagg"])
+def test_conservation(mode):
+    reqs = generate_trace(TRACES["lmsys"], qps=4.0, duration_s=30, seed=1)
+    eng, recs, span = _run(mode, reqs)
+    assert len(recs) == len(reqs)
+    finished = [r for r in recs if r.finish is not None]
+    assert len(finished) == len(reqs)            # drained
+    for r in finished:
+        assert r.output_len >= 1
+        assert r.ttft is not None and r.ttft >= 0
+    # KV pool fully reclaimed
+    assert eng.kv.allocator.free_count == eng.kv.allocator.num_blocks
+
+
+def test_rapid_token_times_monotone():
+    reqs = generate_trace(TRACES["lmsys"], qps=6.0, duration_s=20, seed=2)
+    serve = ServeConfig(mode="rapid", **SERVE)
+    eng = RapidEngine(CFG, serve)
+    eng.run([copy.deepcopy(r) for r in reqs])
+    for r in eng.finished:
+        ts = r.token_times
+        assert all(b >= a for a, b in zip(ts, ts[1:]))
+        assert r.tokens_generated <= r.max_new_tokens
+
+
+def test_rapid_blocks_before_prefill():
+    """Fig 4 ordering: block allocation timestamp <= prefill start."""
+    reqs = generate_trace(TRACES["lmsys"], qps=6.0, duration_s=20, seed=3)
+    serve = ServeConfig(mode="rapid", **SERVE)
+    eng = RapidEngine(CFG, serve)
+    eng.run([copy.deepcopy(r) for r in reqs])
+    for r in eng.finished:
+        assert r.t_blocks is not None
+        assert r.t_prefill_start is not None
+        assert r.t_blocks <= r.t_prefill_start + 1e-9
+
+
+def test_rapid_overlaps_pd():
+    """Concurrency: some decode step must complete while a prefill is in
+    flight (strictly impossible for the lockstep hybrid engine)."""
+    reqs = generate_trace(TRACES["arxiv"], qps=6.0, duration_s=30, seed=4)
+    serve = ServeConfig(mode="rapid", **SERVE)
+    eng = RapidEngine(CFG, serve)
+
+    overlaps = []
+    orig = eng._decode_done
+
+    def spy(batch):
+        overlaps.append(eng.prefill_busy)
+        orig(batch)
+
+    eng._decode_done = spy
+    eng.run([copy.deepcopy(r) for r in reqs])
+    assert any(overlaps), "no P/D overlap observed"
+
+
+def test_rapid_itl_beats_hybrid():
+    """The paper's core claim at saturating load."""
+    reqs = generate_trace(TRACES["lmsys"], qps=16.0, duration_s=40, seed=5)
+    _, r_recs, r_span = _run("rapid", reqs)
+    _, h_recs, h_span = _run("hybrid", reqs)
+    slo = SLOConfig(itl_ms=100.0)
+    s_r = summarize(r_recs, slo, r_span)
+    s_h = summarize(h_recs, slo, h_span)
+    assert s_r["itl_p95_s"] < s_h["itl_p95_s"]
+    assert s_r["goodput_req_s"] >= 0.95 * s_h["goodput_req_s"]
+
+
+def test_disagg_pays_transfer_ttft():
+    """§3.2.1: at low load disagg TTFT > rapid TTFT (KV transfer +
+    first-token recompute on the decode instance)."""
+    reqs = generate_trace(TRACES["arxiv"], qps=1.0, duration_s=30, seed=6)
+    _, r_recs, r_span = _run("rapid", reqs)
+    _, d_recs, d_span = _run("disagg", reqs)
+    slo = SLOConfig(itl_ms=100.0)
+    assert summarize(d_recs, slo, d_span)["ttft_p95_s"] > \
+        summarize(r_recs, slo, r_span)["ttft_p95_s"]
+
+
+def test_preemption_recovers():
+    """Tiny KV pool forces preemptions; requests must still finish."""
+    reqs = generate_trace(TRACES["loogle"], qps=3.0, duration_s=20, seed=7)
+    serve = ServeConfig(mode="rapid", chips=32,
+                        slo=SLOConfig(itl_ms=100.0), max_batch_slots=8,
+                        max_seq_len=32768)
+    eng = RapidEngine(CFG, serve)
+    # shrink the pool to force pressure
+    eng.kv = type(eng.kv)(num_blocks=4096, page_size=16)
+    eng.run([copy.deepcopy(r) for r in reqs])
+    assert all(r.done for r in eng.finished)
+    assert len(eng.finished) == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive Resource Manager (paper §4.5.3)
+# ---------------------------------------------------------------------------
+
+
+def test_profile_monotone():
+    """Min f_d to meet the SLO grows with the decode batch size."""
+    prof = build_decode_profile(CFG, TPU_V5E, 32, 0.1, 4096)
+    fs = [prof.min_f[b] for b in prof.buckets]
+    assert all(b >= a for a, b in zip(fs, fs[1:]))
+
+
+def test_arm_switches_modes():
+    from repro.core import AdaptiveResourceManager
+    prof = build_decode_profile(CFG, TPU_V5E, 32, 0.02, 8192)
+    arm = AdaptiveResourceManager(prof)
+    lo = arm.allocate(max(1, prof.overalloc_bs_limit), True)
+    assert lo.f_decode is None        # overallocation at low load
+    hi = arm.allocate(256, True)
+    if prof.overalloc_bs_limit < 256:
+        assert hi.mode == "distinct" and hi.f_decode is not None
+        assert hi.f_prefill == pytest.approx(1.0 - hi.f_decode)
+
+
+@given(st.integers(1, 256), st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_arm_total_never_oversubscribed(bs, prefill_active):
+    """Distinct allocations always leave prefill a positive share."""
+    from repro.core import AdaptiveResourceManager
+    prof = build_decode_profile(CFG, TPU_V5E, 32, 0.05, 4096)
+    arm = AdaptiveResourceManager(prof)
+    a = arm.allocate(bs, prefill_active)
+    if a.f_decode is not None:
+        assert 0.0 < a.f_decode < 1.0
+        assert 0.0 < a.f_prefill < 1.0
+        assert a.f_decode + a.f_prefill == pytest.approx(1.0)

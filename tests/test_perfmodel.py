@@ -1,0 +1,114 @@
+"""Perf-model consistency: analytic costs vs compiled HLO, interference
+model shape (paper §3.1/§3.2/§3.4/Fig 7 calibration points)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, get_reduced_config
+from repro.perfmodel import costs as C
+from repro.perfmodel import interference as I
+from repro.perfmodel.hw import TPU_V5E
+
+CFG = get_config("llama3-70b")
+HW = TPU_V5E
+
+
+def test_prefill_compute_bound_decode_memory_bound():
+    """§3.3: the phases hit different roofline walls."""
+    p = C.prefill_cost(CFG, [4096], tp=32)
+    d = C.decode_cost(CFG, 64, 64 * 2048.0, tp=32)
+    p_ai = p.flops / p.hbm_bytes
+    d_ai = d.flops / d.hbm_bytes
+    assert p_ai > HW.balance       # compute-bound
+    assert d_ai < HW.balance       # bandwidth-bound
+
+
+def test_chunking_tradeoff_matches_paper():
+    """§3.1: chunk 1K vs 512 — higher throughput, higher per-step
+    latency (paper: ~+20% thpt at ~+30% ITL on 8x MI300X).  The effect
+    comes from amortizing the per-ITERATION fixed cost (host scheduling
+    + launch) over more tokens; we include it at engine granularity.
+    The exact percentages are hardware-ratio dependent (DESIGN.md §6)."""
+    ctx, chips, sched = 4096, 256, 2e-3
+    t512 = I.phase_time(C.chunk_prefill_cost(CFG, 512, ctx, chips),
+                        HW, chips) + sched
+    t1k = I.phase_time(C.chunk_prefill_cost(CFG, 1024, ctx, chips),
+                       HW, chips) + sched
+    thpt_gain = (1024 / t1k) / (512 / t512)
+    itl_gain = t1k / t512
+    assert 1.05 < thpt_gain < 1.8
+    assert 1.1 < itl_gain < 2.1
+
+
+def test_decode_insensitive_to_f_until_knee():
+    """Fig 3b: decode holds performance down to ~40-50% compute, then
+    degrades once the compute share starves it (large batch)."""
+    d = C.decode_cost(CFG, 256, 256 * 2048.0, tp=32)
+    t_full = I.phase_time(d, HW, 32, f=1.0)
+    t_half = I.phase_time(d, HW, 32, f=0.5)
+    assert t_half < 1.35 * t_full
+    t_tenth = I.phase_time(d, HW, 32, f=0.1)
+    assert t_tenth > 1.5 * t_full     # eventually compute-starved
+
+
+def test_prefill_scales_with_f():
+    """Fig 3a: prefill performance proportional to compute share."""
+    p = C.prefill_cost(CFG, [4096], tp=32)
+    t_full = I.phase_time(p, HW, 32, f=1.0)
+    t_half = I.phase_time(p, HW, 32, f=0.5)
+    assert t_half == pytest.approx(2 * t_full, rel=0.1)
+
+
+def test_overalloc_degrades_with_batch():
+    """Fig 7: P100-D100 decode latency grows with decode batch; distinct
+    allocation caps it near the solo memory floor."""
+    p = C.prefill_cost(CFG, [8192], tp=32)
+    prev = 0.0
+    for bs in (8, 32, 128, 256):
+        d = C.decode_cost(CFG, bs, bs * 2048.0, tp=32)
+        r = I.overlapped_times(p, d, HW, 32)
+        assert r.t_decode >= prev * 0.999
+        prev = r.t_decode
+        solo = I.phase_time(d, HW, 32)
+        distinct = I.overlapped_times(p, d, HW, 32, f_decode=0.5)
+        assert distinct.t_decode <= r.t_decode * 1.05 or \
+            r.t_decode < solo * 1.1
+
+
+def test_kv_transfer_overhead_scale():
+    """§3.2.1: KV transfer is a TTFT-scale cost for long prompts."""
+    xfer = C.kv_transfer_bytes(CFG, 8000) / (50e9)
+    prefill = I.phase_time(C.prefill_cost(CFG, [8000], 16), HW, 16)
+    assert 0.05 < xfer / prefill < 5.0
+
+
+def test_memory_interference_band():
+    """§3.4: co-residency memory interference is a few percent."""
+    assert 0.0 < I.MEM_INTERFERENCE_PREFILL <= 0.05
+    assert 0.0 < I.MEM_INTERFERENCE_DECODE <= 0.05
+
+
+def test_analytic_flops_vs_hlo():
+    """Analytic decode/prefill FLOPs within 2x of XLA's cost analysis
+    for the reduced model (keeps the simulator honest)."""
+    cfg = get_reduced_config("granite-8b")
+    from repro.models.transformer import init_model, forward
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 4, 64
+    toks = jnp.zeros((B, S), jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    compiled = jax.jit(lambda p, t: forward(p, cfg, t, pos)).lower(
+        params, toks).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    hlo_flops = float(ca.get("flops", 0))
+    analytic = C.prefill_cost(cfg, [S] * B, tp=1).flops
+    # HLO counts the lm-head + embed that analytic's 2*N*T includes too
+    assert 0.4 < analytic / hlo_flops < 2.5
+
+
+def test_eq1_kv_bytes():
+    """Paper Eq (1): 2*L*H*D*E per token."""
+    assert CFG.kv_bytes_per_token(2) == 2 * 80 * 8 * 128 * 2
