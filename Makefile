@@ -1,0 +1,25 @@
+# One-command local/CI entry points.
+#
+#   make dev-deps   install test-only dependencies (hypothesis etc.)
+#   make test       tier-1 suite (what the driver runs)
+#   make smoke      tier-1 + a quick cluster-benchmark smoke
+#   make ci         dev-deps + smoke
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: dev-deps test smoke ci bench
+
+dev-deps:
+	$(PY) -m pip install -r requirements-dev.txt
+
+test:
+	$(PY) -m pytest -x -q
+
+smoke: test
+	$(PY) -m benchmarks.fig12_cluster_goodput --smoke
+
+ci: dev-deps smoke
+
+bench:
+	$(PY) -m benchmarks.run

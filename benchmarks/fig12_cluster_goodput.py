@@ -1,0 +1,82 @@
+"""Fig 12 (extension): fleet goodput — replicas x router x engine mix.
+
+The paper evaluates one engine; this sweep runs the multi-replica
+cluster layer (serving/cluster.py) on the paper's traces and reports
+fleet-wide goodput and tail TTFT for every (replica count, router,
+engine mix) combination.  Offered load scales with the replica count so
+per-replica pressure is constant across the sweep — what changes the
+outcome is routing quality and the engine mix, which is exactly the
+DistServe/BucketServe cluster-level question.
+
+    PYTHONPATH=src python -m benchmarks.fig12_cluster_goodput [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import MODELS, emit, serve_cfg
+from repro.config import get_config
+from repro.serving import TRACES, generate_trace, run_fleet
+
+REPLICAS = (1, 2, 4)
+ROUTERS_ = ("round_robin", "least_loaded", "slo_aware")
+MIXES = {
+    "rapid": lambda n: ["rapid"] * n,
+    "hybrid": lambda n: ["hybrid"] * n,
+    # half-and-half fleet: the router decides which engine sees which load
+    "rapid+hybrid": lambda n: (["rapid"] * ((n + 1) // 2)
+                               + ["hybrid"] * (n // 2)),
+}
+PER_REPLICA_QPS = 6.0
+DURATION = 45.0
+
+
+def run_cluster_point(arch: str, modes, router: str, trace: str,
+                      qps: float, slo_itl_ms: float,
+                      duration: float = DURATION, seed: int = 0):
+    cfg = get_config(arch)
+    serve = serve_cfg(modes[0], slo_itl_ms)
+    reqs = generate_trace(TRACES[trace], qps=qps, duration_s=duration,
+                          seed=seed)
+    summary, _ = run_fleet(cfg, serve, modes, router, reqs)
+    return summary
+
+
+def main(smoke: bool = False, tag: str = "fig12"):
+    replicas = (2,) if smoke else REPLICAS
+    routers = ("round_robin", "least_loaded") if smoke else ROUTERS_
+    mixes = ("rapid",) if smoke else tuple(MIXES)
+    models = dict(list(MODELS.items())[:1]) if smoke else MODELS
+    traces = ("lmsys",) if smoke else ("lmsys", "arxiv")
+    duration = 15.0 if smoke else DURATION
+    rows, results = [], {}
+    for arch, mcfg in models.items():
+        for trace in traces:
+            for n in replicas:
+                qps = PER_REPLICA_QPS * n
+                for mix_name in mixes:
+                    modes = MIXES[mix_name](n)
+                    for router in routers:
+                        res = run_cluster_point(
+                            arch, modes, router, trace, qps,
+                            mcfg["slo_itl_ms"], duration)
+                        f = res["fleet"]
+                        key = (f"{tag}_{arch}_{trace}_r{n}_"
+                               f"{mix_name}_{router}")
+                        rows.append((f"{key}_goodput",
+                                     f"{f['goodput_req_s']:.3f}",
+                                     "fleet goodput req/s"))
+                        rows.append((f"{key}_ttft_p99",
+                                     f"{f['ttft_p99_s']:.3f}",
+                                     "fleet ttft p99 s"))
+                        results[key] = f["goodput_req_s"]
+    emit(rows)
+    return results
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="one tiny point per axis (CI smoke)")
+    args = p.parse_args()
+    main(smoke=args.smoke)

@@ -15,6 +15,7 @@ MODULES = [
     ("fig9", "benchmarks.fig9_goodput"),
     ("fig10", "benchmarks.fig10_itl_goodput"),
     ("fig11", "benchmarks.fig11_tail_latency"),
+    ("fig12", "benchmarks.fig12_cluster_goodput"),
     ("util", "benchmarks.util_table"),
     ("overheads", "benchmarks.overheads"),
     ("kernels", "benchmarks.kernel_costs"),

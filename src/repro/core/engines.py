@@ -68,12 +68,34 @@ class UtilSample:
     busy: bool
 
 
+@dataclasses.dataclass(frozen=True)
+class LoadSnapshot:
+    """Instantaneous engine load, consumed by cluster routers.
+
+    ``queued_prefill_tokens`` counts prompt tokens that still need prefill
+    compute (including the un-chunked remainder on hybrid engines) — the
+    quantity a least-loaded router balances.  ``decode_ctx_tokens`` is the
+    total live context of the running decode batch, which the SLO-aware
+    router feeds to the decode cost model.
+    """
+    queued_requests: int
+    queued_prefill_tokens: int
+    running_decode: int
+    decode_ctx_tokens: int
+    kv_utilization: float
+    prefill_busy: bool
+    decode_busy: bool
+
+
 class BaseEngine:
-    def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E):
+    def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E,
+                 loop: Optional[EventLoop] = None):
         self.cfg = cfg
         self.serve = serve
         self.hw = hw
-        self.loop = EventLoop()
+        # injected loop => this engine is one replica of a cluster sharing
+        # a single virtual clock; standalone engines own a private loop
+        self.loop = loop if loop is not None else EventLoop()
         self.finished: List[Request] = []
         self.util_samples: List[UtilSample] = []
         self._all: List[Request] = []
@@ -90,15 +112,26 @@ class BaseEngine:
         r.t_finish = self.loop.now
         self.finished.append(r)
 
-    def run(self, requests: List[Request], drain: bool = True):
-        self._all = list(requests)
+    def enqueue(self, requests: List[Request]) -> None:
+        """Seed arrival events on the (possibly shared) loop without
+        running it — the cluster drives the loop itself."""
+        self._all.extend(requests)
         for r in requests:
             self.loop.at(r.arrival, lambda r=r: self.submit(r))
+
+    def run(self, requests: List[Request], drain: bool = True):
+        self.enqueue(requests)
         self.loop.run()
         span = self.loop.now if self.loop.now > 0 else 1.0
         return [RequestRecord.from_request(r) for r in self._all], span
 
+    def records(self) -> List[RequestRecord]:
+        return [RequestRecord.from_request(r) for r in self._all]
+
     def submit(self, r: Request) -> None:
+        raise NotImplementedError
+
+    def load_snapshot(self) -> LoadSnapshot:
         raise NotImplementedError
 
 
@@ -109,8 +142,9 @@ class BaseEngine:
 
 class RapidEngine(BaseEngine):
     def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E,
-                 avg_ctx_hint: int = 4096):
-        super().__init__(cfg, serve, hw)
+                 avg_ctx_hint: int = 4096,
+                 loop: Optional[EventLoop] = None):
+        super().__init__(cfg, serve, hw, loop=loop)
         tp = serve.chips
         blocks = kv_pool_blocks(cfg, hw, serve.chips, serve.page_size)
         self.kv = KVCacheManager(blocks, serve.page_size)
@@ -130,6 +164,7 @@ class RapidEngine(BaseEngine):
         self.cur_prefill_cost: Optional[C.StepCost] = None
         self.cur_decode_cost: Optional[C.StepCost] = None
         self.cur_f_decode: Optional[float] = None
+        self.inflight_prefill_tokens = 0
 
     # -- Fig 4: arrival -> decode-side block allocation ---------------------
     def submit(self, r: Request) -> None:
@@ -166,6 +201,7 @@ class RapidEngine(BaseEngine):
             r.state = State.PREFILLING
             r.t_prefill_start = self.loop.now
         self.prefill_busy = True
+        self.inflight_prefill_tokens = tokens
         p_cost = C.prefill_cost(self.cfg, [r.prompt_len for r in batch],
                                 self.tp)
         self.cur_prefill_cost = p_cost
@@ -193,6 +229,7 @@ class RapidEngine(BaseEngine):
             else:
                 self.pending_join.append(r)   # notification to decode
         self.prefill_busy = False
+        self.inflight_prefill_tokens = 0
         self.cur_prefill_cost = None
         self._kick_prefill()
         self._kick_decode()
@@ -266,6 +303,21 @@ class RapidEngine(BaseEngine):
         self.waiting_kv.appendleft(victim)
         return victim
 
+    def load_snapshot(self) -> LoadSnapshot:
+        queued = (list(self.waiting_kv) + list(self.waiting_prefill)
+                  + list(self.pending_join))
+        pending_tokens = sum(r.prompt_len for r in self.waiting_kv) + \
+            sum(r.prompt_len for r in self.waiting_prefill) + \
+            self.inflight_prefill_tokens
+        return LoadSnapshot(
+            queued_requests=len(queued),
+            queued_prefill_tokens=pending_tokens,
+            running_decode=len(self.running),
+            decode_ctx_tokens=sum(r.context_len for r in self.running),
+            kv_utilization=self.kv.utilization,
+            prefill_busy=self.prefill_busy,
+            decode_busy=self.decode_busy)
+
 
 # ---------------------------------------------------------------------------
 # Hybrid batching with chunked prefill (Sarathi / vLLM-v1)
@@ -273,8 +325,9 @@ class RapidEngine(BaseEngine):
 
 
 class HybridEngine(BaseEngine):
-    def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E):
-        super().__init__(cfg, serve, hw)
+    def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E,
+                 loop: Optional[EventLoop] = None):
+        super().__init__(cfg, serve, hw, loop=loop)
         self.tp = serve.chips
         blocks = kv_pool_blocks(cfg, hw, serve.chips, serve.page_size)
         self.kv = KVCacheManager(blocks, serve.page_size)
@@ -384,6 +437,18 @@ class HybridEngine(BaseEngine):
         self.waiting.appendleft(victim)
         return victim
 
+    def load_snapshot(self) -> LoadSnapshot:
+        pending_tokens = sum(r.prompt_len for r in self.waiting) + \
+            sum(r.prompt_len - r.prefill_tokens_done for r in self.chunking)
+        return LoadSnapshot(
+            queued_requests=len(self.waiting) + len(self.chunking),
+            queued_prefill_tokens=pending_tokens,
+            running_decode=len(self.running),
+            decode_ctx_tokens=sum(r.context_len for r in self.running),
+            kv_utilization=self.kv.utilization,
+            prefill_busy=self.busy,
+            decode_busy=self.busy)
+
 
 # ---------------------------------------------------------------------------
 # Disaggregated serving (DistServe-style, vLLM v1 transfer semantics)
@@ -391,8 +456,9 @@ class HybridEngine(BaseEngine):
 
 
 class DisaggEngine(BaseEngine):
-    def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E):
-        super().__init__(cfg, serve, hw)
+    def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E,
+                 loop: Optional[EventLoop] = None):
+        super().__init__(cfg, serve, hw, loop=loop)
         self.chips_p, self.chips_d = serve.disagg_split
         # each pool holds a full weight replica; KV capacity only matters
         # on the decode side (the §3.2.2 imbalance)
@@ -405,6 +471,11 @@ class DisaggEngine(BaseEngine):
         self.running: List[Request] = []
         self.prefill_busy = False
         self.decode_busy = False
+        self.inflight_prefill_tokens = 0
+        # requests whose KV transfer is in flight (prefill done, decode
+        # admission pending) — in no queue, but very much still load
+        self.inflight_transfers = 0
+        self.inflight_transfer_tokens = 0
 
     def submit(self, r: Request) -> None:
         r.state = State.WAITING_PREFILL
@@ -432,6 +503,7 @@ class DisaggEngine(BaseEngine):
             r.state = State.PREFILLING
             r.t_prefill_start = self.loop.now
         self.prefill_busy = True
+        self.inflight_prefill_tokens = tokens
         p_cost = C.prefill_cost(self.cfg, [r.prompt_len for r in batch],
                                 self.chips_p)
         dur = I.phase_time(p_cost, self.hw, self.chips_p)
@@ -446,8 +518,11 @@ class DisaggEngine(BaseEngine):
             # admission + first-token recompute (vLLM v1, §3.2.1)
             xfer = C.kv_transfer_bytes(self.cfg, r.prompt_len) / \
                 (self.serve.kv_transfer_gbps * 1e9)
+            self.inflight_transfers += 1
+            self.inflight_transfer_tokens += r.prompt_len
             self.loop.after(xfer, lambda r=r: self._kv_arrived(r))
         self.prefill_busy = False
+        self.inflight_prefill_tokens = 0
         self._kick_prefill()
 
     def _kv_arrived(self, r: Request) -> None:
@@ -460,6 +535,8 @@ class DisaggEngine(BaseEngine):
             return
         r.blocks = self.kv.allocate_prompt(r.rid, r.prompt_len)
         r.state = State.PREFILL_FINISHED
+        self.inflight_transfers -= 1
+        self.inflight_transfer_tokens -= r.prompt_len
         self.pending_join.append(r)
         self._kick_decode()
 
@@ -518,6 +595,23 @@ class DisaggEngine(BaseEngine):
         self._kick_prefill()
         return victim
 
+    def load_snapshot(self) -> LoadSnapshot:
+        pending_tokens = sum(r.prompt_len for r in self.waiting_prefill) + \
+            self.inflight_prefill_tokens
+        # transfers in flight count as imminent decode load: they are done
+        # with prefill but WILL join the decode batch, so both routers and
+        # the autoscaler's idle detection must see them
+        return LoadSnapshot(
+            queued_requests=len(self.waiting_prefill)
+            + len(self.pending_join) + self.inflight_transfers,
+            queued_prefill_tokens=pending_tokens,
+            running_decode=len(self.running) + self.inflight_transfers,
+            decode_ctx_tokens=sum(r.context_len for r in self.running)
+            + self.inflight_transfer_tokens,
+            kv_utilization=self.kv.utilization,
+            prefill_busy=self.prefill_busy,
+            decode_busy=self.decode_busy)
+
 
 ENGINES = {
     "rapid": RapidEngine,
@@ -527,5 +621,9 @@ ENGINES = {
 
 
 def make_engine(mode: str, cfg, serve: ServeConfig,
-                hw: HardwareSpec = TPU_V5E) -> BaseEngine:
-    return ENGINES[mode](cfg, serve, hw)
+                hw: HardwareSpec = TPU_V5E,
+                loop: Optional[EventLoop] = None) -> BaseEngine:
+    if mode not in ENGINES:
+        raise KeyError(
+            f"unknown engine mode {mode!r}; known: {sorted(ENGINES)}")
+    return ENGINES[mode](cfg, serve, hw, loop=loop)

@@ -4,6 +4,14 @@ throughput, goodput and tail latencies (the paper's §5 methodology).
     python -m repro.launch.serve --arch llama3-70b --trace lmsys \
         --qps 8 --duration 60 --mode rapid
 
+Multi-replica cluster serving (shared virtual clock, pluggable router):
+
+    python -m repro.launch.serve --arch llama3-70b --trace lmsys \
+        --qps 24 --replicas 4 --router least_loaded --mode rapid
+
+``--mix rapid,rapid,hybrid`` overrides ``--mode``/``--replicas`` with an
+explicit per-replica engine list.
+
 Engine logic is real; step durations come from the calibrated TPU-v5e
 perfmodel (this container has no accelerator — DESIGN.md §6).  Use
 examples/serve_real.py for actual on-CPU token generation with a
@@ -17,7 +25,16 @@ import json
 
 from repro.config import SLOConfig, ServeConfig, get_config, list_archs
 from repro.core import make_engine
-from repro.serving import TRACES, generate_trace, summarize
+from repro.serving import (ROUTERS, TRACES, generate_trace, run_fleet,
+                           summarize)
+
+
+def _serve_config(mode: str, chips: int, slo: SLOConfig, chunk: int,
+                  max_slots: int) -> ServeConfig:
+    return ServeConfig(mode=mode, chips=chips, slo=slo,
+                       chunk_size=chunk,
+                       disagg_split=(chips // 2, chips // 2),
+                       max_batch_slots=max_slots)
 
 
 def run_one(arch: str, mode: str, trace: str, qps: float, duration: float,
@@ -25,15 +42,27 @@ def run_one(arch: str, mode: str, trace: str, qps: float, duration: float,
             seed: int = 0, max_slots: int = 128):
     cfg = get_config(arch)
     slo = SLOConfig(itl_ms=slo_itl_ms)
-    serve = ServeConfig(mode=mode, chips=chips, slo=slo,
-                        chunk_size=chunk,
-                        disagg_split=(chips // 2, chips // 2),
-                        max_batch_slots=max_slots)
+    serve = _serve_config(mode, chips, slo, chunk, max_slots)
     reqs = generate_trace(TRACES[trace], qps=qps, duration_s=duration,
                           seed=seed)
     eng = make_engine(mode, cfg, serve)
     recs, span = eng.run([copy.deepcopy(r) for r in reqs])
     return summarize(recs, slo, span)
+
+
+def run_cluster(arch: str, modes, router: str, trace: str, qps: float,
+                duration: float, chips: int, slo_itl_ms: float,
+                chunk: int = 512, seed: int = 0, max_slots: int = 128):
+    """Run a trace against an N-replica cluster; returns the fleet/per-
+    replica summary dict from ``fleet_summarize`` plus the fleet span."""
+    cfg = get_config(arch)
+    slo = SLOConfig(itl_ms=slo_itl_ms)
+    serve = _serve_config(modes[0], chips, slo, chunk, max_slots)
+    reqs = generate_trace(TRACES[trace], qps=qps, duration_s=duration,
+                          seed=seed)
+    out, _ = run_fleet(cfg, serve, modes, router, reqs)
+    out["router"] = router
+    return out
 
 
 def main(argv=None):
@@ -44,24 +73,53 @@ def main(argv=None):
     p.add_argument("--trace", default="lmsys", choices=list(TRACES))
     p.add_argument("--qps", type=float, default=8.0)
     p.add_argument("--duration", type=float, default=60.0)
-    p.add_argument("--chips", type=int, default=32)
+    p.add_argument("--chips", type=int, default=32,
+                   help="chips per serving replica")
     p.add_argument("--slo-itl-ms", type=float, default=100.0)
     p.add_argument("--chunk", type=int, default=512)
+    p.add_argument("--replicas", type=int, default=1)
+    p.add_argument("--router", default="least_loaded",
+                   choices=sorted(ROUTERS))
+    p.add_argument("--mix", default=None,
+                   help="comma-separated per-replica engine modes, e.g. "
+                        "'rapid,rapid,hybrid' (overrides --mode/--replicas)")
     p.add_argument("--json", default=None)
     args = p.parse_args(argv)
 
-    modes = (["rapid", "hybrid", "disagg"] if args.mode == "all"
-             else [args.mode])
     out = {}
-    for mode in modes:
-        s = run_one(args.arch, mode, args.trace, args.qps, args.duration,
-                    args.chips, args.slo_itl_ms, args.chunk)
-        out[mode] = s
-        print(f"{mode:7s} thpt={s['throughput_tok_s']:9.1f} tok/s  "
-              f"goodput={s['goodput_req_s']:6.2f} req/s  "
-              f"ttft_p95={s['ttft_p95_s']:7.2f}s  "
-              f"itl_p95={s['itl_p95_s'] * 1e3:6.0f}ms  "
-              f"slo_ok={s['slo_attainment'] * 100:5.1f}%")
+    if args.mix or args.replicas > 1:
+        if args.mode == "all" and not args.mix:
+            p.error("--mode all cannot combine with --replicas; use "
+                    "--mix rapid,hybrid,disagg to build a mixed fleet")
+        mix = args.mix.split(",") if args.mix \
+            else [args.mode] * args.replicas
+        res = run_cluster(args.arch, mix, args.router, args.trace,
+                          args.qps, args.duration, args.chips,
+                          args.slo_itl_ms, args.chunk)
+        out["cluster"] = res
+        f = res["fleet"]
+        print(f"cluster[{'+'.join(mix)} | {args.router}] "
+              f"thpt={f['throughput_tok_s']:9.1f} tok/s  "
+              f"goodput={f['goodput_req_s']:6.2f} req/s  "
+              f"ttft_p99={f['ttft_p99_s']:7.2f}s  "
+              f"slo_ok={f['slo_attainment'] * 100:5.1f}%")
+        for name, s in res["per_replica"].items():
+            print(f"  {name:10s} n={s['requests']:4d}  "
+                  f"thpt={s['throughput_tok_s']:9.1f} tok/s  "
+                  f"ttft_p95={s['ttft_p95_s']:7.2f}s")
+    else:
+        modes = (["rapid", "hybrid", "disagg"] if args.mode == "all"
+                 else [args.mode])
+        for mode in modes:
+            s = run_one(args.arch, mode, args.trace, args.qps,
+                        args.duration, args.chips, args.slo_itl_ms,
+                        args.chunk)
+            out[mode] = s
+            print(f"{mode:7s} thpt={s['throughput_tok_s']:9.1f} tok/s  "
+                  f"goodput={s['goodput_req_s']:6.2f} req/s  "
+                  f"ttft_p95={s['ttft_p95_s']:7.2f}s  "
+                  f"itl_p95={s['itl_p95_s'] * 1e3:6.0f}ms  "
+                  f"slo_ok={s['slo_attainment'] * 100:5.1f}%")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)

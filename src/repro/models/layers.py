@@ -64,6 +64,31 @@ class ParamBuilder:
 # ---------------------------------------------------------------------------
 
 
+@jax.custom_vjp
+def grad_barrier(xs):
+    """``optimization_barrier`` with a straight-through gradient.
+
+    ``jax.lax.optimization_barrier`` has no differentiation rule; the
+    scan bodies barrier (layer_params, carry) to stop LICM hoisting f32
+    upcasts of the whole stacked weights out of the loop, and that sits
+    on the grad path of every train step.  The barrier is semantically
+    the identity, so the VJP is the identity too — the CSE/LICM-blocking
+    effect is preserved on the forward (primal) computation.
+    """
+    return jax.lax.optimization_barrier(xs)
+
+
+def _grad_barrier_fwd(xs):
+    return jax.lax.optimization_barrier(xs), None
+
+
+def _grad_barrier_bwd(_, cts):
+    return (cts,)
+
+
+grad_barrier.defvjp(_grad_barrier_fwd, _grad_barrier_bwd)
+
+
 def rmsnorm(x, w, eps: float = 1e-5):
     dt = x.dtype
     x = x.astype(jnp.float32)

@@ -34,8 +34,8 @@ from repro.models import attention as attn_mod
 from repro.models import mamba as mamba_mod
 from repro.models import moe as moe_mod
 from repro.models import xlstm as xlstm_mod
-from repro.models.layers import (ParamBuilder, embed_tokens, init_embed,
-                                 lm_logits, rmsnorm)
+from repro.models.layers import (ParamBuilder, embed_tokens, grad_barrier,
+                                 init_embed, lm_logits, rmsnorm)
 
 NEG_INF = -1e30
 
@@ -203,7 +203,7 @@ def forward(params, cfg, inputs, positions, tp: int = 1, *,
             static_argnums=(1, 2, 5, 6, 7, 8))
 
     def period_body(x, layer_p):
-        layer_p, x = jax.lax.optimization_barrier((layer_p, x))
+        layer_p, x = grad_barrier((layer_p, x))
         auxes = {}
         for pos in range(cfg.period):
             x, aux = block(layer_p[f"pos{pos}"], cfg, pos, x,
@@ -245,7 +245,7 @@ def lm_loss(params, cfg, tokens_or_embeds, labels, positions, tp: int = 1, *,
         # barrier ties the sliced layer params to the loop-varying carry
         # so the CPU backend cannot hoist f32 upcasts of the WHOLE
         # stacked weights out of the scan (§Perf log; no-op on TPU)
-        layer_p, x = jax.lax.optimization_barrier((layer_p, x))
+        layer_p, x = grad_barrier((layer_p, x))
         for pos in range(cfg.period):
             x, _ = block(layer_p[f"pos{pos}"], cfg, pos, x, positions,
                          tp, impl, constrain, False)
@@ -383,7 +383,7 @@ def decode_forward(params, cfg, inputs, positions, cache, seq_lens,
     def period_body(carry, scanned):
         x, cache = carry
         layer_p, idx = scanned
-        layer_p, x = jax.lax.optimization_barrier((layer_p, x))
+        layer_p, x = grad_barrier((layer_p, x))
         new_c = {}
         layer_c = jax.tree.map(
             lambda t: jax.lax.dynamic_index_in_dim(t, idx, 0,

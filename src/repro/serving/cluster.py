@@ -1,0 +1,308 @@
+"""Multi-replica cluster serving layer (DistServe-style fleet scale).
+
+Runs N engine replicas — any mix of ``rapid`` / ``hybrid`` / ``disagg``
+from ``core/engines.py`` — under ONE shared ``EventLoop`` (a single
+virtual clock), behind a pluggable router:
+
+  * ``round_robin``   — classic cycling over routable replicas.
+  * ``least_loaded``  — fewest queued prefill tokens (the quantity that
+    actually backs up TTFT), tie-broken by queued request count.
+  * ``slo_aware``     — projects per-replica TTFT and ITL for the new
+    request from the perfmodel (prefill cost of the queued + new prompt
+    tokens; decode cost of the grown batch) and picks the replica with
+    the lowest combined SLO-normalized score.
+
+Routing happens at arrival time on the shared loop, so routers see each
+replica's live load — exactly the information a fleet front-end has.
+
+Optional SLO-driven scaling (``ScalePolicy``): a periodic controller
+watches the recent TTFT-attainment window and adds replicas (up to
+``max_replicas``) while the fleet is missing SLO, and retires drained
+surplus replicas down to ``min_replicas``.  Retired replicas stop
+receiving traffic but keep running until their queues drain, so no
+request is lost.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import (TYPE_CHECKING, Callable, Dict, List, Optional,
+                    Sequence)
+
+from repro.config import ServeConfig
+from repro.core.request import Request
+from repro.perfmodel import costs as C
+from repro.perfmodel import interference as I
+from repro.perfmodel.hw import TPU_V5E, HardwareSpec
+from repro.serving.metrics import (RequestRecord, fleet_summarize,
+                                   ttft_ceiling)
+from repro.serving.sim import EventLoop
+
+if TYPE_CHECKING:   # deferred to break the serving <-> core import cycle
+    from repro.core.engines import BaseEngine, LoadSnapshot
+
+
+@dataclasses.dataclass
+class Replica:
+    idx: int
+    mode: str
+    engine: BaseEngine
+    routable: bool = True
+    assigned: List[Request] = dataclasses.field(default_factory=list)
+
+    @property
+    def name(self) -> str:
+        return f"{self.mode}-{self.idx}"
+
+    def snapshot(self) -> LoadSnapshot:
+        return self.engine.load_snapshot()
+
+
+# ---------------------------------------------------------------------------
+# Routers
+# ---------------------------------------------------------------------------
+
+
+class Router:
+    """Picks a replica index for each arriving request."""
+
+    name = "base"
+
+    def choose(self, r: Request, replicas: List[Replica]) -> int:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    name = "round_robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def choose(self, r: Request, replicas: List[Replica]) -> int:
+        i = self._next % len(replicas)
+        self._next += 1
+        return i
+
+
+class LeastLoadedRouter(Router):
+    """Balance queued prefill tokens — counts back up TTFT, tokens do."""
+
+    name = "least_loaded"
+
+    def choose(self, r: Request, replicas: List[Replica]) -> int:
+        def key(i: int):
+            s = replicas[i].snapshot()
+            return (s.queued_prefill_tokens, s.queued_requests,
+                    s.running_decode, i)
+        return min(range(len(replicas)), key=key)
+
+
+class SloAwareRouter(Router):
+    """Project TTFT/ITL per replica from the perfmodel and route to the
+    replica with the lowest SLO-normalized combined score (DistServe's
+    placement insight applied at the router)."""
+
+    name = "slo_aware"
+
+    def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E):
+        self.cfg = cfg
+        self.serve = serve
+        self.hw = hw
+
+    def _score(self, r: Request, rep: Replica) -> float:
+        s = rep.snapshot()
+        # disagg replicas split their chips into prefill/decode pools
+        # (engine exposes chips_p/chips_d); colocated engines use them all
+        chips_p = getattr(rep.engine, "chips_p", self.serve.chips)
+        chips_d = getattr(rep.engine, "chips_d", self.serve.chips)
+        # projected TTFT: every queued prompt token plus ours must be
+        # prefilled before our first token can exist
+        p_cost = C.prefill_cost(
+            self.cfg, [s.queued_prefill_tokens + r.prompt_len], chips_p)
+        proj_ttft = I.phase_time(p_cost, self.hw, chips_p)
+        # projected ITL: the decode batch we would eventually join
+        bs = s.running_decode + 1
+        ctx = float(s.decode_ctx_tokens + r.prompt_len)
+        d_cost = C.decode_cost(self.cfg, bs, ctx, chips_d)
+        proj_itl = I.phase_time(d_cost, self.hw, chips_d)
+        slo = self.serve.slo
+        return (proj_ttft / ttft_ceiling(r.prompt_len, slo)
+                + proj_itl / (slo.itl_ms / 1e3))
+
+    def choose(self, r: Request, replicas: List[Replica]) -> int:
+        return min(range(len(replicas)),
+                   key=lambda i: (self._score(r, replicas[i]), i))
+
+
+ROUTERS: Dict[str, Callable[..., Router]] = {
+    "round_robin": lambda cfg, serve, hw: RoundRobinRouter(),
+    "least_loaded": lambda cfg, serve, hw: LeastLoadedRouter(),
+    "slo_aware": lambda cfg, serve, hw: SloAwareRouter(cfg, serve, hw),
+}
+
+
+def make_router(name: str, cfg, serve: ServeConfig,
+                hw: HardwareSpec = TPU_V5E) -> Router:
+    if name not in ROUTERS:
+        raise KeyError(f"unknown router {name!r}; known: {sorted(ROUTERS)}")
+    return ROUTERS[name](cfg, serve, hw)
+
+
+# ---------------------------------------------------------------------------
+# SLO-driven replica scaling
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalePolicy:
+    """Reactive autoscaler: add a replica while the recent TTFT-attainment
+    window misses ``target_attainment``; retire an idle surplus replica
+    after ``idle_windows`` consecutive quiet checks."""
+    min_replicas: int = 1
+    max_replicas: int = 4
+    check_interval_s: float = 5.0
+    window_s: float = 10.0
+    target_attainment: float = 0.9
+    idle_windows: int = 2
+    scale_up_mode: Optional[str] = None   # None => clone replica 0's mode
+
+
+class Cluster:
+    """N engine replicas sharing one EventLoop behind a Router."""
+
+    def __init__(self, cfg, serve: ServeConfig, modes: Sequence[str],
+                 router: str = "round_robin", hw: HardwareSpec = TPU_V5E,
+                 scale: Optional[ScalePolicy] = None,
+                 loop: Optional[EventLoop] = None):
+        if not modes:
+            raise ValueError("cluster needs at least one replica mode")
+        self.cfg = cfg
+        self.serve = serve
+        self.hw = hw
+        self.loop = loop if loop is not None else EventLoop()
+        self.replicas: List[Replica] = []
+        for mode in modes:
+            self._add_replica(mode)
+        self.router = make_router(router, cfg, serve, hw)
+        self.scale = scale
+        self._all: List[Request] = []
+        self._scale_events: List[tuple] = []   # (t, action, n_routable)
+        self._idle_checks = 0
+
+    # -- replica lifecycle ---------------------------------------------------
+    def _add_replica(self, mode: str) -> Replica:
+        # local import: core.engines itself imports serving.metrics/sim
+        from repro.core.engines import make_engine
+        rep = Replica(idx=len(self.replicas), mode=mode,
+                      engine=make_engine(mode, self.cfg, self.serve,
+                                         self.hw, loop=self.loop))
+        self.replicas.append(rep)
+        return rep
+
+    @property
+    def routable(self) -> List[Replica]:
+        return [rep for rep in self.replicas if rep.routable]
+
+    @property
+    def num_replicas(self) -> int:
+        return len(self.replicas)
+
+    # -- ingress ---------------------------------------------------------------
+    def submit(self, r: Request) -> None:
+        """Route an arriving request to a replica (called on the loop at
+        the request's arrival time)."""
+        live = self.routable
+        rep = live[self.router.choose(r, live)]
+        rep.assigned.append(r)
+        rep.engine.submit(r)
+
+    def enqueue(self, requests: Sequence[Request]) -> None:
+        self._all.extend(requests)
+        for r in requests:
+            self.loop.at(r.arrival, lambda r=r: self.submit(r))
+
+    def run(self, requests: Sequence[Request]):
+        """Serve a trace to completion.  Returns (records, span_s)."""
+        self.enqueue(requests)
+        if self.scale is not None:
+            self.loop.after(self.scale.check_interval_s, self._scale_tick)
+        self.loop.run()
+        span = self.loop.now if self.loop.now > 0 else 1.0
+        return [RequestRecord.from_request(r) for r in self._all], span
+
+    # -- per-replica views -----------------------------------------------------
+    def per_replica_records(self) -> Dict[str, List[RequestRecord]]:
+        return {rep.name: [RequestRecord.from_request(r)
+                           for r in rep.assigned]
+                for rep in self.replicas}
+
+    def per_replica_counts(self) -> Dict[str, int]:
+        return {rep.name: len(rep.assigned) for rep in self.replicas}
+
+    # -- autoscaler ------------------------------------------------------------
+    def _recent_attainment(self) -> Optional[float]:
+        now = self.loop.now
+        lo = now - self.scale.window_s
+        window = [r for rep in self.replicas for r in rep.assigned
+                  if r.t_finish is not None and r.t_finish >= lo
+                  and r.token_times]
+        if not window:
+            return None
+        ok = sum(1 for r in window
+                 if r.ttft <= ttft_ceiling(r.prompt_len, self.serve.slo))
+        return ok / len(window)
+
+    def _scale_tick(self) -> None:
+        outstanding = any(r.t_finish is None for r in self._all)
+        att = self._recent_attainment()
+        snaps = [rep.snapshot() for rep in self.replicas]
+        # prefill_busy covers the window where a batch is in flight but
+        # sits in no queue — a replica mid-prefill is NOT drained
+        busy = any(s.queued_requests or s.running_decode
+                   or s.prefill_busy or s.decode_busy for s in snaps)
+        # backlog is the *leading* indicator (attainment only moves once
+        # delayed requests finish): queued prefill work beyond one full
+        # prefill step per routable replica means TTFTs are already sliding
+        backlog = sum(s.queued_prefill_tokens for s in snaps) / \
+            max(1, len(self.routable))
+        pressed = (att is not None and att < self.scale.target_attainment) \
+            or backlog > self.serve.prefill_max_tokens
+        if pressed and len(self.routable) < self.scale.max_replicas:
+            mode = self.scale.scale_up_mode or self.replicas[0].mode
+            # reactivate a retired replica before constructing a new one,
+            # else oscillating load grows self.replicas without bound
+            retired = [rep for rep in self.replicas if not rep.routable
+                       and rep.mode == mode]
+            if retired:
+                retired[0].routable = True
+            else:
+                self._add_replica(mode)
+            self._scale_events.append((self.loop.now, "up",
+                                       len(self.routable)))
+            self._idle_checks = 0
+        elif not busy and len(self.routable) > self.scale.min_replicas:
+            self._idle_checks += 1
+            if self._idle_checks >= self.scale.idle_windows:
+                # retire the newest routable replica: it stops receiving
+                # traffic (it is already drained — fleet was idle)
+                self.routable[-1].routable = False
+                self._scale_events.append((self.loop.now, "down",
+                                           len(self.routable)))
+                self._idle_checks = 0
+        else:
+            self._idle_checks = 0
+        if outstanding:
+            self.loop.after(self.scale.check_interval_s, self._scale_tick)
+
+
+def run_fleet(cfg, serve: ServeConfig, modes: Sequence[str], router: str,
+              requests: Sequence[Request], hw: HardwareSpec = TPU_V5E,
+              scale: Optional[ScalePolicy] = None):
+    """Build a cluster, serve a trace, and return
+    ``(fleet_summarize(...) dict, cluster)``.  Requests are deep-copied so
+    the caller's trace can be replayed against other configurations."""
+    cluster = Cluster(cfg, serve, modes, router=router, hw=hw, scale=scale)
+    _, span = cluster.run([copy.deepcopy(r) for r in requests])
+    summary = fleet_summarize(cluster.per_replica_records(), serve.slo,
+                              span)
+    return summary, cluster

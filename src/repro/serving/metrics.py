@@ -81,7 +81,27 @@ def summarize(records: List[RequestRecord], slo: SLOConfig,
         "slo_attainment": len(ok_both) / len(done) if done else 0.0,
         "ttft_p50_s": _pct(ttfts, 50),
         "ttft_p95_s": _pct(ttfts, 95),
+        "ttft_p99_s": _pct(ttfts, 99),
         "itl_p50_s": _pct(itls, 50),
         "itl_p95_s": _pct(itls, 95),
         "preemptions": sum(r.preemptions for r in done),
+    }
+
+
+def fleet_summarize(per_replica: Dict[str, List[RequestRecord]],
+                    slo: SLOConfig, span_s: float) -> Dict[str, object]:
+    """Cluster-level aggregation: one fleet-wide summary over the union of
+    all replicas' records, plus the per-replica summaries (every replica
+    shares the cluster's virtual clock, so one span normalizes all)."""
+    union: List[RequestRecord] = [r for recs in per_replica.values()
+                                  for r in recs]
+    fleet = summarize(union, slo, span_s)
+    fleet["replicas"] = len(per_replica)
+    counts = {name: len(recs) for name, recs in per_replica.items()}
+    fleet["min_replica_share"] = (min(counts.values()) / max(1, len(union))
+                                  if counts and union else 0.0)
+    return {
+        "fleet": fleet,
+        "per_replica": {name: summarize(recs, slo, span_s)
+                        for name, recs in per_replica.items()},
     }

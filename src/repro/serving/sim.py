@@ -30,12 +30,16 @@ class EventLoop:
             max_events: int = 50_000_000) -> None:
         n = 0
         while self._heap and n < max_events:
-            t, _, fn = heapq.heappop(self._heap)
-            if until is not None and t > until:
+            # peek before popping: an event past the horizon must stay on
+            # the heap so a resumed run() still delivers it
+            if until is not None and self._heap[0][0] > until:
                 self.now = until
                 return
+            t, _, fn = heapq.heappop(self._heap)
             self.now = t
             fn()
             n += 1
         if n >= max_events:
             raise RuntimeError("event budget exceeded (runaway sim?)")
+        if until is not None and until > self.now:
+            self.now = until

@@ -1,8 +1,29 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — tests and
 benches must see the real single CPU device; only launch/dryrun.py
-forces 512 placeholder devices (task spec)."""
+forces 512 placeholder devices (task spec).
+
+Property-based test modules need ``hypothesis`` (a dev-only dependency,
+see requirements-dev.txt).  When it is absent we drop those modules at
+collection time — tier-1 must never *error* at collection — and say so
+in the report header.
+"""
+import importlib.util
+
 import jax
 import pytest
+
+_HAS_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+_HYPOTHESIS_MODULES = ["test_engines.py", "test_training.py"]
+
+collect_ignore = [] if _HAS_HYPOTHESIS else list(_HYPOTHESIS_MODULES)
+
+
+def pytest_report_header(config):
+    if not _HAS_HYPOTHESIS:
+        return ("hypothesis not installed -> skipping "
+                + ", ".join(_HYPOTHESIS_MODULES)
+                + "  (pip install -r requirements-dev.txt)")
+    return None
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,162 @@
+"""Multi-replica cluster layer: conservation, routing quality,
+single-replica equivalence, mixed fleets, SLO-driven scaling."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core import make_engine
+from repro.core.engines import LoadSnapshot
+from repro.core.request import Request
+from repro.serving import (Cluster, ScalePolicy, TRACES, fleet_summarize,
+                           generate_trace)
+
+ARCH = "llama3-70b"
+
+
+def _serve(mode="rapid"):
+    return ServeConfig(mode=mode, chips=32, slo=SLOConfig(itl_ms=100.0),
+                       disagg_split=(16, 16), max_batch_slots=128)
+
+
+def _trace(qps=6.0, duration=20.0, seed=0):
+    return generate_trace(TRACES["lmsys"], qps=qps, duration_s=duration,
+                          seed=seed)
+
+
+def _skewed_trace(bursts=3, smalls=120):
+    """Bursts of one huge prompt followed by a flood of tiny ones: a
+    count-balancing router parks half the tiny prompts behind the huge
+    prefill; a token-balancing router routes them around it."""
+    reqs, rid, t = [], 0, 0.0
+    for _ in range(bursts):
+        reqs.append(Request(rid=rid, arrival=t, prompt_len=16_000,
+                            max_new_tokens=64))
+        rid += 1
+        for j in range(smalls):
+            reqs.append(Request(rid=rid, arrival=t + 0.005 * (j + 1),
+                                prompt_len=64, max_new_tokens=16))
+            rid += 1
+        t += 5.0
+    return reqs
+
+
+def _p99_ttft(recs):
+    return float(np.percentile(
+        [r.ttft for r in recs if r.ttft is not None], 99))
+
+
+# ---------------------------------------------------------------------------
+# acceptance criteria
+# ---------------------------------------------------------------------------
+
+
+def test_four_replica_conservation():
+    """Per-replica request counts sum to the trace total; every request
+    finishes exactly once."""
+    cfg = get_config(ARCH)
+    reqs = _trace()
+    cluster = Cluster(cfg, _serve(), ["rapid"] * 4, router="least_loaded")
+    recs, span = cluster.run([copy.deepcopy(r) for r in reqs])
+    counts = cluster.per_replica_counts()
+    assert len(counts) == 4
+    assert sum(counts.values()) == len(reqs)
+    assert all(c > 0 for c in counts.values())
+    assert sum(1 for r in recs if r.finish is not None) == len(reqs)
+    per = cluster.per_replica_records()
+    assert sum(len(v) for v in per.values()) == len(reqs)
+    # fleet aggregation sees the union
+    fs = fleet_summarize(per, _serve().slo, span)
+    assert fs["fleet"]["completed"] == len(reqs)
+    assert fs["fleet"]["replicas"] == 4
+
+
+def test_least_loaded_beats_round_robin_p99_ttft_on_skew():
+    cfg = get_config(ARCH)
+    p99 = {}
+    for router in ("round_robin", "least_loaded"):
+        cluster = Cluster(cfg, _serve(), ["rapid"] * 2, router=router)
+        recs, _ = cluster.run([copy.deepcopy(r) for r in _skewed_trace()])
+        assert all(r.finish is not None for r in recs)
+        p99[router] = _p99_ttft(recs)
+    assert p99["least_loaded"] < p99["round_robin"]
+
+
+def test_single_replica_cluster_matches_bare_engine_exactly():
+    cfg = get_config(ARCH)
+    reqs = _trace()
+    for mode in ("rapid", "hybrid", "disagg"):
+        eng = make_engine(mode, cfg, _serve(mode))
+        recs_bare, span_bare = eng.run([copy.deepcopy(r) for r in reqs])
+        cluster = Cluster(cfg, _serve(mode), [mode], router="round_robin")
+        recs_cl, span_cl = cluster.run([copy.deepcopy(r) for r in reqs])
+        assert recs_cl == recs_bare, f"{mode}: cluster != bare engine"
+        assert span_cl == span_bare
+
+
+# ---------------------------------------------------------------------------
+# routers / mixed fleets / snapshots
+# ---------------------------------------------------------------------------
+
+
+def test_slo_aware_router_serves_everything():
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(), ["rapid"] * 2, router="slo_aware")
+    recs, _ = cluster.run([copy.deepcopy(r) for r in _skewed_trace(2, 60)])
+    assert all(r.finish is not None for r in recs)
+    assert _p99_ttft(recs) < np.inf
+
+
+def test_mixed_engine_fleet():
+    cfg = get_config(ARCH)
+    reqs = _trace(qps=4.0, duration=15.0)
+    cluster = Cluster(cfg, _serve(), ["rapid", "hybrid", "disagg"],
+                      router="least_loaded")
+    recs, span = cluster.run([copy.deepcopy(r) for r in reqs])
+    assert sum(1 for r in recs if r.finish is not None) == len(reqs)
+    names = set(cluster.per_replica_counts())
+    assert names == {"rapid-0", "hybrid-1", "disagg-2"}
+
+
+def test_unknown_router_rejected():
+    cfg = get_config(ARCH)
+    with pytest.raises(KeyError):
+        Cluster(cfg, _serve(), ["rapid"], router="fastest")
+
+
+def test_load_snapshot_shape():
+    cfg = get_config(ARCH)
+    for mode in ("rapid", "hybrid", "disagg"):
+        eng = make_engine(mode, cfg, _serve(mode))
+        s = eng.load_snapshot()
+        assert isinstance(s, LoadSnapshot)
+        assert s.queued_requests == 0
+        assert s.queued_prefill_tokens == 0
+        assert s.running_decode == 0
+        # after a submit (no loop run), work is queued
+        eng.submit(Request(rid=0, arrival=0.0, prompt_len=256,
+                           max_new_tokens=8))
+        assert eng.load_snapshot().queued_prefill_tokens >= 256 or \
+            eng.load_snapshot().queued_requests >= 1
+
+
+# ---------------------------------------------------------------------------
+# SLO-driven scaling
+# ---------------------------------------------------------------------------
+
+
+def test_autoscaler_grows_fleet_under_pressure():
+    cfg = get_config(ARCH)
+    reqs = _trace(qps=24.0, duration=20.0)   # far too hot for 1 replica
+    policy = ScalePolicy(min_replicas=1, max_replicas=3,
+                         check_interval_s=2.0, window_s=5.0)
+    cluster = Cluster(cfg, _serve(), ["rapid"], router="least_loaded",
+                      scale=policy)
+    recs, _ = cluster.run([copy.deepcopy(r) for r in reqs])
+    assert cluster.num_replicas > 1
+    assert cluster.num_replicas <= 3
+    assert any(a == "up" for _, a, _ in cluster._scale_events)
+    # conservation survives scaling
+    assert sum(1 for r in recs if r.finish is not None) == len(reqs)
+    assert sum(cluster.per_replica_counts().values()) == len(reqs)

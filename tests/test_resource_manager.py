@@ -1,0 +1,74 @@
+"""AdaptiveResourceManager.allocate: bucket clamping at and beyond the
+largest profiled batch size, exact-boundary lookups, and monotone
+solo -> overalloc -> distinct mode transitions in decode_bs."""
+import pytest
+
+from repro.config import get_reduced_config
+from repro.core.resource_manager import (AdaptiveResourceManager,
+                                         BS_BUCKETS, DecodeProfile,
+                                         build_decode_profile)
+from repro.perfmodel.hw import TPU_V5E
+
+MODE_ORDER = {"solo": 0, "overalloc": 1, "distinct": 2}
+
+
+def _profile(overalloc_limit: int = 16) -> DecodeProfile:
+    # synthetic but structurally faithful: min_f grows with bs
+    min_f = {bs: min(0.9, 0.1 + 0.003 * bs) for bs in BS_BUCKETS}
+    return DecodeProfile(list(BS_BUCKETS), min_f, overalloc_limit,
+                         slo_itl_s=0.1)
+
+
+def test_allocate_above_largest_bucket_clamps():
+    arm = AdaptiveResourceManager(_profile())
+    top = BS_BUCKETS[-1]
+    for bs in (top + 1, top + 100, 10 * top):
+        a = arm.allocate(bs, prefill_active=True)   # must not raise
+        assert a.mode == "distinct"
+        assert a.f_decode == arm.profile.min_f[top]
+
+
+@pytest.mark.parametrize("bs", BS_BUCKETS)
+def test_allocate_exact_bucket_boundaries(bs):
+    arm = AdaptiveResourceManager(_profile(overalloc_limit=0))
+    a = arm.allocate(bs, prefill_active=True)
+    # an exact boundary must hit its own bucket, not the next one up
+    assert a.f_decode == arm.profile.min_f[bs]
+    assert a.f_prefill == pytest.approx(1.0 - a.f_decode)
+
+
+def test_allocate_between_buckets_rounds_up():
+    arm = AdaptiveResourceManager(_profile(overalloc_limit=0))
+    # bs=65 falls between buckets 64 and 96: conservative => bucket 96
+    a = arm.allocate(65, prefill_active=True)
+    assert a.f_decode == arm.profile.min_f[96]
+
+
+def test_mode_transitions_monotone_in_decode_bs():
+    arm = AdaptiveResourceManager(_profile(overalloc_limit=16))
+    seen = []
+    for bs in range(0, 2 * BS_BUCKETS[-1] + 1):
+        a = arm.allocate(bs, prefill_active=True)
+        seen.append(MODE_ORDER[a.mode])
+    assert seen == sorted(seen), "mode must be monotone in decode_bs"
+    assert seen[0] == MODE_ORDER["solo"]          # bs == 0
+    assert MODE_ORDER["overalloc"] in seen
+    assert seen[-1] == MODE_ORDER["distinct"]
+
+
+def test_solo_whenever_prefill_idle():
+    arm = AdaptiveResourceManager(_profile())
+    for bs in (0, 1, 64, BS_BUCKETS[-1] + 5):
+        assert arm.allocate(bs, prefill_active=False).mode == "solo"
+        assert arm.allocate(bs, prefill_active=False).f_decode is None
+
+
+def test_real_profile_clamps_and_is_consistent():
+    cfg = get_reduced_config("llama3-70b")
+    prof = build_decode_profile(cfg, TPU_V5E, chips=1, slo_itl_s=0.1,
+                                avg_ctx=1024, tp=1)
+    arm = AdaptiveResourceManager(prof)
+    a = arm.allocate(BS_BUCKETS[-1] + 123, prefill_active=True)
+    assert a.mode in ("overalloc", "distinct")
+    if a.mode == "distinct":
+        assert 0.0 < a.f_decode <= 0.9

@@ -1,0 +1,57 @@
+"""EventLoop: horizon semantics, resume, ordering."""
+from repro.serving.sim import EventLoop
+
+
+def test_run_until_does_not_drop_past_horizon_events():
+    """Regression: run(until=...) used to pop an event past the horizon
+    and return, silently losing that callback on resume."""
+    loop = EventLoop()
+    fired = []
+    for t in (1.0, 2.0, 5.0):
+        loop.at(t, lambda t=t: fired.append(t))
+    loop.run(until=3.0)
+    assert fired == [1.0, 2.0]
+    assert loop.now == 3.0
+    loop.run()                    # resume: the t=5 event must still fire
+    assert fired == [1.0, 2.0, 5.0]
+    assert loop.now == 5.0
+
+
+def test_run_until_repeated_horizons():
+    loop = EventLoop()
+    fired = []
+    for t in (0.5, 1.5, 2.5, 3.5):
+        loop.at(t, lambda t=t: fired.append(t))
+    for horizon in (1.0, 2.0, 3.0, 4.0):
+        loop.run(until=horizon)
+    assert fired == [0.5, 1.5, 2.5, 3.5]
+
+
+def test_run_until_advances_clock_on_empty_heap():
+    loop = EventLoop()
+    loop.at(1.0, lambda: None)
+    loop.run(until=10.0)
+    assert loop.now == 10.0
+
+
+def test_run_until_exact_boundary_fires():
+    loop = EventLoop()
+    fired = []
+    loop.at(2.0, lambda: fired.append(2.0))
+    loop.run(until=2.0)           # t == until is inside the horizon
+    assert fired == [2.0]
+
+
+def test_events_scheduled_during_run_respect_horizon():
+    loop = EventLoop()
+    fired = []
+
+    def chain():
+        fired.append(loop.now)
+        loop.after(1.0, chain)
+
+    loop.at(0.0, chain)
+    loop.run(until=2.5)
+    assert fired == [0.0, 1.0, 2.0]
+    loop.run(until=4.5)
+    assert fired == [0.0, 1.0, 2.0, 3.0, 4.0]
