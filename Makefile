@@ -1,25 +1,34 @@
 # One-command local/CI entry points.
 #
 #   make dev-deps   install test-only dependencies (hypothesis etc.)
-#   make test       tier-1 suite (what the driver runs)
-#   make smoke      tier-1 + a quick cluster-benchmark smoke
-#   make ci         dev-deps + smoke
+#   make test       tier-1 suite (what the driver runs) + junit report
+#   make smoke      tier-1 + quick benchmark smokes (single-engine fig8/9,
+#                   cluster fig12, admission/preemption fig13)
+#   make ci         dev-deps + smoke  (the one command CI runs)
+#   make lint       ruff style baseline (non-blocking CI job)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: dev-deps test smoke ci bench
+.PHONY: dev-deps test smoke ci bench lint
 
 dev-deps:
-	$(PY) -m pip install -r requirements-dev.txt
+	$(PY) -m pip install -r requirements-dev.txt || \
+		echo "WARNING: offline? dev deps not installed; hypothesis tests will be skipped"
 
 test:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q --junitxml=pytest-report.xml
 
 smoke: test
+	$(PY) -m benchmarks.fig8_throughput --smoke
+	$(PY) -m benchmarks.fig9_goodput --smoke
 	$(PY) -m benchmarks.fig12_cluster_goodput --smoke
+	$(PY) -m benchmarks.fig13_admission_preemption --smoke
 
 ci: dev-deps smoke
+
+lint:
+	$(PY) -m ruff check src benchmarks examples tests
 
 bench:
 	$(PY) -m benchmarks.run

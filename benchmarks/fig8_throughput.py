@@ -3,28 +3,37 @@
 LlaMA-3.1-70B + Mixtral-8x7B x {lmsys, arxiv, loogle} x
 {hybrid(512/1024/2048), disagg, rapid}.  Values normalized to
 chunked(512) at the lowest QPS, per the paper.
+
+    PYTHONPATH=src python -m benchmarks.fig8_throughput [--smoke]
 """
-from benchmarks.common import MODELS, QPS_SWEEP, emit, run_point
+import argparse
+
+from benchmarks.common import DURATION, MODELS, QPS_SWEEP, emit, run_point
 
 TRACES_ = ("lmsys", "arxiv", "loogle")
 BASELINES = [("hybrid", 512), ("hybrid", 1024), ("hybrid", 2048),
              ("disagg", 512), ("rapid", 512)]
+# tiny sweep for CI: one model, one trace, two load points, short trace
+SMOKE = dict(qps_sweep=(2.0, 8.0), traces=("lmsys",),
+             models={"llama3-70b": MODELS["llama3-70b"]}, duration=10.0)
 
 
-def main(qps_sweep=QPS_SWEEP, traces=TRACES_, models=None):
+def main(qps_sweep=QPS_SWEEP, traces=TRACES_, models=None,
+         duration=DURATION):
     rows = []
     summary = {}
     for arch, mcfg in (models or MODELS).items():
         for trace in traces:
             base = run_point(arch, "hybrid", trace, qps_sweep[0],
-                             mcfg["slo_itl_ms"], 512)
+                             mcfg["slo_itl_ms"], 512, duration=duration)
             norm = max(base["throughput_tok_s"], 1e-9)
             best_gain = 0.0
             for mode, chunk in BASELINES:
                 label = mode if mode != "hybrid" else f"hybrid{chunk}"
                 for qps in qps_sweep:
                     s = run_point(arch, mode, trace, qps,
-                                  mcfg["slo_itl_ms"], chunk)
+                                  mcfg["slo_itl_ms"], chunk,
+                                  duration=duration)
                     v = s["throughput_tok_s"] / norm
                     rows.append((f"fig8_{arch}_{trace}_{label}_qps{qps}",
                                  f"{v:.3f}", "norm_thpt"))
@@ -47,4 +56,8 @@ def main(qps_sweep=QPS_SWEEP, traces=TRACES_, models=None):
 
 
 if __name__ == "__main__":
-    main()
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny sweep (<30 s) for CI")
+    args = p.parse_args()
+    main(**SMOKE) if args.smoke else main()

@@ -2,29 +2,38 @@
 
 Goodput = SLO-satisfying requests completed per second; TTFT ceiling is
 length-proportional (1 s per 1000 prompt tokens), ITL SLO per model.
+
+    PYTHONPATH=src python -m benchmarks.fig9_goodput [--smoke]
 """
-from benchmarks.common import MODELS, QPS_SWEEP, emit, run_point
+import argparse
+
+from benchmarks.common import DURATION, MODELS, QPS_SWEEP, emit, run_point
 
 TRACES_ = ("lmsys", "arxiv")
 BASELINES = [("hybrid", 512), ("hybrid", 1024), ("hybrid", 2048),
              ("disagg", 512), ("rapid", 512)]
 METRIC = "goodput_req_s"
+# tiny sweep for CI: one model, one trace, two load points, short trace
+SMOKE = dict(qps_sweep=(2.0, 8.0), traces=("lmsys",),
+             models={"llama3-70b": MODELS["llama3-70b"]}, duration=10.0)
 
 
-def main(metric=METRIC, tag="fig9", qps_sweep=QPS_SWEEP, traces=TRACES_):
+def main(metric=METRIC, tag="fig9", qps_sweep=QPS_SWEEP, traces=TRACES_,
+         models=None, duration=DURATION):
     rows = []
     gains = []
-    for arch, mcfg in MODELS.items():
+    for arch, mcfg in (models or MODELS).items():
         for trace in traces:
             base = run_point(arch, "hybrid", trace, qps_sweep[0],
-                             mcfg["slo_itl_ms"], 512)
+                             mcfg["slo_itl_ms"], 512, duration=duration)
             norm = max(base[metric], 1e-9)
             per_qps = {}
             for mode, chunk in BASELINES:
                 label = mode if mode != "hybrid" else f"hybrid{chunk}"
                 for qps in qps_sweep:
                     s = run_point(arch, mode, trace, qps,
-                                  mcfg["slo_itl_ms"], chunk)
+                                  mcfg["slo_itl_ms"], chunk,
+                                  duration=duration)
                     rows.append((f"{tag}_{arch}_{trace}_{label}_qps{qps}",
                                  f"{s[metric] / norm:.3f}",
                                  f"norm_{metric}"))
@@ -45,4 +54,8 @@ def main(metric=METRIC, tag="fig9", qps_sweep=QPS_SWEEP, traces=TRACES_):
 
 
 if __name__ == "__main__":
-    main()
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny sweep (<30 s) for CI")
+    args = p.parse_args()
+    main(**SMOKE) if args.smoke else main()

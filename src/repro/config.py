@@ -297,6 +297,7 @@ class ServeConfig:
     max_batch_slots: int = 64       # decode batch slots
     max_seq_len: int = 32_768
     page_size: int = 16             # tokens per KV page
+    kv_reserve_frac: float = 0.05   # HBM held back from the KV pool
     chunk_size: int = 512           # hybrid batching prefill chunk
     token_budget: int = 2048        # hybrid per-iteration token budget
     prefill_max_tokens: int = 16_384  # rapid: max prompt tokens per prefill step

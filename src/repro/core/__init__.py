@@ -1,5 +1,8 @@
 """RAPID-Serve core: the paper's serving engine + baselines."""
 from repro.core.request import Request, State  # noqa: F401
+from repro.core.preemption import (  # noqa: F401
+    DEFAULT_PREEMPTION, PreemptionPolicy,
+)
 from repro.core.resource_manager import (  # noqa: F401
     AdaptiveResourceManager, Allocation, DecodeProfile,
     build_decode_profile,

@@ -36,6 +36,7 @@ import dataclasses
 from typing import Deque, Dict, List, Optional
 
 from repro.config import ServeConfig
+from repro.core.preemption import DEFAULT_PREEMPTION, PreemptionPolicy
 from repro.core.request import Request, State
 from repro.core.resource_manager import (AdaptiveResourceManager,
                                          build_decode_profile)
@@ -77,6 +78,12 @@ class LoadSnapshot:
     quantity a least-loaded router balances.  ``decode_ctx_tokens`` is the
     total live context of the running decode batch, which the SLO-aware
     router feeds to the decode cost model.
+
+    ``kv_free_blocks`` / ``kv_total_blocks`` describe the decode-side
+    paged-KV pool, and ``queued_kv_pages`` the pages that queued-but-
+    unallocated requests will claim when admitted — together they let the
+    cluster admission controller project whether a new request fits
+    without the engine ever hitting ``OutOfBlocks`` mid-flight.
     """
     queued_requests: int
     queued_prefill_tokens: int
@@ -85,18 +92,24 @@ class LoadSnapshot:
     kv_utilization: float
     prefill_busy: bool
     decode_busy: bool
+    kv_free_blocks: int = 0
+    kv_total_blocks: int = 0
+    queued_kv_pages: int = 0
 
 
 class BaseEngine:
     def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E,
-                 loop: Optional[EventLoop] = None):
+                 loop: Optional[EventLoop] = None,
+                 preempt_policy: PreemptionPolicy = DEFAULT_PREEMPTION):
         self.cfg = cfg
         self.serve = serve
         self.hw = hw
         # injected loop => this engine is one replica of a cluster sharing
         # a single virtual clock; standalone engines own a private loop
         self.loop = loop if loop is not None else EventLoop()
+        self.preempt_policy = preempt_policy
         self.finished: List[Request] = []
+        self.rejected: List[Request] = []
         self.util_samples: List[UtilSample] = []
         self._all: List[Request] = []
 
@@ -134,6 +147,77 @@ class BaseEngine:
     def load_snapshot(self) -> LoadSnapshot:
         raise NotImplementedError
 
+    # -- admission: clean per-request rejection ------------------------------
+    def _reject(self, r: Request) -> None:
+        """A request whose prompt can never fit the pool is turned away
+        instead of deadlocking the queue head (or, for disagg, retrying
+        forever) — the caller sees ``state == REJECTED``, never an
+        ``OutOfBlocks`` escaping the event loop."""
+        r.state = State.REJECTED
+        r.blocks = None
+        self.rejected.append(r)
+
+    def _prompt_fits_pool(self, prompt_len: int, kv) -> bool:
+        return kv_pages_for(prompt_len, self.serve.page_size) <= \
+            kv.allocator.num_blocks
+
+    # -- local preemption (template; queue re-entry is engine-specific) -----
+    def _requeue_preempted(self, victim: Request) -> None:
+        raise NotImplementedError
+
+    def _preempt_victim(self) -> Optional[Request]:
+        """Preempt one running request (recompute on resume); the shared
+        ``PreemptionPolicy`` ranks victims, each engine re-queues its own
+        way."""
+        victim = self._evict_running()
+        if victim is not None:
+            self._requeue_preempted(victim)
+        return victim
+
+    def _evict_running(self) -> Optional[Request]:
+        victim = self.preempt_policy.choose(self.running)
+        if victim is None:
+            return None
+        self.running.remove(victim)
+        self.kv.preempt(victim.rid)
+        victim.preemptions += 1
+        victim.blocks = None
+        victim.prefill_tokens_done = 0
+        return victim
+
+    # -- cross-replica migration (cluster rebalance tick) -------------------
+    def _pop_queued_for_migration(self) -> Optional[Request]:
+        """Newest request still waiting for KV/prefill — it holds no KV,
+        so moving it is a free re-route.  Engine-specific queue."""
+        return None
+
+    def migration_candidate(self):
+        """Peek at what ``evict_for_migration`` would take: (request,
+        has_kv) or None.  No side effects — the cluster uses this to
+        check bucket compatibility and migration caps before evicting."""
+        q = self._peek_queued_for_migration()
+        if q is not None:
+            return q, False
+        victim = self.preempt_policy.choose(self.running)
+        return (victim, True) if victim is not None else None
+
+    def _peek_queued_for_migration(self) -> Optional[Request]:
+        return None
+
+    def evict_for_migration(self):
+        """Remove one request from this engine entirely for re-enqueue on
+        another replica.  Returns (request, had_kv) or None; ``had_kv``
+        means live KV was dropped (the cluster charges a transfer cost)."""
+        q = self._pop_queued_for_migration()
+        if q is not None:
+            q.state = State.ARRIVED
+            return q, False
+        victim = self._evict_running()
+        if victim is None:
+            return None
+        victim.state = State.ARRIVED
+        return victim, True
+
 
 # ---------------------------------------------------------------------------
 # RAPID-Serve
@@ -146,7 +230,8 @@ class RapidEngine(BaseEngine):
                  loop: Optional[EventLoop] = None):
         super().__init__(cfg, serve, hw, loop=loop)
         tp = serve.chips
-        blocks = kv_pool_blocks(cfg, hw, serve.chips, serve.page_size)
+        blocks = kv_pool_blocks(cfg, hw, serve.chips, serve.page_size,
+                                serve.kv_reserve_frac)
         self.kv = KVCacheManager(blocks, serve.page_size)
         profile = build_decode_profile(
             cfg, hw, serve.chips, serve.slo.itl_ms / 1e3, avg_ctx_hint,
@@ -174,8 +259,15 @@ class RapidEngine(BaseEngine):
 
     def _drain_waiting_kv(self) -> None:
         progressed = False
-        while self.waiting_kv and \
-                self.kv.can_allocate(self.waiting_kv[0].prompt_len):
+        while self.waiting_kv:
+            head = self.waiting_kv[0]
+            if not self._prompt_fits_pool(head.prompt_len, self.kv):
+                # can NEVER fit: reject cleanly instead of wedging the
+                # queue head (everything behind it would starve)
+                self._reject(self.waiting_kv.popleft())
+                continue
+            if not self.kv.can_allocate(head.prompt_len):
+                break
             r = self.waiting_kv.popleft()
             r.blocks = self.kv.allocate_prompt(r.rid, r.prompt_len)
             r.t_blocks = self.loop.now
@@ -290,18 +382,16 @@ class RapidEngine(BaseEngine):
             self._drain_waiting_kv()
         self._kick_decode()
 
-    def _preempt_victim(self) -> Optional[Request]:
-        """Preempt the newest running request (recompute on resume)."""
-        if not self.running:
-            return None
-        victim = max(self.running, key=lambda r: r.arrival)
-        self.running.remove(victim)
-        self.kv.preempt(victim.rid)
-        victim.preemptions += 1
+    def _requeue_preempted(self, victim: Request) -> None:
         victim.state = State.WAITING_KV
-        victim.blocks = None
         self.waiting_kv.appendleft(victim)
-        return victim
+
+    def _peek_queued_for_migration(self) -> Optional[Request]:
+        # waiting_kv holds no blocks yet; waiting_prefill already does
+        return self.waiting_kv[-1] if self.waiting_kv else None
+
+    def _pop_queued_for_migration(self) -> Optional[Request]:
+        return self.waiting_kv.pop() if self.waiting_kv else None
 
     def load_snapshot(self) -> LoadSnapshot:
         queued = (list(self.waiting_kv) + list(self.waiting_prefill)
@@ -309,6 +399,7 @@ class RapidEngine(BaseEngine):
         pending_tokens = sum(r.prompt_len for r in self.waiting_kv) + \
             sum(r.prompt_len for r in self.waiting_prefill) + \
             self.inflight_prefill_tokens
+        ps = self.serve.page_size
         return LoadSnapshot(
             queued_requests=len(queued),
             queued_prefill_tokens=pending_tokens,
@@ -316,7 +407,11 @@ class RapidEngine(BaseEngine):
             decode_ctx_tokens=sum(r.context_len for r in self.running),
             kv_utilization=self.kv.utilization,
             prefill_busy=self.prefill_busy,
-            decode_busy=self.decode_busy)
+            decode_busy=self.decode_busy,
+            kv_free_blocks=self.kv.allocator.free_count,
+            kv_total_blocks=self.kv.allocator.num_blocks,
+            queued_kv_pages=sum(kv_pages_for(r.prompt_len, ps)
+                                for r in self.waiting_kv))
 
 
 # ---------------------------------------------------------------------------
@@ -329,7 +424,8 @@ class HybridEngine(BaseEngine):
                  loop: Optional[EventLoop] = None):
         super().__init__(cfg, serve, hw, loop=loop)
         self.tp = serve.chips
-        blocks = kv_pool_blocks(cfg, hw, serve.chips, serve.page_size)
+        blocks = kv_pool_blocks(cfg, hw, serve.chips, serve.page_size,
+                                serve.kv_reserve_frac)
         self.kv = KVCacheManager(blocks, serve.page_size)
         self.waiting: Deque[Request] = collections.deque()
         self.chunking: List[Request] = []   # admitted, prompt in progress
@@ -342,10 +438,15 @@ class HybridEngine(BaseEngine):
         self._kick()
 
     def _admit(self) -> None:
-        while self.waiting and \
-                self.kv.can_allocate(self.waiting[0].prompt_len) and \
-                len(self.chunking) + len(self.running) < \
-                self.serve.max_batch_slots:
+        while self.waiting:
+            head = self.waiting[0]
+            if not self._prompt_fits_pool(head.prompt_len, self.kv):
+                self._reject(self.waiting.popleft())
+                continue
+            if not self.kv.can_allocate(head.prompt_len) or \
+                    len(self.chunking) + len(self.running) >= \
+                    self.serve.max_batch_slots:
+                break
             r = self.waiting.popleft()
             r.blocks = self.kv.allocate_prompt(r.rid, r.prompt_len)
             r.t_blocks = self.loop.now
@@ -424,22 +525,21 @@ class HybridEngine(BaseEngine):
         del freed
         self._kick()
 
-    def _preempt_victim(self) -> Optional[Request]:
-        if not self.running:
-            return None
-        victim = max(self.running, key=lambda r: r.arrival)
-        self.running.remove(victim)
-        self.kv.preempt(victim.rid)
-        victim.preemptions += 1
+    def _requeue_preempted(self, victim: Request) -> None:
         # recompute-on-resume: the whole context becomes the new "prompt"
-        victim.prefill_tokens_done = 0
         victim.state = State.WAITING_KV
         self.waiting.appendleft(victim)
-        return victim
+
+    def _peek_queued_for_migration(self) -> Optional[Request]:
+        return self.waiting[-1] if self.waiting else None
+
+    def _pop_queued_for_migration(self) -> Optional[Request]:
+        return self.waiting.pop() if self.waiting else None
 
     def load_snapshot(self) -> LoadSnapshot:
         pending_tokens = sum(r.prompt_len for r in self.waiting) + \
             sum(r.prompt_len - r.prefill_tokens_done for r in self.chunking)
+        ps = self.serve.page_size
         return LoadSnapshot(
             queued_requests=len(self.waiting) + len(self.chunking),
             queued_prefill_tokens=pending_tokens,
@@ -447,7 +547,11 @@ class HybridEngine(BaseEngine):
             decode_ctx_tokens=sum(r.context_len for r in self.running),
             kv_utilization=self.kv.utilization,
             prefill_busy=self.busy,
-            decode_busy=self.busy)
+            decode_busy=self.busy,
+            kv_free_blocks=self.kv.allocator.free_count,
+            kv_total_blocks=self.kv.allocator.num_blocks,
+            queued_kv_pages=sum(kv_pages_for(r.prompt_len, ps)
+                                for r in self.waiting))
 
 
 # ---------------------------------------------------------------------------
@@ -462,8 +566,10 @@ class DisaggEngine(BaseEngine):
         self.chips_p, self.chips_d = serve.disagg_split
         # each pool holds a full weight replica; KV capacity only matters
         # on the decode side (the §3.2.2 imbalance)
-        blocks_d = kv_pool_blocks(cfg, hw, self.chips_d, serve.page_size)
-        blocks_p = kv_pool_blocks(cfg, hw, self.chips_p, serve.page_size)
+        blocks_d = kv_pool_blocks(cfg, hw, self.chips_d, serve.page_size,
+                                  serve.kv_reserve_frac)
+        blocks_p = kv_pool_blocks(cfg, hw, self.chips_p, serve.page_size,
+                                  serve.kv_reserve_frac)
         self.kv = KVCacheManager(blocks_d, serve.page_size)       # decode
         self.kv_p = KVCacheManager(blocks_p, serve.page_size)     # transient
         self.waiting_prefill: Deque[Request] = collections.deque()
@@ -489,6 +595,13 @@ class DisaggEngine(BaseEngine):
         tokens = 0
         while self.waiting_prefill:
             nxt = self.waiting_prefill[0]
+            if not self._prompt_fits_pool(nxt.prompt_len, self.kv_p) or \
+                    not self._prompt_fits_pool(nxt.prompt_len, self.kv):
+                # oversized for the prefill pool (queue-head wedge) or the
+                # decode pool (would retry admission forever in
+                # _kv_arrived): reject up front
+                self._reject(self.waiting_prefill.popleft())
+                continue
             if not self.kv_p.can_allocate(nxt.prompt_len):
                 break
             if batch and tokens + nxt.prompt_len > self.serve.prefill_max_tokens:
@@ -526,12 +639,25 @@ class DisaggEngine(BaseEngine):
         self._kick_prefill()
 
     def _kv_arrived(self, r: Request) -> None:
-        self.kv_p.free(r.rid)           # prefill-side memory released
+        self.kv_p.free(r.rid)           # prefill-side memory released ONCE
         self._kick_prefill()
+        self._try_admit_decode(r)
+
+    def _try_admit_decode(self, r: Request) -> None:
+        """Decode-side admission after transfer; retries must re-enter
+        here, NOT _kv_arrived, or the kv_p seq would be freed twice."""
+        if not self._prompt_fits_pool(r.prompt_len, self.kv):
+            # can NEVER fit the decode pool — without this the retry loop
+            # below spins until the event budget blows up (the OutOfBlocks
+            # flavour this engine used to surface); reject cleanly
+            self.inflight_transfers -= 1
+            self.inflight_transfer_tokens -= r.prompt_len
+            self._reject(r)
+            return
         if not self.kv.can_allocate(r.prompt_len):
             # decode pool full: back-pressure; retry on next decode step
             self.loop.after(self.serve.slo.itl_ms / 1e3,
-                            lambda: self._kv_arrived(r))
+                            lambda: self._try_admit_decode(r))
             return
         r.blocks = self.kv.allocate_prompt(r.rid, r.prompt_len)
         r.state = State.PREFILL_FINISHED
@@ -582,22 +708,21 @@ class DisaggEngine(BaseEngine):
         self.util_samples.append(UtilSample(now, self.kv.utilization, True))
         self._kick_decode()
 
-    def _preempt_victim(self) -> Optional[Request]:
-        if not self.running:
-            return None
-        victim = max(self.running, key=lambda r: r.arrival)
-        self.running.remove(victim)
-        self.kv.preempt(victim.rid)
-        victim.preemptions += 1
+    def _requeue_preempted(self, victim: Request) -> None:
         victim.state = State.WAITING_PREFILL
-        victim.prefill_tokens_done = 0
         self.waiting_prefill.appendleft(victim)
         self._kick_prefill()
-        return victim
+
+    def _peek_queued_for_migration(self) -> Optional[Request]:
+        return self.waiting_prefill[-1] if self.waiting_prefill else None
+
+    def _pop_queued_for_migration(self) -> Optional[Request]:
+        return self.waiting_prefill.pop() if self.waiting_prefill else None
 
     def load_snapshot(self) -> LoadSnapshot:
         pending_tokens = sum(r.prompt_len for r in self.waiting_prefill) + \
             self.inflight_prefill_tokens
+        ps = self.serve.page_size
         # transfers in flight count as imminent decode load: they are done
         # with prefill but WILL join the decode batch, so both routers and
         # the autoscaler's idle detection must see them
@@ -610,7 +735,12 @@ class DisaggEngine(BaseEngine):
             + self.inflight_transfer_tokens,
             kv_utilization=self.kv.utilization,
             prefill_busy=self.prefill_busy,
-            decode_busy=self.decode_busy)
+            decode_busy=self.decode_busy,
+            kv_free_blocks=self.kv.allocator.free_count,
+            kv_total_blocks=self.kv.allocator.num_blocks,
+            queued_kv_pages=sum(kv_pages_for(r.prompt_len, ps)
+                                for r in self.waiting_prefill)
+            + kv_pages_for(self.inflight_transfer_tokens, ps))
 
 
 ENGINES = {

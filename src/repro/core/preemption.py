@@ -1,0 +1,41 @@
+"""Victim selection shared by every engine and the cluster rebalancer.
+
+Each engine used to carry its own copy of ``_preempt_victim``'s chooser
+(newest running request loses — recompute-on-resume is cheapest for the
+request with the least sunk prefill work).  The cluster-level
+cross-replica preemption/migration tick needs the *same* ranking, so the
+choice lives here as a small policy object the engines and the cluster
+both consult.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionPolicy:
+    """Ranks running requests for eviction.
+
+    ``newest``        — latest arrival loses (least sunk work; default,
+                        matches the engines' historical behaviour).
+    ``least_progress``— fewest generated tokens loses (minimizes wasted
+                        decode work when arrivals are bursty).
+    """
+
+    order: str = "newest"
+
+    def choose(self, running: Sequence[Request]) -> Optional[Request]:
+        if not running:
+            return None
+        if self.order == "newest":
+            return max(running, key=lambda r: r.arrival)
+        if self.order == "least_progress":
+            return min(running, key=lambda r: (r.tokens_generated,
+                                               -r.arrival))
+        raise ValueError(f"unknown preemption order {self.order!r}")
+
+
+DEFAULT_PREEMPTION = PreemptionPolicy()

@@ -24,6 +24,7 @@ class State(enum.Enum):
     DECODING = "decoding"
     FINISHED = "finished"
     PREEMPTED = "preempted"
+    REJECTED = "rejected"              # admission control turned it away
 
 
 @dataclasses.dataclass

@@ -10,7 +10,16 @@ Multi-replica cluster serving (shared virtual clock, pluggable router):
         --qps 24 --replicas 4 --router least_loaded --mode rapid
 
 ``--mix rapid,rapid,hybrid`` overrides ``--mode``/``--replicas`` with an
-explicit per-replica engine list.
+explicit per-replica engine list; heterogeneous fleets use
+``mode:COUNTxCHIPS`` groups with the BucketServe-style router:
+
+    python -m repro.launch.serve --arch llama3-70b --trace loogle \
+        --qps 8 --mix rapid:2x16,rapid:1x32 --router bucketed \
+        --admission --rebalance
+
+``--admission`` enables KV-aware admission control (queue/redirect/
+reject arrivals that would overflow a replica's block pool);
+``--rebalance`` enables the cross-replica preemption/migration tick.
 
 Engine logic is real; step durations come from the calibrated TPU-v5e
 perfmodel (this container has no accelerator — DESIGN.md §6).  Use
@@ -25,7 +34,8 @@ import json
 
 from repro.config import SLOConfig, ServeConfig, get_config, list_archs
 from repro.core import make_engine
-from repro.serving import (ROUTERS, TRACES, generate_trace, run_fleet,
+from repro.serving import (AdmissionPolicy, RebalancePolicy, ROUTERS,
+                           TRACES, generate_trace, parse_mix, run_fleet,
                            summarize)
 
 
@@ -52,15 +62,19 @@ def run_one(arch: str, mode: str, trace: str, qps: float, duration: float,
 
 def run_cluster(arch: str, modes, router: str, trace: str, qps: float,
                 duration: float, chips: int, slo_itl_ms: float,
-                chunk: int = 512, seed: int = 0, max_slots: int = 128):
+                chunk: int = 512, seed: int = 0, max_slots: int = 128,
+                admission: AdmissionPolicy = None,
+                rebalance: RebalancePolicy = None):
     """Run a trace against an N-replica cluster; returns the fleet/per-
     replica summary dict from ``fleet_summarize`` plus the fleet span."""
     cfg = get_config(arch)
     slo = SLOConfig(itl_ms=slo_itl_ms)
-    serve = _serve_config(modes[0], chips, slo, chunk, max_slots)
+    mode0 = modes[0] if isinstance(modes[0], str) else modes[0].mode
+    serve = _serve_config(mode0, chips, slo, chunk, max_slots)
     reqs = generate_trace(TRACES[trace], qps=qps, duration_s=duration,
                           seed=seed)
-    out, _ = run_fleet(cfg, serve, modes, router, reqs)
+    out, _ = run_fleet(cfg, serve, modes, router, reqs,
+                       admission=admission, rebalance=rebalance)
     out["router"] = router
     return out
 
@@ -82,27 +96,48 @@ def main(argv=None):
                    choices=sorted(ROUTERS))
     p.add_argument("--mix", default=None,
                    help="comma-separated per-replica engine modes, e.g. "
-                        "'rapid,rapid,hybrid' (overrides --mode/--replicas)")
+                        "'rapid,rapid,hybrid', or heterogeneous "
+                        "'mode:COUNTxCHIPS' groups like 'rapid:2x16,"
+                        "hybrid:1x32' (overrides --mode/--replicas)")
+    p.add_argument("--admission", action="store_true",
+                   help="KV-aware admission control at the cluster")
+    p.add_argument("--kv-headroom", type=float, default=0.9,
+                   help="admission: max projected pool occupancy")
+    p.add_argument("--admission-max-wait", type=float, default=60.0,
+                   help="admission: queueing deadline before rejection (s)")
+    p.add_argument("--rebalance", action="store_true",
+                   help="cross-replica preemption/migration tick")
     p.add_argument("--json", default=None)
     args = p.parse_args(argv)
 
     out = {}
-    if args.mix or args.replicas > 1:
+    if args.mix or args.replicas > 1 or args.admission or args.rebalance:
         if args.mode == "all" and not args.mix:
             p.error("--mode all cannot combine with --replicas; use "
                     "--mix rapid,hybrid,disagg to build a mixed fleet")
-        mix = args.mix.split(",") if args.mix \
+        mix = parse_mix(args.mix) if args.mix \
             else [args.mode] * args.replicas
+        admission = AdmissionPolicy(kv_headroom=args.kv_headroom,
+                                    max_wait_s=args.admission_max_wait) \
+            if args.admission else None
+        rebalance = RebalancePolicy() if args.rebalance else None
         res = run_cluster(args.arch, mix, args.router, args.trace,
                           args.qps, args.duration, args.chips,
-                          args.slo_itl_ms, args.chunk)
+                          args.slo_itl_ms, args.chunk,
+                          admission=admission, rebalance=rebalance)
         out["cluster"] = res
         f = res["fleet"]
-        print(f"cluster[{'+'.join(mix)} | {args.router}] "
+        names = [m if isinstance(m, str)
+                 else (f"{m.mode}x{m.chips}" if m.chips else m.mode)
+                 for m in mix]
+        print(f"cluster[{'+'.join(names)} | {args.router}] "
               f"thpt={f['throughput_tok_s']:9.1f} tok/s  "
               f"goodput={f['goodput_req_s']:6.2f} req/s  "
               f"ttft_p99={f['ttft_p99_s']:7.2f}s  "
-              f"slo_ok={f['slo_attainment'] * 100:5.1f}%")
+              f"slo_ok={f['slo_attainment'] * 100:5.1f}%  "
+              f"rej={f['rejected']}  migr={f['migrations']}")
+        if res.get("admission"):
+            print(f"  admission: {res['admission']}")
         for name, s in res["per_replica"].items():
             print(f"  {name:10s} n={s['requests']:4d}  "
                   f"thpt={s['throughput_tok_s']:9.1f} tok/s  "

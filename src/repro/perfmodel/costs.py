@@ -179,3 +179,13 @@ def decode_cost(cfg, batch: int, ctx_tokens_total: float, tp: int = 1,
 def kv_transfer_bytes(cfg, prompt_len: int, dtype_bytes: int = 2) -> float:
     """Disaggregated serving: KV moved prefill->decode instance."""
     return float(prompt_len) * cfg.kv_bytes_per_token(dtype_bytes)
+
+
+def kv_migration_seconds(cfg, context_tokens: int, link_gbps: float,
+                         dtype_bytes: int = 2) -> float:
+    """Cross-replica preemption/migration: the victim's live context KV
+    shipped over the inter-replica link before it can re-enqueue on the
+    destination (the cluster rebalancer charges this on every move of a
+    running request)."""
+    return kv_transfer_bytes(cfg, context_tokens, dtype_bytes) / \
+        max(link_gbps, 1e-9) / 1e9

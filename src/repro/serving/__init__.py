@@ -2,5 +2,8 @@ from repro.serving.sim import EventLoop  # noqa: F401
 from repro.serving.traces import TRACES, generate_trace, TraceSpec  # noqa: F401
 from repro.serving.metrics import (  # noqa: F401
     RequestRecord, fleet_summarize, summarize)
+from repro.serving.admission import (  # noqa: F401
+    AdmissionController, AdmissionPolicy)
 from repro.serving.cluster import (  # noqa: F401
-    Cluster, ROUTERS, Replica, ScalePolicy, make_router, run_fleet)
+    BucketedRouter, Cluster, ROUTERS, RebalancePolicy, Replica,
+    ReplicaSpec, ScalePolicy, make_router, parse_mix, run_fleet)

@@ -1,0 +1,107 @@
+"""Cluster-level KV-aware admission control.
+
+The PR-1 routers place every arrival unconditionally; under KV pressure
+the engine then discovers the overflow *mid-flight* and preempts
+(recompute-on-resume), which burns prefill work exactly when the fleet
+can least afford it.  The admission controller moves that discovery to
+arrival time: it projects the new request's KV footprint
+(``kvcache.manager.kv_pages_for`` over prompt + expected decode tokens)
+against each replica's live pool state (``LoadSnapshot.kv_utilization``
+/ ``kv_free_blocks`` plus the pages its queued-but-unallocated requests
+will claim) and
+
+  * **admits** on the subset of replicas with headroom (the router picks
+    among those — a redirect when its unconstrained choice was full),
+  * **queues** the arrival cluster-side and retries when no replica has
+    headroom right now, and
+  * **rejects** cleanly when the prompt can never fit any replica's pool
+    or the queueing deadline expires — instead of letting an engine hit
+    ``OutOfBlocks`` (or preemption-thrash) mid-flight.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.request import Request
+from repro.kvcache import kv_pages_for
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Knobs for the KV-aware admission controller.
+
+    ``kv_headroom`` is the pool fraction the projected post-admit
+    occupancy may not exceed (the margin absorbs decode growth of
+    already-running requests).  ``projected_output_frac`` scales the
+    request's ``max_new_tokens`` in the footprint projection — 1.0
+    reserves for the worst case, smaller values statistically multiplex.
+    """
+    kv_headroom: float = 0.90
+    projected_output_frac: float = 0.5
+    retry_s: float = 0.25           # cluster-side queue poll interval
+    max_wait_s: float = 60.0        # queued longer than this => reject
+
+
+class AdmissionController:
+    """Stateful decision maker; one per cluster."""
+
+    def __init__(self, policy: AdmissionPolicy):
+        self.policy = policy
+        self.stats: Dict[str, int] = collections.Counter()
+        self._first_seen: Dict[int, float] = {}
+
+    # -- projections --------------------------------------------------------
+    def projected_pages(self, r: Request, page_size: int) -> int:
+        horizon = r.prompt_len + int(
+            round(self.policy.projected_output_frac * r.max_new_tokens))
+        return kv_pages_for(horizon, page_size)
+
+    def fits(self, replica, r: Request, snap=None) -> bool:
+        """Would admitting ``r`` keep the replica's projected pool
+        occupancy (live + queued claims + this request) under headroom?"""
+        s = snap if snap is not None else replica.snapshot()
+        if s.kv_total_blocks <= 0:
+            return True        # engine without a paged pool: no signal
+        pages = self.projected_pages(r, replica.serve.page_size)
+        used = s.kv_total_blocks - s.kv_free_blocks
+        return used + s.queued_kv_pages + pages <= \
+            self.policy.kv_headroom * s.kv_total_blocks
+
+    def feasible(self, replica, r: Request, snap=None) -> bool:
+        """Can the prompt *ever* fit this replica's pool?"""
+        s = snap if snap is not None else replica.snapshot()
+        if s.kv_total_blocks <= 0:
+            return True
+        return kv_pages_for(r.prompt_len, replica.serve.page_size) <= \
+            s.kv_total_blocks
+
+    # -- the decision -------------------------------------------------------
+    def decide(self, r: Request, replicas: Sequence, now: float
+               ) -> Tuple[str, Optional[List]]:
+        """Returns ``("admit", fit_replicas)``, ``("wait", None)`` or
+        ``("reject", None)``."""
+        # one snapshot per replica per decision: snapshots walk whole
+        # queues, and decide() re-runs every retry tick under overload
+        snaps = [(rep, rep.snapshot()) for rep in replicas]
+        feasible = [(rep, s) for rep, s in snaps
+                    if self.feasible(rep, r, snap=s)]
+        if not feasible:
+            self.stats["rejected_infeasible"] += 1
+            self._first_seen.pop(r.rid, None)
+            return "reject", None
+        fit = [rep for rep, s in feasible if self.fits(rep, r, snap=s)]
+        if fit:
+            self.stats["admitted"] += 1
+            if len(fit) < len(replicas):
+                self.stats["redirected"] += 1
+            self._first_seen.pop(r.rid, None)
+            return "admit", fit
+        first = self._first_seen.setdefault(r.rid, now)
+        if now - first >= self.policy.max_wait_s:
+            self.stats["rejected_timeout"] += 1
+            self._first_seen.pop(r.rid, None)
+            return "reject", None
+        self.stats["delayed"] += 1
+        return "wait", None

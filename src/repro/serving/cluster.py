@@ -15,25 +15,44 @@ virtual clock), behind a pluggable router:
 Routing happens at arrival time on the shared loop, so routers see each
 replica's live load — exactly the information a fleet front-end has.
 
+  * ``bucketed``      — BucketServe-style length bucketing for
+    *heterogeneous* fleets: each replica advertises a prompt-length
+    ceiling proportional to its chip count; requests go to the smallest
+    compatible tier (tie-broken by capacity-normalized load), so short
+    prompts never occupy the big replicas that long prompts need.
+
 Optional SLO-driven scaling (``ScalePolicy``): a periodic controller
 watches the recent TTFT-attainment window and adds replicas (up to
 ``max_replicas``) while the fleet is missing SLO, and retires drained
 surplus replicas down to ``min_replicas``.  Retired replicas stop
 receiving traffic but keep running until their queues drain, so no
 request is lost.
+
+Optional KV-aware admission (``AdmissionPolicy``, serving/admission.py):
+arrivals whose projected KV footprint would overflow every replica's
+pool are queued cluster-side (and eventually rejected) instead of being
+placed and preempted mid-flight.
+
+Optional cross-replica preemption/migration (``RebalancePolicy``): a
+periodic tick picks victims on KV-overloaded replicas via the shared
+``PreemptionPolicy`` (core/preemption.py), charges the KV-transfer cost
+from perfmodel/costs.py, and re-enqueues them on the least-loaded
+compatible replica — the placement is *revoked*, which the PR-1 router
+never did.
 """
 from __future__ import annotations
 
 import copy
 import dataclasses
 from typing import (TYPE_CHECKING, Callable, Dict, List, Optional,
-                    Sequence)
+                    Sequence, Union)
 
 from repro.config import ServeConfig
-from repro.core.request import Request
+from repro.core.request import Request, State
 from repro.perfmodel import costs as C
 from repro.perfmodel import interference as I
 from repro.perfmodel.hw import TPU_V5E, HardwareSpec
+from repro.serving.admission import AdmissionController, AdmissionPolicy
 from repro.serving.metrics import (RequestRecord, fleet_summarize,
                                    ttft_ceiling)
 from repro.serving.sim import EventLoop
@@ -42,11 +61,49 @@ if TYPE_CHECKING:   # deferred to break the serving <-> core import cycle
     from repro.core.engines import BaseEngine, LoadSnapshot
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplicaSpec:
+    """One replica's recipe: engine mode plus optional per-replica
+    overrides (heterogeneous fleets).  ``chips`` rescales the base
+    ``ServeConfig`` (disagg splits follow); ``serve`` replaces it
+    wholesale."""
+    mode: str
+    chips: Optional[int] = None
+    serve: Optional[ServeConfig] = None
+
+
+def parse_mix(mix: str) -> List[ReplicaSpec]:
+    """Parse ``--mix`` syntax.  Two forms compose freely:
+
+      * ``rapid,rapid,hybrid``      — one replica per entry, default chips
+      * ``rapid:2x4,hybrid:1x8``    — ``mode:COUNTxCHIPS`` groups
+    """
+    specs: List[ReplicaSpec] = []
+    for part in mix.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if ":" in part:
+            mode, shape = part.split(":", 1)
+            count_s, _, chips_s = shape.lower().partition("x")
+            if not chips_s:
+                raise ValueError(
+                    f"bad --mix group {part!r}: want mode:COUNTxCHIPS")
+            specs.extend([ReplicaSpec(mode.strip(), chips=int(chips_s))]
+                         * int(count_s))
+        else:
+            specs.append(ReplicaSpec(part))
+    if not specs:
+        raise ValueError(f"empty --mix {mix!r}")
+    return specs
+
+
 @dataclasses.dataclass
 class Replica:
     idx: int
     mode: str
     engine: BaseEngine
+    serve: ServeConfig
     routable: bool = True
     assigned: List[Request] = dataclasses.field(default_factory=list)
 
@@ -70,6 +127,21 @@ class Router:
 
     def choose(self, r: Request, replicas: List[Replica]) -> int:
         raise NotImplementedError
+
+    def bind(self, fleet: List[Replica]) -> None:
+        """Give the router a reference to the cluster's FULL replica
+        list (the live list object, so later scale-ups are visible).
+        ``choose`` may be handed a filtered subset (admission control,
+        retired replicas); size-aware routers must compute fleet-relative
+        quantities like bucket ceilings against the full fleet, not the
+        subset."""
+
+    def admits(self, length: int, rep: Replica,
+               replicas: List[Replica]) -> bool:
+        """Whether a sequence of ``length`` tokens may be (re)placed on
+        ``rep`` — the rebalancer asks before migrating.  Size-agnostic
+        routers accept anything."""
+        return True
 
 
 class RoundRobinRouter(Router):
@@ -112,9 +184,10 @@ class SloAwareRouter(Router):
     def _score(self, r: Request, rep: Replica) -> float:
         s = rep.snapshot()
         # disagg replicas split their chips into prefill/decode pools
-        # (engine exposes chips_p/chips_d); colocated engines use them all
-        chips_p = getattr(rep.engine, "chips_p", self.serve.chips)
-        chips_d = getattr(rep.engine, "chips_d", self.serve.chips)
+        # (engine exposes chips_p/chips_d); colocated engines use them
+        # all — per-replica, so heterogeneous fleets score correctly
+        chips_p = getattr(rep.engine, "chips_p", rep.serve.chips)
+        chips_d = getattr(rep.engine, "chips_d", rep.serve.chips)
         # projected TTFT: every queued prompt token plus ours must be
         # prefilled before our first token can exist
         p_cost = C.prefill_cost(
@@ -134,10 +207,65 @@ class SloAwareRouter(Router):
                    key=lambda i: (self._score(r, replicas[i]), i))
 
 
+class BucketedRouter(Router):
+    """BucketServe-style length bucketing for heterogeneous fleets.
+
+    Each replica advertises a prompt-length *bucket ceiling* proportional
+    to its chip count (the largest tier always advertises the full
+    ``max_seq_len``, so any servable prompt has a compatible replica).
+    A request is routed among the replicas whose ceiling covers its
+    prompt, preferring lower capacity-normalized load and, on ties, the
+    smallest compatible tier — short prompts stay off the big replicas
+    that long prompts need.
+    """
+
+    name = "bucketed"
+
+    def __init__(self):
+        self._fleet: Optional[List[Replica]] = None
+
+    def bind(self, fleet: List[Replica]) -> None:
+        self._fleet = fleet
+
+    @staticmethod
+    def ceiling(rep: Replica, replicas: Sequence[Replica]) -> int:
+        cmax = max(p.serve.chips for p in replicas)
+        return max(1, rep.serve.max_seq_len * rep.serve.chips // cmax)
+
+    def _reference(self, replicas: List[Replica]) -> Sequence[Replica]:
+        # ceilings are relative to the biggest replica in the FULL fleet;
+        # computing them over a filtered subset (admission fit-list) would
+        # silently inflate the small tiers' ceilings
+        return self._fleet if self._fleet else replicas
+
+    def admits(self, length: int, rep: Replica,
+               replicas: List[Replica]) -> bool:
+        return self.ceiling(rep, self._reference(replicas)) >= length
+
+    def choose(self, r: Request, replicas: List[Replica]) -> int:
+        ref = self._reference(replicas)
+        ceils = [self.ceiling(rep, ref) for rep in replicas]
+        compatible = [i for i in range(len(replicas))
+                      if ceils[i] >= r.prompt_len]
+        if not compatible:
+            # oversized for every offered replica (whole-fleet oversize,
+            # or admission filtered out the big tier): best-effort on the
+            # biggest ceiling available rather than dropping the request
+            return max(range(len(replicas)), key=lambda i: (ceils[i], -i))
+
+        def key(i: int):
+            s = replicas[i].snapshot()
+            norm_load = s.queued_prefill_tokens / max(1,
+                                                      replicas[i].serve.chips)
+            return (norm_load, ceils[i], s.queued_requests, i)
+        return min(compatible, key=key)
+
+
 ROUTERS: Dict[str, Callable[..., Router]] = {
     "round_robin": lambda cfg, serve, hw: RoundRobinRouter(),
     "least_loaded": lambda cfg, serve, hw: LeastLoadedRouter(),
     "slo_aware": lambda cfg, serve, hw: SloAwareRouter(cfg, serve, hw),
+    "bucketed": lambda cfg, serve, hw: BucketedRouter(),
 }
 
 
@@ -167,12 +295,31 @@ class ScalePolicy:
     scale_up_mode: Optional[str] = None   # None => clone replica 0's mode
 
 
+@dataclasses.dataclass(frozen=True)
+class RebalancePolicy:
+    """Cross-replica preemption/migration: while a replica's KV pool sits
+    above ``kv_high`` and another routable replica sits below ``kv_low``,
+    move up to ``max_moves_per_tick`` victims per check.  Queued victims
+    are re-routed for free; running victims are preempted via the shared
+    ``PreemptionPolicy`` and charged the KV-transfer time of their live
+    context (perfmodel ``kv_migration_seconds``) before re-enqueueing."""
+    check_interval_s: float = 1.0
+    kv_high: float = 0.85
+    kv_low: float = 0.65
+    max_moves_per_tick: int = 2
+    max_migrations_per_request: int = 2
+    link_gbps: Optional[float] = None   # None => serve.kv_transfer_gbps
+
+
 class Cluster:
     """N engine replicas sharing one EventLoop behind a Router."""
 
-    def __init__(self, cfg, serve: ServeConfig, modes: Sequence[str],
+    def __init__(self, cfg, serve: ServeConfig,
+                 modes: Sequence[Union[str, ReplicaSpec]],
                  router: str = "round_robin", hw: HardwareSpec = TPU_V5E,
                  scale: Optional[ScalePolicy] = None,
+                 admission: Optional[AdmissionPolicy] = None,
+                 rebalance: Optional[RebalancePolicy] = None,
                  loop: Optional[EventLoop] = None):
         if not modes:
             raise ValueError("cluster needs at least one replica mode")
@@ -181,21 +328,38 @@ class Cluster:
         self.hw = hw
         self.loop = loop if loop is not None else EventLoop()
         self.replicas: List[Replica] = []
-        for mode in modes:
-            self._add_replica(mode)
+        for spec in modes:
+            self._add_replica(spec)
         self.router = make_router(router, cfg, serve, hw)
+        # the live list object: scale-ups appended later stay visible
+        self.router.bind(self.replicas)
         self.scale = scale
+        self.admission = AdmissionController(admission) \
+            if admission is not None else None
+        self.rebalance = rebalance
+        self.rejected: List[Request] = []
         self._all: List[Request] = []
         self._scale_events: List[tuple] = []   # (t, action, n_routable)
+        self._migrations: List[tuple] = []     # (t, src, dst, rid, had_kv)
+        self._migration_counts: Dict[int, int] = {}
         self._idle_checks = 0
 
     # -- replica lifecycle ---------------------------------------------------
-    def _add_replica(self, mode: str) -> Replica:
+    def _add_replica(self, spec: Union[str, ReplicaSpec]) -> Replica:
         # local import: core.engines itself imports serving.metrics/sim
         from repro.core.engines import make_engine
-        rep = Replica(idx=len(self.replicas), mode=mode,
-                      engine=make_engine(mode, self.cfg, self.serve,
-                                         self.hw, loop=self.loop))
+        if isinstance(spec, str):
+            spec = ReplicaSpec(spec)
+        serve = spec.serve if spec.serve is not None else self.serve
+        if spec.chips is not None and spec.chips != serve.chips:
+            serve = dataclasses.replace(
+                serve, chips=spec.chips,
+                disagg_split=(max(1, spec.chips // 2),
+                              max(1, spec.chips - spec.chips // 2)))
+        rep = Replica(idx=len(self.replicas), mode=spec.mode,
+                      engine=make_engine(spec.mode, self.cfg, serve,
+                                         self.hw, loop=self.loop),
+                      serve=serve)
         self.replicas.append(rep)
         return rep
 
@@ -210,8 +374,23 @@ class Cluster:
     # -- ingress ---------------------------------------------------------------
     def submit(self, r: Request) -> None:
         """Route an arriving request to a replica (called on the loop at
-        the request's arrival time)."""
-        live = self.routable
+        the request's arrival time).  With admission control enabled the
+        arrival may instead be queued cluster-side or rejected."""
+        # scale-down can empty routable() between arrival and routing:
+        # retired replicas still run, so fall back to the full fleet
+        # rather than crashing the router on an empty list
+        live = self.routable or self.replicas
+        if self.admission is not None:
+            verdict, fit = self.admission.decide(r, live, self.loop.now)
+            if verdict == "reject":
+                r.state = State.REJECTED
+                self.rejected.append(r)
+                return
+            if verdict == "wait":
+                self.loop.after(self.admission.policy.retry_s,
+                                lambda r=r: self.submit(r))
+                return
+            live = fit
         rep = live[self.router.choose(r, live)]
         rep.assigned.append(r)
         rep.engine.submit(r)
@@ -226,9 +405,16 @@ class Cluster:
         self.enqueue(requests)
         if self.scale is not None:
             self.loop.after(self.scale.check_interval_s, self._scale_tick)
+        if self.rebalance is not None:
+            self.loop.after(self.rebalance.check_interval_s,
+                            self._rebalance_tick)
         self.loop.run()
         span = self.loop.now if self.loop.now > 0 else 1.0
         return [RequestRecord.from_request(r) for r in self._all], span
+
+    def _outstanding(self) -> bool:
+        return any(r.t_finish is None and r.state is not State.REJECTED
+                   for r in self._all)
 
     # -- per-replica views -----------------------------------------------------
     def per_replica_records(self) -> Dict[str, List[RequestRecord]]:
@@ -253,7 +439,7 @@ class Cluster:
         return ok / len(window)
 
     def _scale_tick(self) -> None:
-        outstanding = any(r.t_finish is None for r in self._all)
+        outstanding = self._outstanding()
         att = self._recent_attainment()
         snaps = [rep.snapshot() for rep in self.replicas]
         # prefill_busy covers the window where a batch is in flight but
@@ -294,15 +480,99 @@ class Cluster:
         if outstanding:
             self.loop.after(self.scale.check_interval_s, self._scale_tick)
 
+    # -- cross-replica preemption / migration ----------------------------------
+    def _migration_ok(self, victim: Request, tgt: Replica,
+                      live: List[Replica]) -> bool:
+        if self._migration_counts.get(victim.rid, 0) >= \
+                self.rebalance.max_migrations_per_request:
+            return False
+        # a migrated request re-prefills its whole live context on the
+        # destination, so bucket compatibility is against context_len
+        return self.router.admits(victim.context_len, tgt, live)
 
-def run_fleet(cfg, serve: ServeConfig, modes: Sequence[str], router: str,
+    def _rebalance_tick(self) -> None:
+        pol = self.rebalance
+        live = self.routable or self.replicas
+        if len(live) > 1:
+            snaps = {rep.idx: rep.snapshot() for rep in live}
+            hot = sorted((rep for rep in live
+                          if snaps[rep.idx].kv_utilization >= pol.kv_high),
+                         key=lambda rep: -snaps[rep.idx].kv_utilization)
+            moves = 0
+            for src in hot:
+                while moves < pol.max_moves_per_tick:
+                    targets = [rep for rep in live if rep is not src
+                               and snaps[rep.idx].kv_utilization
+                               <= pol.kv_low]
+                    cand = src.engine.migration_candidate()
+                    if not targets or cand is None:
+                        break
+                    victim, has_kv = cand
+                    targets = [rep for rep in targets
+                               if self._migration_ok(victim, rep, live)]
+                    if not targets:
+                        break
+                    tgt = min(targets, key=lambda rep: (
+                        snaps[rep.idx].kv_utilization,
+                        snaps[rep.idx].queued_prefill_tokens, rep.idx))
+                    self._migrate(src, tgt, victim, has_kv)
+                    moves += 1
+                    # refresh the pair we touched; a single move rarely
+                    # flips the rest of the fleet inside one tick
+                    snaps[src.idx] = src.snapshot()
+                    snaps[tgt.idx] = tgt.snapshot()
+                    if snaps[src.idx].kv_utilization < pol.kv_high:
+                        break
+                if moves >= pol.max_moves_per_tick:
+                    break
+        if self._outstanding():
+            self.loop.after(pol.check_interval_s, self._rebalance_tick)
+
+    def _migrate(self, src: Replica, tgt: Replica, expected: Request,
+                 expected_kv: bool) -> None:
+        evicted = src.engine.evict_for_migration()
+        assert evicted is not None and evicted[0] is expected, \
+            "migration candidate changed under eviction"
+        victim, had_kv = evicted
+        del expected_kv
+        src.assigned.remove(victim)
+        tgt.assigned.append(victim)
+        self._migration_counts[victim.rid] = \
+            self._migration_counts.get(victim.rid, 0) + 1
+        self._migrations.append((self.loop.now, src.name, tgt.name,
+                                 victim.rid, had_kv))
+        if had_kv:
+            gbps = self.rebalance.link_gbps or self.serve.kv_transfer_gbps
+            xfer = C.kv_migration_seconds(self.cfg, victim.context_len,
+                                          gbps)
+            self.loop.after(xfer, lambda: tgt.engine.submit(victim))
+        else:
+            tgt.engine.submit(victim)
+
+    @property
+    def admission_stats(self) -> Dict[str, int]:
+        return dict(self.admission.stats) if self.admission else {}
+
+
+def run_fleet(cfg, serve: ServeConfig,
+              modes: Sequence[Union[str, ReplicaSpec]], router: str,
               requests: Sequence[Request], hw: HardwareSpec = TPU_V5E,
-              scale: Optional[ScalePolicy] = None):
+              scale: Optional[ScalePolicy] = None,
+              admission: Optional[AdmissionPolicy] = None,
+              rebalance: Optional[RebalancePolicy] = None):
     """Build a cluster, serve a trace, and return
     ``(fleet_summarize(...) dict, cluster)``.  Requests are deep-copied so
     the caller's trace can be replayed against other configurations."""
-    cluster = Cluster(cfg, serve, modes, router=router, hw=hw, scale=scale)
+    cluster = Cluster(cfg, serve, modes, router=router, hw=hw, scale=scale,
+                      admission=admission, rebalance=rebalance)
     _, span = cluster.run([copy.deepcopy(r) for r in requests])
     summary = fleet_summarize(cluster.per_replica_records(), serve.slo,
                               span)
+    f = summary["fleet"]
+    # cluster-side rejections never reach a replica, so surface them here
+    f["rejected"] = f.get("rejected", 0) + len(cluster.rejected)
+    f["requests"] += len(cluster.rejected)
+    f["migrations"] = len(cluster._migrations)
+    if cluster.admission is not None:
+        summary["admission"] = cluster.admission_stats
     return summary, cluster

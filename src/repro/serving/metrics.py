@@ -16,7 +16,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.config import SLOConfig
-from repro.core.request import Request
+from repro.core.request import Request, State
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +29,7 @@ class RequestRecord:
     itl_p95: Optional[float]
     finish: Optional[float]
     preemptions: int = 0
+    rejected: bool = False
 
     @classmethod
     def from_request(cls, r: Request) -> "RequestRecord":
@@ -37,7 +38,8 @@ class RequestRecord:
             rid=r.rid, arrival=r.arrival, prompt_len=r.prompt_len,
             output_len=r.tokens_generated, ttft=r.ttft,
             itl_p95=float(np.percentile(itls, 95)) if itls else None,
-            finish=r.t_finish, preemptions=r.preemptions)
+            finish=r.t_finish, preemptions=r.preemptions,
+            rejected=r.state is State.REJECTED)
 
 
 def ttft_ceiling(prompt_len: int, slo: SLOConfig) -> float:
@@ -79,6 +81,7 @@ def summarize(records: List[RequestRecord], slo: SLOConfig,
         "goodput_req_s": len(ok_both) / span_s if span_s else 0.0,
         "itl_goodput_req_s": len(ok_itl) / span_s if span_s else 0.0,
         "slo_attainment": len(ok_both) / len(done) if done else 0.0,
+        "rejected": sum(1 for r in records if r.rejected),
         "ttft_p50_s": _pct(ttfts, 50),
         "ttft_p95_s": _pct(ttfts, 95),
         "ttft_p99_s": _pct(ttfts, 99),

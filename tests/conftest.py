@@ -13,7 +13,8 @@ import jax
 import pytest
 
 _HAS_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
-_HYPOTHESIS_MODULES = ["test_engines.py", "test_training.py"]
+_HYPOTHESIS_MODULES = ["test_engines.py", "test_training.py",
+                       "test_router_properties.py"]
 
 collect_ignore = [] if _HAS_HYPOTHESIS else list(_HYPOTHESIS_MODULES)
 

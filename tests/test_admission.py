@@ -1,0 +1,171 @@
+"""KV-aware admission control: engine-level clean rejection (regression
+for OutOfBlocks escaping the event loop), cluster-level queue/redirect/
+reject, and router edge cases (empty routable list, all replicas over
+the KV threshold)."""
+import copy
+
+import pytest
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core import make_engine
+from repro.core.request import Request, State
+from repro.kvcache import KVCacheManager
+from repro.serving import (AdmissionPolicy, Cluster, TRACES,
+                           fleet_summarize, generate_trace, summarize)
+
+ARCH = "llama3-70b"
+
+
+def _serve(mode="rapid", chips=32):
+    return ServeConfig(mode=mode, chips=chips, slo=SLOConfig(itl_ms=100.0),
+                       disagg_split=(chips // 2, chips // 2),
+                       max_batch_slots=128)
+
+
+def _shrink_pools(cluster, blocks=200, page=16):
+    for rep in cluster.replicas:
+        rep.engine.kv = KVCacheManager(blocks, page)
+
+
+# ---------------------------------------------------------------------------
+# engine-level rejection (satellite: no OutOfBlocks out of the event loop)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["rapid", "hybrid", "disagg"])
+def test_engine_rejects_oversized_prompt_cleanly(mode):
+    """A prompt that can never fit the pool must surface as a per-request
+    rejection — not an exception, not a deadlocked queue head, and (for
+    disagg) not an infinite decode-admission retry loop."""
+    cfg = get_config(ARCH)
+    eng = make_engine(mode, cfg, _serve(mode))
+    eng.kv = KVCacheManager(8, 16)      # 128-token decode pool
+    big = Request(rid=0, arrival=0.0, prompt_len=1000, max_new_tokens=8)
+    ok = Request(rid=1, arrival=0.0, prompt_len=64, max_new_tokens=4)
+    recs, _ = eng.run([big, ok])
+    assert big.state is State.REJECTED
+    assert [r.rid for r in eng.rejected] == [0]
+    assert ok.state is State.FINISHED and len(eng.finished) == 1
+    by_rid = {r.rid: r for r in recs}
+    assert by_rid[0].rejected and by_rid[0].finish is None
+    assert not by_rid[1].rejected and by_rid[1].finish is not None
+    # the metric layer counts it
+    assert summarize(recs, _serve().slo, 1.0)["rejected"] == 1
+
+
+def test_rapid_oversized_head_does_not_starve_queue():
+    """Regression: the oversized request used to wedge waiting_kv's head
+    forever, starving every request behind it."""
+    cfg = get_config(ARCH)
+    eng = make_engine("rapid", cfg, _serve())
+    eng.kv = KVCacheManager(32, 16)     # 512-token pool
+    reqs = [Request(rid=0, arrival=0.0, prompt_len=5000, max_new_tokens=4)]
+    reqs += [Request(rid=i, arrival=0.01 * i, prompt_len=128,
+                     max_new_tokens=4) for i in range(1, 6)]
+    eng.run(reqs)
+    assert len(eng.finished) == 5
+    assert len(eng.rejected) == 1
+
+
+def test_disagg_backpressure_retry_does_not_double_free():
+    """Regression: a *transiently* full decode pool schedules a retry;
+    the retry used to re-enter _kv_arrived and free the prefill-side KV
+    sequence a second time (KeyError out of the event loop)."""
+    cfg = get_config(ARCH)
+    eng = make_engine("disagg", cfg, _serve("disagg"))
+    eng.kv = KVCacheManager(40, 16)     # fits one 500-prompt, not two
+    first = Request(rid=0, arrival=0.0, prompt_len=500,
+                    max_new_tokens=200)
+    second = Request(rid=1, arrival=0.0, prompt_len=500, max_new_tokens=8)
+    recs, _ = eng.run([first, second])  # KeyError before the fix
+    assert first.state is State.FINISHED
+    assert second.state is State.FINISHED
+    assert not eng.rejected
+    assert eng.kv.allocator.free_count == eng.kv.allocator.num_blocks
+
+
+def test_kv_reserve_frac_shrinks_pool():
+    cfg = get_config(ARCH)
+    base = make_engine("rapid", cfg, _serve())
+    tight = make_engine("rapid", cfg,
+                        ServeConfig(mode="rapid", chips=32,
+                                    slo=SLOConfig(itl_ms=100.0),
+                                    disagg_split=(16, 16),
+                                    kv_reserve_frac=0.5))
+    assert tight.kv.allocator.num_blocks < base.kv.allocator.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# cluster-level admission
+# ---------------------------------------------------------------------------
+
+
+def test_all_replicas_over_kv_threshold_queues_then_serves():
+    """When every replica's projected pool is over headroom, arrivals are
+    queued cluster-side and admitted as KV frees — nobody is preempted,
+    nobody is lost."""
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(), ["rapid"] * 2, router="least_loaded",
+                      admission=AdmissionPolicy(
+                          kv_headroom=0.9, projected_output_frac=1.0,
+                          retry_s=0.1))
+    _shrink_pools(cluster, blocks=200)   # 3200-token pools
+    reqs = [Request(rid=i, arrival=0.0, prompt_len=1000, max_new_tokens=50)
+            for i in range(10)]
+    recs, _ = cluster.run(reqs)
+    assert all(r.finish is not None for r in recs)
+    assert cluster.admission.stats["delayed"] > 0
+    assert sum(r.preemptions for r in recs) == 0
+    assert sum(cluster.per_replica_counts().values()) == len(reqs)
+
+
+def test_admission_rejects_infeasible_prompt():
+    """A prompt bigger than every replica's whole pool is rejected at the
+    cluster boundary, and surfaces in the fleet summary."""
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(), ["rapid"] * 2, router="least_loaded",
+                      admission=AdmissionPolicy())
+    _shrink_pools(cluster, blocks=100)   # 1600-token pools
+    reqs = [Request(rid=0, arrival=0.0, prompt_len=5000, max_new_tokens=8),
+            Request(rid=1, arrival=0.0, prompt_len=256, max_new_tokens=8)]
+    recs, span = cluster.run(reqs)
+    assert reqs[0].state is State.REJECTED
+    assert [r.rid for r in cluster.rejected] == [0]
+    assert cluster.admission.stats["rejected_infeasible"] == 1
+    assert reqs[1].state is State.FINISHED
+    # cluster-side rejections never reach a replica
+    assert sum(cluster.per_replica_counts().values()) == 1
+
+
+def test_admission_timeout_rejects():
+    """Arrivals that cannot be placed before ``max_wait_s`` are rejected
+    instead of polling forever."""
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(), ["rapid"], router="least_loaded",
+                      admission=AdmissionPolicy(
+                          kv_headroom=0.9, projected_output_frac=1.0,
+                          retry_s=0.2, max_wait_s=1.0))
+    _shrink_pools(cluster, blocks=100)
+    # hog fits (800+300 tokens -> 69 pages < 90-page headroom) and then
+    # pins the pool for ~3s of decode, past the newcomer's 1s deadline
+    hog = Request(rid=0, arrival=0.0, prompt_len=800, max_new_tokens=300)
+    late = Request(rid=1, arrival=0.1, prompt_len=1200, max_new_tokens=8)
+    cluster.run([hog, late])
+    assert hog.state is State.FINISHED
+    assert late.state is State.REJECTED
+    assert cluster.admission.stats["rejected_timeout"] == 1
+
+
+def test_empty_routable_falls_back_to_full_fleet():
+    """Scale-down can retire every replica; arrivals must still be served
+    by the (still running) retired replicas instead of crashing the
+    router on an empty list."""
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(), ["rapid"] * 2, router="least_loaded")
+    for rep in cluster.replicas:
+        rep.routable = False
+    reqs = generate_trace(TRACES["lmsys"], qps=3.0, duration_s=5.0, seed=0)
+    recs, span = cluster.run([copy.deepcopy(r) for r in reqs])
+    assert all(r.finish is not None for r in recs)
+    fs = fleet_summarize(cluster.per_replica_records(), _serve().slo, span)
+    assert fs["fleet"]["completed"] == len(reqs)

@@ -1,0 +1,147 @@
+"""Heterogeneous replicas + BucketServe-style bucketed routing:
+``--mix`` parsing, per-replica chips/ServeConfig overrides, ceiling
+computation, and deterministic routing behaviour."""
+import copy
+
+import pytest
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core.request import Request
+from repro.serving import (BucketedRouter, Cluster, ReplicaSpec,
+                           generate_trace, parse_mix)
+from repro.serving.traces import TraceSpec
+
+ARCH = "llama3-70b"
+
+
+def _serve(chips=16):
+    return ServeConfig(mode="rapid", chips=chips,
+                       slo=SLOConfig(itl_ms=100.0),
+                       disagg_split=(chips // 2, chips // 2),
+                       max_batch_slots=128)
+
+
+# ---------------------------------------------------------------------------
+# --mix parsing
+# ---------------------------------------------------------------------------
+
+
+def test_parse_mix_plain_modes():
+    assert parse_mix("rapid,hybrid") == [ReplicaSpec("rapid"),
+                                         ReplicaSpec("hybrid")]
+
+
+def test_parse_mix_heterogeneous_groups():
+    specs = parse_mix("rapid:2x16,hybrid:1x32")
+    assert specs == [ReplicaSpec("rapid", chips=16),
+                     ReplicaSpec("rapid", chips=16),
+                     ReplicaSpec("hybrid", chips=32)]
+
+
+def test_parse_mix_mixed_forms_and_errors():
+    specs = parse_mix("rapid, hybrid:1x32")
+    assert specs == [ReplicaSpec("rapid"), ReplicaSpec("hybrid", chips=32)]
+    with pytest.raises(ValueError):
+        parse_mix("rapid:2")
+    with pytest.raises(ValueError):
+        parse_mix("")
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous replica construction
+# ---------------------------------------------------------------------------
+
+
+def test_per_replica_chips_override():
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(16), parse_mix("rapid:2x16,rapid:1x32"),
+                      router="bucketed")
+    chips = [rep.serve.chips for rep in cluster.replicas]
+    assert chips == [16, 16, 32]
+    # bigger replica => bigger KV pool
+    pools = [rep.engine.kv.allocator.num_blocks for rep in cluster.replicas]
+    assert pools[2] > pools[0] and pools[0] == pools[1]
+
+
+def test_per_replica_serve_override():
+    cfg = get_config(ARCH)
+    custom = ServeConfig(mode="rapid", chips=32,
+                         slo=SLOConfig(itl_ms=50.0),
+                         disagg_split=(16, 16), max_batch_slots=16)
+    cluster = Cluster(cfg, _serve(16),
+                      [ReplicaSpec("rapid"),
+                       ReplicaSpec("rapid", serve=custom)],
+                      router="round_robin")
+    assert cluster.replicas[0].serve.max_batch_slots == 128
+    assert cluster.replicas[1].serve.max_batch_slots == 16
+    assert cluster.replicas[1].serve.chips == 32
+
+
+def test_disagg_split_follows_chips_override():
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(32), [ReplicaSpec("disagg", chips=24)],
+                      router="round_robin")
+    assert cluster.replicas[0].serve.disagg_split == (12, 12)
+
+
+# ---------------------------------------------------------------------------
+# bucketed routing
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_ceilings_proportional_to_chips():
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(16), parse_mix("rapid:2x16,rapid:1x32"),
+                      router="bucketed")
+    reps = cluster.replicas
+    ceils = [BucketedRouter.ceiling(rep, reps) for rep in reps]
+    assert ceils == [16384, 16384, 32768]
+
+
+def test_long_prompt_routes_to_big_replica_short_to_small():
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(16), parse_mix("rapid:2x16,rapid:1x32"),
+                      router="bucketed")
+    long_r = Request(rid=0, arrival=0.0, prompt_len=20_000,
+                     max_new_tokens=8)
+    short_r = Request(rid=1, arrival=0.0, prompt_len=1000,
+                      max_new_tokens=8)
+    assert cluster.router.choose(long_r, cluster.replicas) == 2
+    # idle fleet: short prompts prefer the smallest compatible tier
+    assert cluster.router.choose(short_r, cluster.replicas) in (0, 1)
+
+
+def test_bucketed_cluster_end_to_end_respects_ceilings():
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(16), parse_mix("rapid:2x16,rapid:1x32"),
+                      router="bucketed")
+    short = generate_trace(TraceSpec("s", 1500, 0.4, 100, 0.3, 8000, 256),
+                           qps=4.0, duration_s=8.0, seed=0)
+    long_ = generate_trace(TraceSpec("l", 20_000, 0.2, 100, 0.3, 30_000,
+                                     256),
+                           qps=1.0, duration_s=8.0, seed=1)
+    reqs = short + long_
+    for i, r in enumerate(reqs):
+        r.rid = i
+    recs, _ = cluster.run(copy.deepcopy(reqs))
+    assert all(r.finish is not None for r in recs)
+    reps = cluster.replicas
+    for rep in reps:
+        ceil = BucketedRouter.ceiling(rep, reps)
+        assert all(r.prompt_len <= ceil for r in rep.assigned), \
+            f"{rep.name} got a prompt above its bucket ceiling {ceil}"
+    # the long prompts actually exercised the big tier
+    assert any(r.prompt_len > 16384 for r in reps[2].assigned)
+
+
+def test_homogeneous_fleet_bucketed_degenerates_gracefully():
+    """Equal chips => equal ceilings => bucketed behaves like a load
+    balancer and everything is compatible everywhere."""
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(16), ["rapid"] * 3, router="bucketed")
+    reqs = generate_trace(TraceSpec("s", 2000, 0.5, 100, 0.3, 16_000, 256),
+                          qps=6.0, duration_s=6.0, seed=0)
+    recs, _ = cluster.run(copy.deepcopy(reqs))
+    assert all(r.finish is not None for r in recs)
+    counts = cluster.per_replica_counts()
+    assert all(c > 0 for c in counts.values())

@@ -1,0 +1,170 @@
+"""Cross-replica preemption/migration: shared victim policy, engine
+eviction API, and the cluster rebalance tick (conservation under
+migration, KV-transfer charging)."""
+import copy
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core import PreemptionPolicy, make_engine
+from repro.core.request import Request, State
+from repro.kvcache import KVCacheManager
+from repro.perfmodel.costs import kv_migration_seconds
+from repro.serving import Cluster, RebalancePolicy
+
+ARCH = "llama3-70b"
+
+
+def _serve(mode="rapid", chips=32):
+    return ServeConfig(mode=mode, chips=chips, slo=SLOConfig(itl_ms=100.0),
+                       disagg_split=(chips // 2, chips // 2),
+                       max_batch_slots=128)
+
+
+def _req(rid, arrival=0.0, prompt=500, out=100):
+    return Request(rid=rid, arrival=arrival, prompt_len=prompt,
+                   max_new_tokens=out)
+
+
+# ---------------------------------------------------------------------------
+# shared preemption policy (hoisted from the engines)
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_policy_orders():
+    reqs = [_req(0, 0.0), _req(1, 2.0), _req(2, 1.0)]
+    reqs[0].tokens_generated = 5
+    assert PreemptionPolicy().choose(reqs) is reqs[1]           # newest
+    assert PreemptionPolicy("least_progress").choose(reqs) is reqs[1]
+    reqs[1].tokens_generated = 9
+    assert PreemptionPolicy("least_progress").choose(reqs) is reqs[2]
+    assert PreemptionPolicy().choose([]) is None
+
+
+def test_engines_share_the_policy():
+    cfg = get_config(ARCH)
+    for mode in ("rapid", "hybrid", "disagg"):
+        eng = make_engine(mode, cfg, _serve(mode))
+        assert isinstance(eng.preempt_policy, PreemptionPolicy)
+        assert eng.preempt_policy.order == "newest"
+
+
+# ---------------------------------------------------------------------------
+# engine eviction API
+# ---------------------------------------------------------------------------
+
+
+def test_evict_queued_request_has_no_kv():
+    cfg = get_config(ARCH)
+    eng = make_engine("rapid", cfg, _serve())
+    eng.kv = KVCacheManager(40, 16)     # room for exactly one 500-prompt
+    for i in range(3):
+        eng.submit(_req(i, arrival=float(i)))
+    # rid 0 allocated; 1 and 2 stuck in waiting_kv
+    cand = eng.migration_candidate()
+    assert cand is not None
+    victim, has_kv = cand
+    assert victim.rid == 2 and not has_kv   # newest queued first, no KV
+    evicted, had_kv = eng.evict_for_migration()
+    assert evicted is victim and not had_kv
+    assert evicted.state is State.ARRIVED
+    assert all(r.rid != 2 for r in eng.waiting_kv)
+
+
+def test_evict_running_request_frees_kv_and_counts_preemption():
+    cfg = get_config(ARCH)
+    eng = make_engine("rapid", cfg, _serve())
+    for i in range(2):
+        eng.submit(_req(i, arrival=float(i) * 0.01, out=2000))
+    eng.loop.run(until=0.5)             # both prefilled and decoding
+    assert len(eng.running) == 2 and not eng.waiting_kv
+    before = eng.kv.num_requests
+    evicted, had_kv = eng.evict_for_migration()
+    assert had_kv and evicted.preemptions == 1
+    assert eng.kv.num_requests == before - 1
+    assert evicted not in eng.running
+    # re-submission on another engine resumes it to completion
+    other = make_engine("rapid", cfg, _serve(), loop=eng.loop)
+    other.submit(evicted)
+    eng.loop.run()
+    assert evicted.state is State.FINISHED
+
+
+# ---------------------------------------------------------------------------
+# cluster rebalance tick
+# ---------------------------------------------------------------------------
+
+
+def _hot_cold_cluster(policy):
+    """All load lands on replica 0 (replica 1 joins at t=0.6), so the
+    rebalance tick sees a hot/cold pair."""
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(), ["rapid"] * 2, router="least_loaded",
+                      rebalance=policy)
+    for rep in cluster.replicas:
+        rep.engine.kv = KVCacheManager(150, 16)   # 2400-token pools
+    cluster.replicas[1].routable = False
+    cluster.loop.at(0.6, lambda: setattr(cluster.replicas[1],
+                                         "routable", True))
+    reqs = [_req(i, arrival=0.05 * i, prompt=500, out=120)
+            for i in range(8)]
+    return cluster, reqs
+
+
+def test_rebalance_migrates_from_hot_to_cold_replica():
+    policy = RebalancePolicy(check_interval_s=0.5, kv_high=0.5,
+                             kv_low=0.4, max_moves_per_tick=4)
+    cluster, reqs = _hot_cold_cluster(policy)
+    recs, _ = cluster.run(copy.deepcopy(reqs))
+    assert cluster._migrations, "no migrations under clear hot/cold skew"
+    for t, src, dst, rid, had_kv in cluster._migrations:
+        assert src == "rapid-0" and dst == "rapid-1"
+    # conservation: every request finishes exactly once, ownership moved
+    assert all(r.finish is not None for r in recs)
+    counts = cluster.per_replica_counts()
+    assert sum(counts.values()) == len(reqs)
+    assert counts["rapid-1"] >= len(cluster._migrations)
+
+
+def test_rebalance_respects_migration_cap():
+    policy = RebalancePolicy(check_interval_s=0.5, kv_high=0.5,
+                             kv_low=0.4, max_moves_per_tick=4,
+                             max_migrations_per_request=1)
+    cluster, reqs = _hot_cold_cluster(policy)
+    cluster.run(copy.deepcopy(reqs))
+    per_rid = {}
+    for _, _, _, rid, _ in cluster._migrations:
+        per_rid[rid] = per_rid.get(rid, 0) + 1
+    assert all(v <= 1 for v in per_rid.values())
+
+
+def test_migration_charges_kv_transfer_cost():
+    """A running victim's re-enqueue on the destination is delayed by the
+    perfmodel KV-transfer time of its live context."""
+    cfg = get_config(ARCH)
+    xfer = kv_migration_seconds(cfg, 4096, 50.0)
+    assert xfer > 0
+    # linear in context and inversely in link speed
+    assert kv_migration_seconds(cfg, 8192, 50.0) == \
+        __import__("pytest").approx(2 * xfer)
+    assert kv_migration_seconds(cfg, 4096, 100.0) == \
+        __import__("pytest").approx(xfer / 2)
+
+
+def test_disagg_replica_can_receive_migrations():
+    """Migration target compatibility is engine-agnostic: a victim evicted
+    from a rapid replica finishes on a disagg one."""
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(), ["rapid", "disagg"],
+                      router="least_loaded",
+                      rebalance=RebalancePolicy(check_interval_s=0.5,
+                                                kv_high=0.5, kv_low=0.4,
+                                                max_moves_per_tick=4))
+    cluster.replicas[0].engine.kv = KVCacheManager(150, 16)
+    cluster.replicas[1].routable = False
+    cluster.loop.at(0.6, lambda: setattr(cluster.replicas[1],
+                                         "routable", True))
+    reqs = [_req(i, arrival=0.05 * i, prompt=500, out=120)
+            for i in range(8)]
+    recs, _ = cluster.run(copy.deepcopy(reqs))
+    assert all(r.finish is not None for r in recs)
+    if cluster._migrations:
+        assert cluster.per_replica_counts()["disagg-1"] > 0

@@ -1,0 +1,73 @@
+"""Property tests for the BucketedRouter (hypothesis, dev-only dep —
+skipped at collection when hypothesis is absent, see conftest.py).
+
+The load-bearing invariant: for any fleet shape and any load state, a
+prompt that fits the fleet's largest tier is NEVER routed to a replica
+whose bucket ceiling is below the prompt length."""
+import dataclasses
+
+from hypothesis import given, settings, strategies as st
+
+from repro.config import SLOConfig, ServeConfig
+from repro.core.engines import LoadSnapshot
+from repro.core.request import Request
+from repro.serving import BucketedRouter, Replica
+
+
+def _snapshot(queued_tokens: int) -> LoadSnapshot:
+    return LoadSnapshot(
+        queued_requests=queued_tokens // 512,
+        queued_prefill_tokens=queued_tokens,
+        running_decode=0, decode_ctx_tokens=0, kv_utilization=0.0,
+        prefill_busy=False, decode_busy=False)
+
+
+class _StubEngine:
+    """Just enough engine for Router.choose: a load snapshot."""
+
+    def __init__(self, queued_tokens: int):
+        self._snap = _snapshot(queued_tokens)
+
+    def load_snapshot(self) -> LoadSnapshot:
+        return self._snap
+
+
+def _fleet(chip_counts, loads):
+    serve = ServeConfig(mode="rapid", chips=8, slo=SLOConfig())
+    return [Replica(idx=i, mode="rapid", engine=_StubEngine(load),
+                    serve=dataclasses.replace(serve, chips=chips))
+            for i, (chips, load) in enumerate(zip(chip_counts, loads))]
+
+
+@given(
+    chip_counts=st.lists(st.sampled_from([4, 8, 16, 32]), min_size=2,
+                         max_size=5),
+    loads=st.lists(st.integers(0, 100_000), min_size=5, max_size=5),
+    prompt_len=st.integers(16, 32_768),
+)
+@settings(max_examples=200, deadline=None)
+def test_bucketed_never_routes_above_ceiling(chip_counts, loads,
+                                             prompt_len):
+    replicas = _fleet(chip_counts, loads[:len(chip_counts)])
+    router = BucketedRouter()
+    ceils = [BucketedRouter.ceiling(rep, replicas) for rep in replicas]
+    # any prompt <= max_seq_len is covered by the largest tier
+    assert max(ceils) == replicas[0].serve.max_seq_len
+    chosen = router.choose(
+        Request(rid=0, arrival=0.0, prompt_len=prompt_len,
+                max_new_tokens=8), replicas)
+    assert ceils[chosen] >= prompt_len
+
+
+@given(
+    chip_counts=st.lists(st.sampled_from([4, 8, 16, 32]), min_size=2,
+                         max_size=5),
+    length=st.integers(16, 200_000),
+)
+@settings(max_examples=100, deadline=None)
+def test_admits_agrees_with_ceiling(chip_counts, length):
+    replicas = _fleet(chip_counts, [0] * len(chip_counts))
+    router = BucketedRouter()
+    for rep in replicas:
+        assert router.admits(length, rep, replicas) == \
+            (BucketedRouter.ceiling(rep, replicas) >= length)
