@@ -2,10 +2,11 @@
 #
 #   make dev-deps   install test-only dependencies (hypothesis etc.)
 #   make test       tier-1 suite (what the driver runs) + junit report
-#   make smoke      tier-1 + quick benchmark smokes (single-engine fig8/9,
-#                   cluster fig12, admission/preemption fig13)
+#   make smoke      tier-1 + quick benchmark smokes (single-engine
+#                   fig8/9/10/11, cluster fig12, admission/preemption
+#                   fig13)
 #   make ci         dev-deps + smoke  (the one command CI runs)
-#   make lint       ruff style baseline (non-blocking CI job)
+#   make lint       ruff style gate (blocking CI job)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
@@ -22,6 +23,8 @@ test:
 smoke: test
 	$(PY) -m benchmarks.fig8_throughput --smoke
 	$(PY) -m benchmarks.fig9_goodput --smoke
+	$(PY) -m benchmarks.fig10_itl_goodput --smoke
+	$(PY) -m benchmarks.fig11_tail_latency --smoke
 	$(PY) -m benchmarks.fig12_cluster_goodput --smoke
 	$(PY) -m benchmarks.fig13_admission_preemption --smoke
 

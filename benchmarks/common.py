@@ -5,6 +5,10 @@ figure datapoint) and returns a dict for benchmarks.run aggregation.
 Serving instances: 32 chips for LlaMA-3.1-70B-class models (TPU v5e has
 16 GB/chip — the 8x MI300X node of the paper is ~1.5 TB HBM; 32 v5e =
 512 GB holds weights + KV comfortably, DESIGN.md §6), disagg split 16P/16D.
+
+Benchmarks are Serving API v2 consumers: ``run_point`` subscribes a
+``StreamMetrics`` to the engine's event stream and summarizes from it —
+no blocking ``run()`` / post-hoc ``records()``.
 """
 from __future__ import annotations
 
@@ -13,7 +17,7 @@ from typing import Dict, List
 
 from repro.config import SLOConfig, ServeConfig, get_config
 from repro.core import make_engine
-from repro.serving import TRACES, generate_trace, summarize
+from repro.serving import TRACES, StreamMetrics, generate_trace
 
 CHIPS = 32
 MODELS = {
@@ -43,8 +47,12 @@ def run_point(arch: str, mode: str, trace: str, qps: float,
     reqs = generate_trace(TRACES[trace], qps=qps, duration_s=duration,
                           seed=seed)
     eng = make_engine(mode, cfg, serve_cfg(mode, slo_itl_ms, chunk))
-    recs, span = eng.run([copy.deepcopy(r) for r in reqs])
-    out = summarize(recs, SLOConfig(itl_ms=slo_itl_ms), span)
+    metrics = StreamMetrics()
+    eng.subscribe(metrics)
+    eng.enqueue([copy.deepcopy(r) for r in reqs])
+    eng.loop.run()
+    span = eng.loop.now if eng.loop.now > 0 else 1.0
+    out = metrics.summarize(SLOConfig(itl_ms=slo_itl_ms), span)
     out["kv_util"] = (sum(s.kv_util for s in eng.util_samples) /
                       max(1, len(eng.util_samples)))
     return out

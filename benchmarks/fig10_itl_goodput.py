@@ -1,11 +1,22 @@
 """Paper Fig 10: goodput under the ITL-only SLO (TTFT unconstrained —
-isolates the inter-token latency behaviour after saturation)."""
+isolates the inter-token latency behaviour after saturation).
+
+    PYTHONPATH=src python -m benchmarks.fig10_itl_goodput [--smoke]
+"""
+import argparse
+
+from benchmarks.fig9_goodput import SMOKE
 from benchmarks.fig9_goodput import main as fig9_main
 
 
-def main():
-    return fig9_main(metric="itl_goodput_req_s", tag="fig10")
+def main(smoke: bool = False):
+    kwargs = SMOKE if smoke else {}
+    return fig9_main(metric="itl_goodput_req_s", tag="fig10", **kwargs)
 
 
 if __name__ == "__main__":
-    main()
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny sweep (<30 s) for CI")
+    args = p.parse_args()
+    main(smoke=args.smoke)

@@ -1,46 +1,56 @@
 """Paper Fig 11/12: p95 TTFT and p95 ITL, normalized to chunked(512) at
 the lowest QPS.  The paper's headline: RAPID p95 TTFT up to 220x lower
 than chunked (no chunking, no transfer); disagg shows ~2x lower p95 ITL
-than RAPID but at lower throughput."""
-from benchmarks.common import MODELS, emit, run_point
+than RAPID but at lower throughput.
+
+    PYTHONPATH=src python -m benchmarks.fig11_tail_latency [--smoke]
+"""
+import argparse
+
+from benchmarks.common import DURATION, MODELS, emit, run_point
 
 QPS = (2.0, 8.0, 16.0)
 BASELINES = [("hybrid", 512), ("hybrid", 2048), ("disagg", 512),
              ("rapid", 512)]
+# tiny sweep for CI: one model, one trace, two load points, short trace
+SMOKE = dict(qps=(2.0, 8.0), traces=("lmsys",),
+             models={"llama3-70b": MODELS["llama3-70b"]}, duration=10.0)
 
 
-def main():
+def main(qps=QPS, traces=("lmsys", "arxiv"), models=None,
+         duration=DURATION, tag="fig11"):
     rows = []
     ttft_ratios, itl_ratios = [], []
-    for arch, mcfg in MODELS.items():
-        for trace in ("lmsys", "arxiv"):
+    for arch, mcfg in (models or MODELS).items():
+        for trace in traces:
             res = {}
             for mode, chunk in BASELINES:
                 label = mode if mode != "hybrid" else f"hybrid{chunk}"
-                for qps in QPS:
-                    s = run_point(arch, mode, trace, qps,
-                                  mcfg["slo_itl_ms"], chunk)
-                    res[(label, qps)] = s
+                for q in qps:
+                    s = run_point(arch, mode, trace, q,
+                                  mcfg["slo_itl_ms"], chunk,
+                                  duration=duration)
+                    res[(label, q)] = s
                     rows.append(
-                        (f"fig11_{arch}_{trace}_{label}_qps{qps}_ttft_p95_s",
+                        (f"{tag}_{arch}_{trace}_{label}_qps{q}_ttft_p95_s",
                          f"{s['ttft_p95_s']:.3f}", "seconds"))
                     rows.append(
-                        (f"fig11_{arch}_{trace}_{label}_qps{qps}_itl_p95_ms",
+                        (f"{tag}_{arch}_{trace}_{label}_qps{q}_itl_p95_ms",
                          f"{s['itl_p95_s'] * 1e3:.1f}", "ms"))
-            for qps in QPS:
-                hy, ra = res[("hybrid512", qps)], res[("rapid", qps)]
+            for q in qps:
+                hy, ra = res[("hybrid512", q)], res[("rapid", q)]
                 if ra["ttft_p95_s"] > 0:
                     ttft_ratios.append(hy["ttft_p95_s"] / ra["ttft_p95_s"])
                 if ra["itl_p95_s"] > 0:
                     itl_ratios.append(hy["itl_p95_s"] / ra["itl_p95_s"])
-    rows.append(("fig11_ttft_p95_hybrid_over_rapid_max",
+    rows.append((f"{tag}_ttft_p95_hybrid_over_rapid_max",
                  f"{max(ttft_ratios):.1f}", "paper: up to 220x"))
-    rows.append(("fig11_ttft_p95_hybrid_over_rapid_avg",
+    rows.append((f"{tag}_ttft_p95_hybrid_over_rapid_avg",
                  f"{sum(ttft_ratios) / len(ttft_ratios):.1f}",
                  "paper: avg 53x"))
-    rows.append(("fig11_itl_p95_hybrid_over_rapid_max",
+    rows.append((f"{tag}_itl_p95_hybrid_over_rapid_max",
                  f"{max(itl_ratios):.1f}", "paper: up to 6x"))
-    rows.append(("fig11_itl_p95_hybrid_over_rapid_avg",
+    rows.append((f"{tag}_itl_p95_hybrid_over_rapid_avg",
                  f"{sum(itl_ratios) / len(itl_ratios):.1f}",
                  "paper: avg 1.9x"))
     emit(rows)
@@ -48,4 +58,8 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny sweep (<30 s) for CI")
+    args = p.parse_args()
+    main(**SMOKE) if args.smoke else main()

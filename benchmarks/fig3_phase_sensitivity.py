@@ -4,12 +4,11 @@ Prefill (compute-bound) degrades ~proportionally as its share shrinks;
 decode (bandwidth-bound) holds performance down to ~40-50% compute.
 Values are normalized slowdown vs f=1.0 (lower is better, 1 = peak).
 """
+from benchmarks.common import CHIPS, emit
 from repro.config import get_config
 from repro.perfmodel import costs as C
 from repro.perfmodel import interference as I
 from repro.perfmodel.hw import TPU_V5E
-
-from benchmarks.common import CHIPS, emit
 
 FRACS = (1.0, 0.9, 0.75, 0.5, 0.4, 0.25)
 

@@ -5,12 +5,11 @@ with a co-resident saturating prefill.  Shows the overallocation curve
 crossing the ITL SLO as the decode batch grows — the trigger for the
 Adaptive Resource Manager's mode switch.
 """
+from benchmarks.common import CHIPS, emit
 from repro.config import get_config
 from repro.perfmodel import costs as C
 from repro.perfmodel import interference as I
 from repro.perfmodel.hw import TPU_V5E
-
-from benchmarks.common import CHIPS, emit
 
 BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 SCHEMES = {"P100-D100": None, "D25-P75": 0.25, "D50-P50": 0.5,

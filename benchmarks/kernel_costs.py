@@ -6,15 +6,13 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from benchmarks.common import emit
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.paged_attention import paged_attention
 from repro.kernels.ssm_scan import ssm_scan
 from repro.kernels.unified_pd import unified_pd
 from repro.perfmodel.hw import TPU_V5E
-
-from benchmarks.common import emit
 
 
 def _t(fn, *a, n=3, **kw):

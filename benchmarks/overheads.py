@@ -6,7 +6,7 @@
     identical no-transfer configuration (paper: 1.4x thpt / 1.9x TTFT)
   * async one-step-ahead scheduling benefit (Fig 6a vs 6b)
 """
-from benchmarks.common import emit, run_point
+from benchmarks.common import emit
 
 
 def main():
@@ -18,20 +18,27 @@ def main():
     # ~nothing (recorded as a hardware-adaptation finding)
     import copy
     import dataclasses
+    from benchmarks.common import serve_cfg
     from repro.config import SLOConfig, get_config
     from repro.core import DisaggEngine, HybridEngine
-    from repro.serving import TRACES, generate_trace, summarize
-    from benchmarks.common import serve_cfg
+    from repro.serving import TRACES, StreamMetrics, generate_trace
     cfg = get_config("llama3-70b")
     slo = SLOConfig(itl_ms=100.0)
+
+    def serve_stream(eng, reqs):
+        # API v2: summarize from the event stream, not records()
+        metrics = StreamMetrics()
+        eng.subscribe(metrics)
+        eng.enqueue([copy.deepcopy(r) for r in reqs])
+        eng.loop.run()
+        return metrics.summarize(slo, eng.loop.now if eng.loop.now else 1.0)
     reqs_ch = generate_trace(TRACES["arxiv"], qps=12.0, duration_s=45,
                              seed=0)
     chunk_res = {}
     for chunk in (512, 1024):
         eng = HybridEngine(cfg, serve_cfg("hybrid", 100.0, chunk=chunk,
                                           async_sched=False))
-        recs, span = eng.run([copy.deepcopy(r) for r in reqs_ch])
-        chunk_res[chunk] = summarize(recs, slo, span)
+        chunk_res[chunk] = serve_stream(eng, reqs_ch)
     s512, s1k = chunk_res[512], chunk_res[1024]
     rows.append(("ovh_chunk1k_thpt_gain",
                  f"{s1k['throughput_tok_s'] / s512['throughput_tok_s']:.3f}",
@@ -49,25 +56,23 @@ def main():
     for label, gbps in (("ici50", 50.0), ("nic2.5", 2.5), ("free", 1e9)):
         eng = DisaggEngine(cfg, serve_cfg("disagg", 100.0))
         eng.serve = dataclasses.replace(eng.serve, kv_transfer_gbps=gbps)
-        recs, span = eng.run([copy.deepcopy(r) for r in reqs])
-        res[label] = summarize(recs, slo, span)
+        res[label] = serve_stream(eng, reqs)
     for label in ("ici50", "nic2.5"):
+        ttft_ratio = res[label]["ttft_p95_s"] / \
+            max(res["free"]["ttft_p95_s"], 1e-9)
+        thpt_ratio = res["free"]["throughput_tok_s"] / \
+            max(res[label]["throughput_tok_s"], 1e-9)
         rows.append((f"ovh_kv_transfer_ttft_ratio_{label}",
-                     f"{res[label]['ttft_p95_s'] / max(res['free']['ttft_p95_s'], 1e-9):.2f}",
+                     f"{ttft_ratio:.2f}",
                      "paper ~1.9x TTFT (network transport)"))
         rows.append((f"ovh_kv_transfer_thpt_ratio_{label}",
-                     f"{res['free']['throughput_tok_s'] / max(res[label]['throughput_tok_s'], 1e-9):.2f}",
-                     "paper ~1.4x thpt"))
+                     f"{thpt_ratio:.2f}", "paper ~1.4x thpt"))
     # --- Fig 6: async scheduling ----------------------------------------
     from repro.core import RapidEngine
     sync_cfg = serve_cfg("rapid", 100.0, async_sched=False)
     async_cfg = serve_cfg("rapid", 100.0, async_sched=True)
-    e1 = RapidEngine(cfg, sync_cfg)
-    r1, sp1 = e1.run([copy.deepcopy(r) for r in reqs])
-    e2 = RapidEngine(cfg, async_cfg)
-    r2, sp2 = e2.run([copy.deepcopy(r) for r in reqs])
-    a = summarize(r1, slo, sp1)
-    b = summarize(r2, slo, sp2)
+    a = serve_stream(RapidEngine(cfg, sync_cfg), reqs)
+    b = serve_stream(RapidEngine(cfg, async_cfg), reqs)
     rows.append(("ovh_async_sched_itl_gain",
                  f"{a['itl_p95_s'] / max(b['itl_p95_s'], 1e-9):.3f}",
                  "sync p95 ITL / async p95 ITL (Fig 6a vs 6b)"))

@@ -8,11 +8,8 @@ devices, so it cannot run inside this process — see launch/dryrun.py.)
 import json
 import os
 
-from repro.config import SHAPES, get_config
-from repro.launch.roofline import RooflineTerms, model_flops_for
-from repro.perfmodel.hw import TPU_V5E
-
 from benchmarks.common import emit
+from repro.launch.roofline import RooflineTerms
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..",
                        "dryrun_results.json")

@@ -3,11 +3,10 @@ engine + the disagg memory imbalance; compute-utilization proxy from
 the interference model's occupancy shares."""
 import copy
 
-from repro.config import SLOConfig, get_config
+from benchmarks.common import emit, serve_cfg
+from repro.config import get_config
 from repro.core import DisaggEngine, make_engine
 from repro.serving import TRACES, generate_trace
-
-from benchmarks.common import emit, serve_cfg
 
 
 def main():
@@ -17,7 +16,8 @@ def main():
     utils = {}
     for mode in ("rapid", "hybrid", "disagg"):
         eng = make_engine(mode, cfg, serve_cfg(mode, 100.0))
-        eng.run([copy.deepcopy(r) for r in reqs])
+        eng.enqueue([copy.deepcopy(r) for r in reqs])
+        eng.loop.run()
         kv = (sum(s.kv_util for s in eng.util_samples) /
               max(1, len(eng.util_samples)))
         utils[mode] = kv

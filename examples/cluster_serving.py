@@ -2,14 +2,16 @@
 
 Serves one LMSYS-like trace against a 4-replica fleet three times — one
 per router — and prints the fleet summary plus the per-replica load
-split, then shows SLO-driven autoscaling absorbing a burst.
+split, then shows SLO-driven autoscaling absorbing a burst.  The fleet
+summary comes from the cluster's merged event stream
+(``cluster.metrics``), the Serving API v2 path.
 
     PYTHONPATH=src python examples/cluster_serving.py
 """
 import copy
 
 from repro.config import SLOConfig, ServeConfig, get_config
-from repro.serving import (Cluster, ScalePolicy, TRACES, fleet_summarize,
+from repro.serving import (TRACES, Cluster, ScalePolicy, fleet_summarize,
                            generate_trace)
 
 ARCH = "llama3-70b"
@@ -33,7 +35,7 @@ def main():
         cluster = Cluster(cfg, serve, ["rapid"] * 4, router=router)
         _, span = cluster.run([copy.deepcopy(r) for r in reqs])
         res = fleet_summarize(cluster.per_replica_records(), serve.slo,
-                              span)
+                              span, fleet_records=cluster.metrics.records)
         f = res["fleet"]
         split = " ".join(f"{n}:{c}" for n, c in
                          sorted(cluster.per_replica_counts().items()))
@@ -48,7 +50,8 @@ def main():
     cluster = Cluster(cfg, serve, ["rapid"], router="least_loaded",
                       scale=policy)
     _, span = cluster.run([copy.deepcopy(r) for r in reqs])
-    res = fleet_summarize(cluster.per_replica_records(), serve.slo, span)
+    res = fleet_summarize(cluster.per_replica_records(), serve.slo, span,
+                          fleet_records=cluster.metrics.records)
     f = res["fleet"]
     print(f"\nautoscaled   goodput={f['goodput_req_s']:6.2f} req/s  "
           f"ttft_p99={f['ttft_p99_s']:6.2f}s  "

@@ -1,5 +1,6 @@
-"""Quickstart: build a model, generate tokens, run one RAPID serving
-simulation — the 60-second tour of the public API.
+"""Quickstart: build a model, generate tokens, serve one RAPID trace on
+the streaming request-lifecycle API — the 60-second tour of the public
+API (Serving API v2: submit work, subscribe to the event stream).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,11 +11,11 @@ import jax.numpy as jnp
 
 from repro.config import (SLOConfig, ServeConfig, get_config,
                           get_reduced_config, list_archs)
-from repro.core import RapidEngine
+from repro.core import RapidEngine, TokenEvent
 from repro.models.transformer import (decode_forward, forward,
                                       greedy_sample, init_cache,
                                       init_model, write_prefill_to_cache)
-from repro.serving import TRACES, generate_trace, summarize
+from repro.serving import TRACES, StreamMetrics, generate_trace
 
 print("architectures:", ", ".join(list_archs()))
 
@@ -39,13 +40,27 @@ for _ in range(7):
 print("generated token ids:", out)
 
 # ---- 2. serve a trace with the RAPID engine (virtual clock) -------------
+# Serving API v2: enqueue requests, subscribe consumers to the typed
+# event stream (TokenEvent / PhaseEvent / FinishedEvent / RejectedEvent)
 big = get_config("llama3-70b")
 serve = ServeConfig(mode="rapid", chips=32, slo=SLOConfig(itl_ms=100.0))
 reqs = generate_trace(TRACES["lmsys"], qps=4.0, duration_s=30, seed=0)
 eng = RapidEngine(big, serve)
-recs, span = eng.run([copy.deepcopy(r) for r in reqs])
-s = summarize(recs, serve.slo, span)
+
+metrics = StreamMetrics()              # folds the stream into records
+eng.subscribe(metrics)
+first_tokens = []                      # watch one request's tokens live
+eng.subscribe(lambda ev: first_tokens.append(ev)
+              if isinstance(ev, TokenEvent) else None,
+              rid=reqs[0].rid)
+eng.enqueue([copy.deepcopy(r) for r in reqs])
+eng.loop.run()
+
+span = eng.loop.now
+s = metrics.summarize(serve.slo, span)
 print(f"RAPID on lmsys@4qps: {s['throughput_tok_s']:.0f} tok/s, "
       f"goodput {s['goodput_req_s']:.2f} req/s, "
       f"p95 ITL {s['itl_p95_s'] * 1e3:.0f} ms, "
       f"p95 TTFT {s['ttft_p95_s']:.2f} s")
+print(f"request 0 streamed {len(first_tokens)} tokens; first at "
+      f"t={first_tokens[0].t:.3f}s, last at t={first_tokens[-1].t:.3f}s")

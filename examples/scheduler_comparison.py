@@ -1,6 +1,9 @@
 """Scheduler comparison: RAPID vs hybrid batching vs disaggregated on
 the same trace, reproducing the shape of the paper's Figs 8-11 in one
-table.
+table.  Since the Scheduler/Executor split, "engine mode" literally IS
+the scheduler class — the execution substrate is shared, so this is a
+pure policy comparison (Serving API v2: metrics come from the event
+stream).
 
     PYTHONPATH=src python examples/scheduler_comparison.py --qps 16
 """
@@ -9,7 +12,7 @@ import copy
 
 from repro.config import SLOConfig, ServeConfig, get_config
 from repro.core import make_engine
-from repro.serving import TRACES, generate_trace, summarize
+from repro.serving import TRACES, StreamMetrics, generate_trace
 
 
 def main(argv=None):
@@ -36,8 +39,11 @@ def main(argv=None):
                                           args.chips // 2),
                             max_batch_slots=128)
         eng = make_engine(mode, cfg, serve)
-        recs, span = eng.run([copy.deepcopy(r) for r in reqs])
-        s = summarize(recs, slo, span)
+        metrics = StreamMetrics()
+        eng.subscribe(metrics)
+        eng.enqueue([copy.deepcopy(r) for r in reqs])
+        eng.loop.run()
+        s = metrics.summarize(slo, eng.loop.now if eng.loop.now else 1.0)
         print(f"{mode:10s} {s['throughput_tok_s']:11.0f} "
               f"{s['goodput_req_s']:10.2f} "
               f"{s['itl_goodput_req_s']:9.2f} "

@@ -20,7 +20,7 @@ import dataclasses
 import importlib
 import math
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional, Sequence
+from typing import Callable, Optional
 
 # ---------------------------------------------------------------------------
 # Sub-configs

@@ -1,15 +1,15 @@
 """Architecture registry — import every config module to populate it."""
 from repro.configs import (  # noqa: F401
-    jamba_1_5_large_398b,
-    xlstm_125m,
-    starcoder2_3b,
     granite_8b,
-    qwen2_5_14b,
-    minicpm_2b,
-    musicgen_large,
-    qwen3_moe_235b_a22b,
-    mixtral_8x22b,
-    qwen2_vl_72b,
+    jamba_1_5_large_398b,
     llama3_70b,
+    minicpm_2b,
+    mixtral_8x22b,
     mixtral_8x7b,
+    musicgen_large,
+    qwen2_5_14b,
+    qwen2_vl_72b,
+    qwen3_moe_235b_a22b,
+    starcoder2_3b,
+    xlstm_125m,
 )

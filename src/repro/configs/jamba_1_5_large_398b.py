@@ -6,7 +6,7 @@ matching Jamba's attn_layer_offset); MoE replaces the dense FFN on every
 other layer (e=2).  Jamba uses no explicit positional encoding (the Mamba
 layers carry position); rope_type="none".
 """
-from repro.config import MambaConfig, ModelConfig, MoEConfig, register
+from repro.config import MambaConfig, MoEConfig, ModelConfig, register
 
 CONFIG = ModelConfig(
     name="jamba-1.5-large-398b",

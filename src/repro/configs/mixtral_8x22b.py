@@ -4,7 +4,7 @@
 d_ff=16384, vocab=32768.  SWA window 4096 bounds the KV cache, making
 long_500k decode sub-quadratic (O(window) per token).
 """
-from repro.config import ModelConfig, MoEConfig, register
+from repro.config import MoEConfig, ModelConfig, register
 
 CONFIG = ModelConfig(
     name="mixtral-8x22b",

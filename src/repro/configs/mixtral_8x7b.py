@@ -3,7 +3,7 @@
 32L, d_model=4096, 32H (GQA kv=8), expert d_ff=14336, vocab=32000,
 8 experts top-2, sliding window 4096.
 """
-from repro.config import ModelConfig, MoEConfig, register
+from repro.config import MoEConfig, ModelConfig, register
 
 CONFIG = ModelConfig(
     name="mixtral-8x7b",

@@ -3,7 +3,7 @@
 94L, d_model=4096, 64H (GQA kv=4), expert d_ff=1536, vocab=151936.
 Every layer is MoE (no dense FFN layers).
 """
-from repro.config import ModelConfig, MoEConfig, register
+from repro.config import MoEConfig, ModelConfig, register
 
 CONFIG = ModelConfig(
     name="qwen3-moe-235b-a22b",

@@ -1,65 +1,52 @@
-"""Serving engines: RAPID (the paper), hybrid batching, disaggregated.
+"""Generic serving engine: one execution substrate, pluggable policies.
 
-All three are *real* control code — FCFS queues, decode-owned paged-KV
-allocation, notifications, preemption, admission — driven by the
-discrete-event loop; only step durations come from the perfmodel
-(DESIGN.md §6).  The same engine classes also drive the real CPU serving
-example (examples/serve_trace.py) where durations are wall-clock.
+Serving API v2 (this module + core/scheduler.py + core/executor.py +
+core/events.py) splits the historical monolithic engines into
 
-RapidEngine (paper §4):
-  * prefill and decode are two concurrent actors on the SAME chips;
-    whole-prompt prefill (no chunking), separate batches, overlapping
-    steps.
-  * decode owns the KV manager; arrival -> decode allocates prompt blocks
-    -> notify prefill -> prefill runs -> notify decode -> join batch
-    (Fig 4), all lock-free message passing.
-  * Adaptive Resource Manager picks overallocation vs distinct f_d per
-    step from the offline profile (§4.5.3).
-  * async one-step-ahead scheduling (NanoFlow-style): host work is hidden
-    under device execution (Fig 6b) => step time = max(device, host).
+  * a ``Scheduler`` — pure policy: consulted at every wake point with a
+    read-only ``SchedView``, returns a ``StepPlan`` (admissions,
+    rejections, lane launches, timed retries);
+  * an ``Executor`` — prices the launched steps (default
+    ``PerfModelExecutor``; a real-kernel executor slots in behind the
+    same interface);
+  * this ``Engine`` — the substrate: queues, decode-owned paged-KV
+    pools, the event loop, preemption, KV transfers, and a typed
+    request-lifecycle **event stream** (``TokenEvent`` / ``PhaseEvent``
+    / ``FinishedEvent`` / ``RejectedEvent``) consumed via
+    ``engine.subscribe()`` / ``engine.events()``.
 
-HybridEngine (Sarathi/vLLM-v1 chunked prefill):
-  * one lockstep batch per iteration: all running decodes + prefill
-    chunks up to the token budget.  Decode ITL is coupled to the full
-    hybrid step duration — the §3.1 overhead RAPID removes.
+``RapidEngine`` / ``HybridEngine`` / ``DisaggEngine`` are thin
+constructors binding the matching scheduler; ``make_engine`` keeps the
+historical entry point.  ``run()`` survives as a deprecated blocking
+shim over ``enqueue()`` + the event loop — new callers submit work and
+consume the stream (see README "Serving API v2").
 
-DisaggEngine (DistServe/Splitwise-style, vLLM v1 semantics):
-  * separate prefill/decode chip pools, KV transferred over ICI on the
-    critical path; the first token is *recomputed* on the decode instance
-    after transfer (vLLM v1 behaviour, paper §3.2.1).
-  * memory imbalance: only the decode pool holds long-lived KV (§3.2.2).
+Parity: the scheduler/executor engines reproduce the pre-split engines'
+per-request TTFT/ITL/finish metrics exactly (tests/test_parity.py golden
+traces; tests/test_cluster.py single-replica equivalence).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 from typing import Deque, Dict, List, Optional
 
 from repro.config import ServeConfig
+from repro.core.events import (EventStream, FinishedEvent, PhaseEvent,
+                               RejectedEvent, TokenEvent)
+from repro.core.executor import Executor, PerfModelExecutor
 from repro.core.preemption import DEFAULT_PREEMPTION, PreemptionPolicy
 from repro.core.request import Request, State
-from repro.core.resource_manager import (AdaptiveResourceManager,
-                                         build_decode_profile)
+from repro.core.scheduler import (DisaggScheduler, HybridScheduler,
+                                  LaneState, RapidScheduler, SchedView,
+                                  Scheduler, StepPlan, Wake,
+                                  kv_pool_blocks as kv_pool_blocks,
+                                  make_scheduler)
 from repro.kvcache import KVCacheManager, OutOfBlocks, kv_pages_for
-from repro.perfmodel import costs as C
-from repro.perfmodel import interference as I
 from repro.perfmodel.hw import TPU_V5E, HardwareSpec
 from repro.serving.metrics import RequestRecord
 from repro.serving.sim import EventLoop
-
-
-def kv_pool_blocks(cfg, hw: HardwareSpec, chips: int, page_size: int,
-                   reserve_frac: float = 0.05) -> int:
-    """Pool size: chip-group HBM minus weights, minus activation reserve."""
-    total = chips * hw.hbm_bytes * (1.0 - reserve_frac)
-    weights = C.weight_bytes(cfg)
-    free = total - weights
-    if free <= 0:
-        raise ValueError(
-            f"{cfg.name}: weights ({weights/2**30:.0f} GiB) exceed "
-            f"{chips}x{hw.hbm_bytes/2**30:.0f} GiB; increase chips")
-    per_block = page_size * cfg.kv_bytes_per_token()
-    return max(64, int(free // per_block))
 
 
 @dataclasses.dataclass
@@ -97,8 +84,12 @@ class LoadSnapshot:
     queued_kv_pages: int = 0
 
 
-class BaseEngine:
+class Engine:
+    """Scheduler/executor-driven serving engine (one replica)."""
+
     def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E,
+                 scheduler: Optional[Scheduler] = None,
+                 executor: Optional[Executor] = None,
                  loop: Optional[EventLoop] = None,
                  preempt_policy: PreemptionPolicy = DEFAULT_PREEMPTION):
         self.cfg = cfg
@@ -107,23 +98,75 @@ class BaseEngine:
         # injected loop => this engine is one replica of a cluster sharing
         # a single virtual clock; standalone engines own a private loop
         self.loop = loop if loop is not None else EventLoop()
+        self.scheduler = scheduler if scheduler is not None \
+            else make_scheduler(serve.mode, cfg, serve, hw)
         self.preempt_policy = preempt_policy
+        sched = self.scheduler
+        pools = sched.pool_blocks(cfg, serve, hw)
+        self.kv = KVCacheManager(pools["decode"], serve.page_size)
+        self.kv_p = KVCacheManager(pools["prefill"], serve.page_size) \
+            if "prefill" in pools else None
+        lane_chips = sched.lane_chips(serve)
+        if not sched.colocated:
+            self.chips_p = lane_chips["prefill"]
+            self.chips_d = lane_chips["decode"]
+        self.executor = executor if executor is not None else \
+            PerfModelExecutor(cfg, hw, colocated=sched.colocated,
+                              lane_chips=lane_chips)
+        self.tp = serve.chips
+        self.arm = getattr(sched, "arm", None)     # rapid compat
+        # queues: named deques, also exposed as attributes for direct
+        # inspection (waiting_kv / waiting_prefill / pending_join / ...)
+        self.queues: Dict[str, Deque[Request]] = {
+            name: collections.deque() for name in sched.queue_names}
+        for name, q in self.queues.items():
+            setattr(self, name, q)
+        self.running: List[Request] = []
+        self._lane_busy: Dict[str, bool] = {ln: False for ln in sched.lanes}
+        self._lane_cost: Dict[str, object] = {ln: None for ln in sched.lanes}
+        self._lane_f: Dict[str, Optional[float]] = \
+            {ln: None for ln in sched.lanes}
+        self.inflight_prefill_tokens = 0
+        self.inflight_transfers = 0
+        self.inflight_transfer_tokens = 0
         self.finished: List[Request] = []
         self.rejected: List[Request] = []
         self.util_samples: List[UtilSample] = []
         self._all: List[Request] = []
+        self.stream = EventStream()
 
-    # -- host-side scheduling overhead (Fig 6a vs 6b) -----------------------
-    def _step_time(self, device_s: float) -> float:
-        cpu = self.serve.scheduler_overhead_ms / 1e3
-        if self.serve.async_scheduling:
-            return max(device_s, cpu)
-        return device_s + cpu
+    # -- lane state (legacy flag names kept as read-only views) -------------
+    @property
+    def prefill_busy(self) -> bool:
+        return self._lane_busy.get("prefill",
+                                   self._lane_busy.get("step", False))
 
-    def _finish(self, r: Request) -> None:
-        r.state = State.FINISHED
-        r.t_finish = self.loop.now
-        self.finished.append(r)
+    @property
+    def decode_busy(self) -> bool:
+        return self._lane_busy.get("decode",
+                                   self._lane_busy.get("step", False))
+
+    @property
+    def busy(self) -> bool:                       # hybrid legacy name
+        return self._lane_busy.get("step", False)
+
+    # -- streaming API -------------------------------------------------------
+    def subscribe(self, fn, rid: Optional[int] = None):
+        """Attach a consumer to the typed event stream; ``rid`` narrows
+        to one request.  Returns ``fn`` for later ``unsubscribe``."""
+        return self.stream.subscribe(fn, rid)
+
+    def events(self):
+        """Replay log of every event emitted so far."""
+        return self.stream.events()
+
+    def submit(self, r: Request) -> None:
+        """Admit one request now (the streaming entry point)."""
+        sched = self.scheduler
+        r.state = sched.arrival_state
+        self.queues[sched.arrival_queue].append(r)
+        self.stream.emit(PhaseEvent(r.rid, self.loop.now, "queued"))
+        self._wake(Wake("arrival"))
 
     def enqueue(self, requests: List[Request]) -> None:
         """Seed arrival events on the (possibly shared) loop without
@@ -133,6 +176,14 @@ class BaseEngine:
             self.loop.at(r.arrival, lambda r=r: self.submit(r))
 
     def run(self, requests: List[Request], drain: bool = True):
+        """DEPRECATED blocking shim: ``enqueue()`` + drain the loop +
+        scrape records.  New callers submit work and consume
+        ``events()`` / a ``serving.metrics.StreamMetrics`` instead."""
+        warnings.warn(
+            "Engine.run() is deprecated; use enqueue()/submit() and "
+            "consume the event stream (engine.subscribe / "
+            "serving.metrics.StreamMetrics)", DeprecationWarning,
+            stacklevel=2)
         self.enqueue(requests)
         self.loop.run()
         span = self.loop.now if self.loop.now > 0 else 1.0
@@ -141,14 +192,195 @@ class BaseEngine:
     def records(self) -> List[RequestRecord]:
         return [RequestRecord.from_request(r) for r in self._all]
 
-    def submit(self, r: Request) -> None:
-        raise NotImplementedError
+    # -- scheduler consultation ---------------------------------------------
+    def _view(self, wake: Wake) -> SchedView:
+        sched = self.scheduler
+        lanes = {ln: LaneState(self._lane_busy[ln], self._lane_cost[ln],
+                               self._lane_f[ln]) for ln in sched.lanes}
+        return SchedView(now=self.loop.now, serve=self.serve,
+                         queues=self.queues, running=self.running,
+                         kv=self.kv, kv_p=self.kv_p, lanes=lanes, wake=wake)
 
-    def load_snapshot(self) -> LoadSnapshot:
-        raise NotImplementedError
+    def _wake(self, wake: Wake) -> None:
+        view = self._view(wake)
+        plan = self.scheduler.schedule(view)
+        self._apply(plan, view)
 
-    # -- admission: clean per-request rejection ------------------------------
-    def _reject(self, r: Request) -> None:
+    def _apply(self, plan: StepPlan, view: SchedView) -> None:
+        now = self.loop.now
+        for r, qname in plan.rejects:
+            if qname is None:                     # in-flight transfer
+                self.inflight_transfers -= 1
+                self.inflight_transfer_tokens -= r.prompt_len
+            else:
+                self.queues[qname].remove(r)
+            self._reject(r)
+        for adm in plan.admits:
+            r = adm.request
+            if adm.from_queue is None:            # in-flight transfer
+                self.inflight_transfers -= 1
+                self.inflight_transfer_tokens -= r.prompt_len
+            else:
+                self.queues[adm.from_queue].remove(r)
+            r.blocks = self.kv.allocate_prompt(r.rid, r.prompt_len)
+            if adm.stamp_t_blocks:
+                r.t_blocks = now
+            r.state = adm.state
+            if adm.stamp_prefill_start:
+                r.t_prefill_start = now
+            self.queues[adm.to_queue].append(r)
+            self.stream.emit(PhaseEvent(r.rid, now, "kv_allocated"))
+        outs = self.executor.execute(plan, view)
+        if plan.prefill is not None:
+            batch = plan.prefill.batch
+            q = self.queues[plan.prefill.queue]
+            for r in batch:
+                q.remove(r)
+                if plan.prefill.pool == "prefill":
+                    self.kv_p.allocate_prompt(r.rid, r.prompt_len)
+                r.state = State.PREFILLING
+                r.t_prefill_start = now
+                self.stream.emit(PhaseEvent(r.rid, now, "prefill"))
+            self._lane_busy["prefill"] = True
+            self._lane_cost["prefill"] = outs.prefill.cost
+            self.inflight_prefill_tokens = sum(r.prompt_len for r in batch)
+            self.loop.after(outs.prefill.duration_s,
+                            lambda b=batch: self._prefill_done(b))
+        if plan.decode is not None:
+            for r in plan.decode.joins:
+                self.queues["pending_join"].remove(r)
+                r.state = State.DECODING
+                self.running.append(r)
+                self.stream.emit(PhaseEvent(r.rid, now, "decode"))
+            self._lane_busy["decode"] = True
+            self._lane_cost["decode"] = outs.decode.cost
+            self._lane_f["decode"] = plan.decode.f_decode
+            batch = list(self.running)
+            self.loop.after(outs.decode.duration_s,
+                            lambda b=batch: self._decode_done(b))
+        if plan.hybrid is not None:
+            self._lane_busy["step"] = True
+            self._lane_cost["step"] = outs.hybrid.cost
+            batch = list(self.running)
+            chunks = plan.hybrid.chunks
+            self.loop.after(outs.hybrid.duration_s,
+                            lambda b=batch, c=chunks: self._step_done(b, c))
+        for retry in plan.retries:
+            self.loop.after(
+                retry.delay_s,
+                lambda r=retry.request: self._wake(
+                    Wake("admit_retry", request=r)))
+
+    # -- step completions (the execution substrate) -------------------------
+    def _prefill_done(self, batch: List[Request]) -> None:
+        now = self.loop.now
+        sched = self.scheduler
+        freed = False
+        for r in batch:
+            r.t_prefill_end = now
+            if sched.prefill_route == "transfer":
+                # KV transfer on the critical path (ICI), then decode-side
+                # admission + first-token recompute (vLLM v1, §3.2.1)
+                xfer = self.executor.transfer_seconds(r, self.serve)
+                self.inflight_transfers += 1
+                self.inflight_transfer_tokens += r.prompt_len
+                self.stream.emit(PhaseEvent(r.rid, now, "transfer"))
+                self.loop.after(xfer, lambda r=r: self._transfer_arrived(r))
+            else:
+                r.emit_token(now)             # first token from prefill
+                self.stream.emit(TokenEvent(r.rid, now,
+                                            r.tokens_generated - 1))
+                r.state = State.PREFILL_FINISHED
+                if r.done:                    # single-token request
+                    self.kv.free(r.rid)
+                    self._finish(r)
+                    freed = True
+                else:
+                    self.queues["pending_join"].append(r)
+        self._lane_busy["prefill"] = False
+        self._lane_cost["prefill"] = None
+        self.inflight_prefill_tokens = 0
+        self._wake(Wake("prefill_done", kv_freed=freed))
+
+    def _transfer_arrived(self, r: Request) -> None:
+        self.kv_p.free(r.rid)         # prefill-side memory released ONCE
+        self._wake(Wake("transfer_arrived", request=r))
+
+    def _decode_done(self, batch: List[Request]) -> None:
+        now = self.loop.now
+        freed = False
+        for r in batch:
+            if r not in self.running:     # preempted mid-loop
+                continue
+            try:
+                self.kv.append_token(r.rid)
+            except OutOfBlocks:
+                victim = self._preempt_victim()
+                if victim is None or victim is r:
+                    continue
+                self.kv.append_token(r.rid)
+            r.emit_token(now)
+            self.stream.emit(TokenEvent(r.rid, now, r.tokens_generated - 1))
+            if r.done:
+                self.kv.free(r.rid)
+                self.running.remove(r)
+                self._finish(r)
+                freed = True
+        self._lane_busy["decode"] = False
+        self._lane_cost["decode"] = None
+        self.util_samples.append(UtilSample(now, self.kv.utilization, True))
+        self._wake(Wake("decode_done", kv_freed=freed))
+
+    def _step_done(self, decode_batch: List[Request],
+                   chunks: List[tuple]) -> None:
+        now = self.loop.now
+        chunking = self.queues["chunking"]
+        for r, take in chunks:
+            r.prefill_tokens_done += take
+            if r.prefill_tokens_done >= r.prompt_len:
+                r.t_prefill_end = now
+                r.emit_token(now)     # last chunk produces first token
+                self.stream.emit(TokenEvent(r.rid, now,
+                                            r.tokens_generated - 1))
+                chunking.remove(r)
+                if r.done:
+                    self.kv.free(r.rid)
+                    self._finish(r)
+                else:
+                    r.state = State.DECODING
+                    self.running.append(r)
+                    self.stream.emit(PhaseEvent(r.rid, now, "decode"))
+        for r in decode_batch:
+            if r not in self.running:     # preempted mid-loop
+                continue
+            try:
+                self.kv.append_token(r.rid)
+            except OutOfBlocks:
+                victim = self._preempt_victim()
+                if victim is None or victim is r:
+                    continue
+                self.kv.append_token(r.rid)
+            r.emit_token(now)
+            self.stream.emit(TokenEvent(r.rid, now, r.tokens_generated - 1))
+            if r.done:
+                self.kv.free(r.rid)
+                self.running.remove(r)
+                self._finish(r)
+        self._lane_busy["step"] = False
+        self._lane_cost["step"] = None
+        self.util_samples.append(UtilSample(now, self.kv.utilization, True))
+        self._wake(Wake("step_done"))
+
+    # -- terminal transitions ------------------------------------------------
+    def _finish(self, r: Request) -> None:
+        r.state = State.FINISHED
+        r.t_finish = self.loop.now
+        self.finished.append(r)
+        self.stream.emit(FinishedEvent(
+            r.rid, self.loop.now, r.arrival, r.prompt_len,
+            r.tokens_generated, r.preemptions))
+
+    def _reject(self, r: Request, reason: str = "kv_infeasible") -> None:
         """A request whose prompt can never fit the pool is turned away
         instead of deadlocking the queue head (or, for disagg, retrying
         forever) — the caller sees ``state == REJECTED``, never an
@@ -156,19 +388,15 @@ class BaseEngine:
         r.state = State.REJECTED
         r.blocks = None
         self.rejected.append(r)
+        self.stream.emit(RejectedEvent(
+            r.rid, self.loop.now, r.arrival, r.prompt_len, reason,
+            r.tokens_generated, r.preemptions))
 
-    def _prompt_fits_pool(self, prompt_len: int, kv) -> bool:
-        return kv_pages_for(prompt_len, self.serve.page_size) <= \
-            kv.allocator.num_blocks
-
-    # -- local preemption (template; queue re-entry is engine-specific) -----
-    def _requeue_preempted(self, victim: Request) -> None:
-        raise NotImplementedError
-
+    # -- local preemption (recompute on resume) ------------------------------
     def _preempt_victim(self) -> Optional[Request]:
-        """Preempt one running request (recompute on resume); the shared
-        ``PreemptionPolicy`` ranks victims, each engine re-queues its own
-        way."""
+        """Preempt one running request; the shared ``PreemptionPolicy``
+        ranks victims, the scheduler's topology names the re-entry
+        queue."""
         victim = self._evict_running()
         if victim is not None:
             self._requeue_preempted(victim)
@@ -183,13 +411,25 @@ class BaseEngine:
         victim.preemptions += 1
         victim.blocks = None
         victim.prefill_tokens_done = 0
+        self.stream.emit(PhaseEvent(victim.rid, self.loop.now, "preempted"))
         return victim
 
+    def _requeue_preempted(self, victim: Request) -> None:
+        # recompute-on-resume: the whole context becomes the new "prompt"
+        sched = self.scheduler
+        victim.state = sched.requeue_state
+        self.queues[sched.requeue_queue].appendleft(victim)
+
     # -- cross-replica migration (cluster rebalance tick) -------------------
-    def _pop_queued_for_migration(self) -> Optional[Request]:
+    def _peek_queued_for_migration(self) -> Optional[Request]:
         """Newest request still waiting for KV/prefill — it holds no KV,
-        so moving it is a free re-route.  Engine-specific queue."""
-        return None
+        so moving it is a free re-route."""
+        q = self.queues[self.scheduler.migration_queue]
+        return q[-1] if q else None
+
+    def _pop_queued_for_migration(self) -> Optional[Request]:
+        q = self.queues[self.scheduler.migration_queue]
+        return q.pop() if q else None
 
     def migration_candidate(self):
         """Peek at what ``evict_for_migration`` would take: (request,
@@ -200,9 +440,6 @@ class BaseEngine:
             return q, False
         victim = self.preempt_policy.choose(self.running)
         return (victim, True) if victim is not None else None
-
-    def _peek_queued_for_migration(self) -> Optional[Request]:
-        return None
 
     def evict_for_migration(self):
         """Remove one request from this engine entirely for re-enqueue on
@@ -218,529 +455,81 @@ class BaseEngine:
         victim.state = State.ARRIVED
         return victim, True
 
+    # -- load view ------------------------------------------------------------
+    def load_snapshot(self) -> LoadSnapshot:
+        sched = self.scheduler
+        ps = self.serve.page_size
+        queued = sum(len(self.queues[q]) for q in sched.count_queues)
+        tokens = sum(r.prompt_len for q in sched.token_queues
+                     for r in self.queues[q])
+        tokens += sum(r.prompt_len - r.prefill_tokens_done
+                      for q in sched.partial_token_queues
+                      for r in self.queues[q])
+        tokens += self.inflight_prefill_tokens
+        pages = sum(kv_pages_for(r.prompt_len, ps)
+                    for q in sched.unalloc_queues for r in self.queues[q])
+        running = len(self.running)
+        ctx = sum(r.context_len for r in self.running)
+        if sched.prefill_route == "transfer":
+            # transfers in flight count as imminent decode load: they are
+            # done with prefill but WILL join the decode batch, so both
+            # routers and the autoscaler's idle detection must see them
+            queued += self.inflight_transfers
+            running += self.inflight_transfers
+            ctx += self.inflight_transfer_tokens
+            pages += kv_pages_for(self.inflight_transfer_tokens, ps)
+        return LoadSnapshot(
+            queued_requests=queued,
+            queued_prefill_tokens=tokens,
+            running_decode=running,
+            decode_ctx_tokens=ctx,
+            kv_utilization=self.kv.utilization,
+            prefill_busy=self.prefill_busy,
+            decode_busy=self.decode_busy,
+            kv_free_blocks=self.kv.allocator.free_count,
+            kv_total_blocks=self.kv.allocator.num_blocks,
+            queued_kv_pages=pages)
+
+
+# legacy name: PR-1/PR-2 callers subclassed/annotated against BaseEngine
+BaseEngine = Engine
+
 
 # ---------------------------------------------------------------------------
-# RAPID-Serve
+# Thin mode-bound constructors (compatibility + convenience)
 # ---------------------------------------------------------------------------
 
 
-class RapidEngine(BaseEngine):
+class RapidEngine(Engine):
+    """Paper §4 engine: RapidScheduler on the shared substrate."""
+
     def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E,
                  avg_ctx_hint: int = 4096,
                  loop: Optional[EventLoop] = None):
-        super().__init__(cfg, serve, hw, loop=loop)
-        tp = serve.chips
-        blocks = kv_pool_blocks(cfg, hw, serve.chips, serve.page_size,
-                                serve.kv_reserve_frac)
-        self.kv = KVCacheManager(blocks, serve.page_size)
-        profile = build_decode_profile(
-            cfg, hw, serve.chips, serve.slo.itl_ms / 1e3, avg_ctx_hint,
-            tp=tp)
-        self.arm = AdaptiveResourceManager(profile)
-        self.tp = tp
-        # queues (Fig 4)
-        self.waiting_kv: Deque[Request] = collections.deque()
-        self.waiting_prefill: Deque[Request] = collections.deque()
-        self.pending_join: Deque[Request] = collections.deque()
-        self.running: List[Request] = []
-        # actor state
-        self.prefill_busy = False
-        self.decode_busy = False
-        self.cur_prefill_cost: Optional[C.StepCost] = None
-        self.cur_decode_cost: Optional[C.StepCost] = None
-        self.cur_f_decode: Optional[float] = None
-        self.inflight_prefill_tokens = 0
-
-    # -- Fig 4: arrival -> decode-side block allocation ---------------------
-    def submit(self, r: Request) -> None:
-        r.state = State.WAITING_KV
-        self.waiting_kv.append(r)
-        self._drain_waiting_kv()
-
-    def _drain_waiting_kv(self) -> None:
-        progressed = False
-        while self.waiting_kv:
-            head = self.waiting_kv[0]
-            if not self._prompt_fits_pool(head.prompt_len, self.kv):
-                # can NEVER fit: reject cleanly instead of wedging the
-                # queue head (everything behind it would starve)
-                self._reject(self.waiting_kv.popleft())
-                continue
-            if not self.kv.can_allocate(head.prompt_len):
-                break
-            r = self.waiting_kv.popleft()
-            r.blocks = self.kv.allocate_prompt(r.rid, r.prompt_len)
-            r.t_blocks = self.loop.now
-            r.state = State.WAITING_PREFILL
-            self.waiting_prefill.append(r)   # notification to prefill
-            progressed = True
-        if progressed:
-            self._kick_prefill()
-
-    # -- prefill actor -------------------------------------------------------
-    def _kick_prefill(self) -> None:
-        if self.prefill_busy or not self.waiting_prefill:
-            return
-        batch: List[Request] = []
-        tokens = 0
-        while self.waiting_prefill:
-            nxt = self.waiting_prefill[0]
-            if batch and tokens + nxt.prompt_len > self.serve.prefill_max_tokens:
-                break
-            batch.append(self.waiting_prefill.popleft())
-            tokens += nxt.prompt_len
-        for r in batch:
-            r.state = State.PREFILLING
-            r.t_prefill_start = self.loop.now
-        self.prefill_busy = True
-        self.inflight_prefill_tokens = tokens
-        p_cost = C.prefill_cost(self.cfg, [r.prompt_len for r in batch],
-                                self.tp)
-        self.cur_prefill_cost = p_cost
-        dur = self._prefill_duration(p_cost)
-        self.loop.after(self._step_time(dur),
-                        lambda: self._prefill_done(batch))
-
-    def _prefill_duration(self, p_cost: C.StepCost) -> float:
-        if not self.decode_busy or self.cur_decode_cost is None:
-            return I.phase_time(p_cost, self.hw, self.serve.chips)
-        r = I.overlapped_times(p_cost, self.cur_decode_cost, self.hw,
-                               self.serve.chips, f_decode=self.cur_f_decode)
-        return r.t_prefill
-
-    def _prefill_done(self, batch: List[Request]) -> None:
-        now = self.loop.now
-        for r in batch:
-            r.t_prefill_end = now
-            r.emit_token(now)             # first token from prefill
-            r.state = State.PREFILL_FINISHED
-            if r.done:                    # single-token request
-                self.kv.free(r.rid)
-                self._finish(r)
-                self._drain_waiting_kv()
-            else:
-                self.pending_join.append(r)   # notification to decode
-        self.prefill_busy = False
-        self.inflight_prefill_tokens = 0
-        self.cur_prefill_cost = None
-        self._kick_prefill()
-        self._kick_decode()
-
-    # -- decode actor ---------------------------------------------------------
-    def _kick_decode(self) -> None:
-        if self.decode_busy:
-            return
-        while self.pending_join and \
-                len(self.running) < self.serve.max_batch_slots:
-            r = self.pending_join.popleft()
-            r.state = State.DECODING
-            self.running.append(r)
-        if not self.running:
-            return
-        bs = len(self.running)
-        alloc = self.arm.allocate(bs, self.prefill_busy)
-        ctx_total = float(sum(r.context_len for r in self.running))
-        d_cost = C.decode_cost(self.cfg, bs, ctx_total, self.tp)
-        self.cur_decode_cost = d_cost
-        self.cur_f_decode = alloc.f_decode
-        if self.prefill_busy and self.cur_prefill_cost is not None:
-            res = I.overlapped_times(self.cur_prefill_cost, d_cost, self.hw,
-                                     self.serve.chips,
-                                     f_decode=alloc.f_decode)
-            dur = res.t_decode
-        else:
-            dur = I.phase_time(d_cost, self.hw, self.serve.chips)
-        self.decode_busy = True
-        batch = list(self.running)
-        self.loop.after(self._step_time(dur),
-                        lambda: self._decode_done(batch))
-
-    def _decode_done(self, batch: List[Request]) -> None:
-        now = self.loop.now
-        freed = False
-        for r in batch:
-            if r not in self.running:     # preempted mid-loop
-                continue
-            try:
-                self.kv.append_token(r.rid)
-            except OutOfBlocks:
-                victim = self._preempt_victim()
-                if victim is None or victim is r:
-                    continue
-                self.kv.append_token(r.rid)
-            r.emit_token(now)
-            if r.done:
-                self.kv.free(r.rid)
-                self.running.remove(r)
-                self._finish(r)
-                freed = True
-        self.decode_busy = False
-        self.cur_decode_cost = None
-        self.util_samples.append(
-            UtilSample(now, self.kv.utilization, True))
-        if freed:
-            self._drain_waiting_kv()
-        self._kick_decode()
-
-    def _requeue_preempted(self, victim: Request) -> None:
-        victim.state = State.WAITING_KV
-        self.waiting_kv.appendleft(victim)
-
-    def _peek_queued_for_migration(self) -> Optional[Request]:
-        # waiting_kv holds no blocks yet; waiting_prefill already does
-        return self.waiting_kv[-1] if self.waiting_kv else None
-
-    def _pop_queued_for_migration(self) -> Optional[Request]:
-        return self.waiting_kv.pop() if self.waiting_kv else None
-
-    def load_snapshot(self) -> LoadSnapshot:
-        queued = (list(self.waiting_kv) + list(self.waiting_prefill)
-                  + list(self.pending_join))
-        pending_tokens = sum(r.prompt_len for r in self.waiting_kv) + \
-            sum(r.prompt_len for r in self.waiting_prefill) + \
-            self.inflight_prefill_tokens
-        ps = self.serve.page_size
-        return LoadSnapshot(
-            queued_requests=len(queued),
-            queued_prefill_tokens=pending_tokens,
-            running_decode=len(self.running),
-            decode_ctx_tokens=sum(r.context_len for r in self.running),
-            kv_utilization=self.kv.utilization,
-            prefill_busy=self.prefill_busy,
-            decode_busy=self.decode_busy,
-            kv_free_blocks=self.kv.allocator.free_count,
-            kv_total_blocks=self.kv.allocator.num_blocks,
-            queued_kv_pages=sum(kv_pages_for(r.prompt_len, ps)
-                                for r in self.waiting_kv))
+        super().__init__(
+            cfg, serve, hw,
+            scheduler=RapidScheduler(cfg, serve, hw, avg_ctx_hint),
+            loop=loop)
 
 
-# ---------------------------------------------------------------------------
-# Hybrid batching with chunked prefill (Sarathi / vLLM-v1)
-# ---------------------------------------------------------------------------
+class HybridEngine(Engine):
+    """Sarathi/vLLM-v1 chunked-prefill baseline."""
 
-
-class HybridEngine(BaseEngine):
     def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E,
                  loop: Optional[EventLoop] = None):
-        super().__init__(cfg, serve, hw, loop=loop)
-        self.tp = serve.chips
-        blocks = kv_pool_blocks(cfg, hw, serve.chips, serve.page_size,
-                                serve.kv_reserve_frac)
-        self.kv = KVCacheManager(blocks, serve.page_size)
-        self.waiting: Deque[Request] = collections.deque()
-        self.chunking: List[Request] = []   # admitted, prompt in progress
-        self.running: List[Request] = []
-        self.busy = False
-
-    def submit(self, r: Request) -> None:
-        r.state = State.WAITING_KV
-        self.waiting.append(r)
-        self._kick()
-
-    def _admit(self) -> None:
-        while self.waiting:
-            head = self.waiting[0]
-            if not self._prompt_fits_pool(head.prompt_len, self.kv):
-                self._reject(self.waiting.popleft())
-                continue
-            if not self.kv.can_allocate(head.prompt_len) or \
-                    len(self.chunking) + len(self.running) >= \
-                    self.serve.max_batch_slots:
-                break
-            r = self.waiting.popleft()
-            r.blocks = self.kv.allocate_prompt(r.rid, r.prompt_len)
-            r.t_blocks = self.loop.now
-            r.state = State.PREFILLING
-            r.t_prefill_start = self.loop.now
-            self.chunking.append(r)
-
-    def _kick(self) -> None:
-        if self.busy:
-            return
-        self._admit()
-        bs = len(self.running)
-        if bs == 0 and not self.chunking:
-            return
-        # Sarathi: budget filled with decodes first, then prefill chunks
-        budget = max(0, self.serve.token_budget - bs)
-        cost = C.ZERO_COST
-        chunks: List[tuple] = []
-        for r in self.chunking:
-            if budget <= 0:
-                break
-            take = min(self.serve.chunk_size, budget,
-                       r.prompt_len - r.prefill_tokens_done)
-            if take <= 0:
-                continue
-            cost = cost + C.chunk_prefill_cost(
-                self.cfg, take, r.prefill_tokens_done, self.tp)
-            chunks.append((r, take))
-            budget -= take
-        if bs:
-            ctx_total = float(sum(r.context_len for r in self.running))
-            cost = cost + C.decode_cost(self.cfg, bs, ctx_total, self.tp)
-        if not chunks and bs == 0:
-            return
-        self.busy = True
-        dur = I.phase_time(cost, self.hw, self.serve.chips)
-        batch = list(self.running)
-        self.loop.after(self._step_time(dur),
-                        lambda: self._step_done(batch, chunks))
-
-    def _step_done(self, decode_batch: List[Request],
-                   chunks: List[tuple]) -> None:
-        now = self.loop.now
-        freed = False
-        for r, take in chunks:
-            r.prefill_tokens_done += take
-            if r.prefill_tokens_done >= r.prompt_len:
-                r.t_prefill_end = now
-                r.emit_token(now)     # last chunk produces first token
-                self.chunking.remove(r)
-                if r.done:
-                    self.kv.free(r.rid)
-                    self._finish(r)
-                    freed = True
-                else:
-                    r.state = State.DECODING
-                    self.running.append(r)
-        for r in decode_batch:
-            if r not in self.running:     # preempted mid-loop
-                continue
-            try:
-                self.kv.append_token(r.rid)
-            except OutOfBlocks:
-                victim = self._preempt_victim()
-                if victim is None or victim is r:
-                    continue
-                self.kv.append_token(r.rid)
-            r.emit_token(now)
-            if r.done:
-                self.kv.free(r.rid)
-                self.running.remove(r)
-                self._finish(r)
-                freed = True
-        self.busy = False
-        self.util_samples.append(UtilSample(now, self.kv.utilization, True))
-        del freed
-        self._kick()
-
-    def _requeue_preempted(self, victim: Request) -> None:
-        # recompute-on-resume: the whole context becomes the new "prompt"
-        victim.state = State.WAITING_KV
-        self.waiting.appendleft(victim)
-
-    def _peek_queued_for_migration(self) -> Optional[Request]:
-        return self.waiting[-1] if self.waiting else None
-
-    def _pop_queued_for_migration(self) -> Optional[Request]:
-        return self.waiting.pop() if self.waiting else None
-
-    def load_snapshot(self) -> LoadSnapshot:
-        pending_tokens = sum(r.prompt_len for r in self.waiting) + \
-            sum(r.prompt_len - r.prefill_tokens_done for r in self.chunking)
-        ps = self.serve.page_size
-        return LoadSnapshot(
-            queued_requests=len(self.waiting) + len(self.chunking),
-            queued_prefill_tokens=pending_tokens,
-            running_decode=len(self.running),
-            decode_ctx_tokens=sum(r.context_len for r in self.running),
-            kv_utilization=self.kv.utilization,
-            prefill_busy=self.busy,
-            decode_busy=self.busy,
-            kv_free_blocks=self.kv.allocator.free_count,
-            kv_total_blocks=self.kv.allocator.num_blocks,
-            queued_kv_pages=sum(kv_pages_for(r.prompt_len, ps)
-                                for r in self.waiting))
+        super().__init__(cfg, serve, hw,
+                         scheduler=HybridScheduler(cfg, serve, hw),
+                         loop=loop)
 
 
-# ---------------------------------------------------------------------------
-# Disaggregated serving (DistServe-style, vLLM v1 transfer semantics)
-# ---------------------------------------------------------------------------
+class DisaggEngine(Engine):
+    """DistServe-style split-pool baseline."""
 
-
-class DisaggEngine(BaseEngine):
     def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E,
                  loop: Optional[EventLoop] = None):
-        super().__init__(cfg, serve, hw, loop=loop)
-        self.chips_p, self.chips_d = serve.disagg_split
-        # each pool holds a full weight replica; KV capacity only matters
-        # on the decode side (the §3.2.2 imbalance)
-        blocks_d = kv_pool_blocks(cfg, hw, self.chips_d, serve.page_size,
-                                  serve.kv_reserve_frac)
-        blocks_p = kv_pool_blocks(cfg, hw, self.chips_p, serve.page_size,
-                                  serve.kv_reserve_frac)
-        self.kv = KVCacheManager(blocks_d, serve.page_size)       # decode
-        self.kv_p = KVCacheManager(blocks_p, serve.page_size)     # transient
-        self.waiting_prefill: Deque[Request] = collections.deque()
-        self.pending_join: Deque[Request] = collections.deque()
-        self.running: List[Request] = []
-        self.prefill_busy = False
-        self.decode_busy = False
-        self.inflight_prefill_tokens = 0
-        # requests whose KV transfer is in flight (prefill done, decode
-        # admission pending) — in no queue, but very much still load
-        self.inflight_transfers = 0
-        self.inflight_transfer_tokens = 0
-
-    def submit(self, r: Request) -> None:
-        r.state = State.WAITING_PREFILL
-        self.waiting_prefill.append(r)
-        self._kick_prefill()
-
-    def _kick_prefill(self) -> None:
-        if self.prefill_busy or not self.waiting_prefill:
-            return
-        batch: List[Request] = []
-        tokens = 0
-        while self.waiting_prefill:
-            nxt = self.waiting_prefill[0]
-            if not self._prompt_fits_pool(nxt.prompt_len, self.kv_p) or \
-                    not self._prompt_fits_pool(nxt.prompt_len, self.kv):
-                # oversized for the prefill pool (queue-head wedge) or the
-                # decode pool (would retry admission forever in
-                # _kv_arrived): reject up front
-                self._reject(self.waiting_prefill.popleft())
-                continue
-            if not self.kv_p.can_allocate(nxt.prompt_len):
-                break
-            if batch and tokens + nxt.prompt_len > self.serve.prefill_max_tokens:
-                break
-            r = self.waiting_prefill.popleft()
-            self.kv_p.allocate_prompt(r.rid, r.prompt_len)
-            batch.append(r)
-            tokens += nxt.prompt_len
-        if not batch:
-            return
-        for r in batch:
-            r.state = State.PREFILLING
-            r.t_prefill_start = self.loop.now
-        self.prefill_busy = True
-        self.inflight_prefill_tokens = tokens
-        p_cost = C.prefill_cost(self.cfg, [r.prompt_len for r in batch],
-                                self.chips_p)
-        dur = I.phase_time(p_cost, self.hw, self.chips_p)
-        self.loop.after(self._step_time(dur),
-                        lambda: self._prefill_done(batch))
-
-    def _prefill_done(self, batch: List[Request]) -> None:
-        now = self.loop.now
-        for r in batch:
-            r.t_prefill_end = now
-            # KV transfer on the critical path (ICI), then decode-side
-            # admission + first-token recompute (vLLM v1, §3.2.1)
-            xfer = C.kv_transfer_bytes(self.cfg, r.prompt_len) / \
-                (self.serve.kv_transfer_gbps * 1e9)
-            self.inflight_transfers += 1
-            self.inflight_transfer_tokens += r.prompt_len
-            self.loop.after(xfer, lambda r=r: self._kv_arrived(r))
-        self.prefill_busy = False
-        self.inflight_prefill_tokens = 0
-        self._kick_prefill()
-
-    def _kv_arrived(self, r: Request) -> None:
-        self.kv_p.free(r.rid)           # prefill-side memory released ONCE
-        self._kick_prefill()
-        self._try_admit_decode(r)
-
-    def _try_admit_decode(self, r: Request) -> None:
-        """Decode-side admission after transfer; retries must re-enter
-        here, NOT _kv_arrived, or the kv_p seq would be freed twice."""
-        if not self._prompt_fits_pool(r.prompt_len, self.kv):
-            # can NEVER fit the decode pool — without this the retry loop
-            # below spins until the event budget blows up (the OutOfBlocks
-            # flavour this engine used to surface); reject cleanly
-            self.inflight_transfers -= 1
-            self.inflight_transfer_tokens -= r.prompt_len
-            self._reject(r)
-            return
-        if not self.kv.can_allocate(r.prompt_len):
-            # decode pool full: back-pressure; retry on next decode step
-            self.loop.after(self.serve.slo.itl_ms / 1e3,
-                            lambda: self._try_admit_decode(r))
-            return
-        r.blocks = self.kv.allocate_prompt(r.rid, r.prompt_len)
-        r.state = State.PREFILL_FINISHED
-        self.inflight_transfers -= 1
-        self.inflight_transfer_tokens -= r.prompt_len
-        self.pending_join.append(r)
-        self._kick_decode()
-
-    def _kick_decode(self) -> None:
-        if self.decode_busy:
-            return
-        while self.pending_join and \
-                len(self.running) < self.serve.max_batch_slots:
-            r = self.pending_join.popleft()
-            r.state = State.DECODING
-            self.running.append(r)
-        if not self.running:
-            return
-        bs = len(self.running)
-        ctx_total = float(sum(r.context_len for r in self.running))
-        d_cost = C.decode_cost(self.cfg, bs, ctx_total, self.chips_d)
-        dur = I.phase_time(d_cost, self.hw, self.chips_d)
-        self.decode_busy = True
-        batch = list(self.running)
-        self.loop.after(self._step_time(dur),
-                        lambda: self._decode_done(batch))
-
-    def _decode_done(self, batch: List[Request]) -> None:
-        now = self.loop.now
-        for r in batch:
-            if r not in self.running:     # preempted mid-loop
-                continue
-            try:
-                self.kv.append_token(r.rid)
-            except OutOfBlocks:
-                victim = self._preempt_victim()
-                if victim is None or victim is r:
-                    continue
-                self.kv.append_token(r.rid)
-            # first emission after transfer = the recomputed token 1
-            # (TTFT lands here, vLLM v1 semantics — paper §3.2.1)
-            r.emit_token(now)
-            if r.done:
-                self.kv.free(r.rid)
-                self.running.remove(r)
-                self._finish(r)
-        self.decode_busy = False
-        self.util_samples.append(UtilSample(now, self.kv.utilization, True))
-        self._kick_decode()
-
-    def _requeue_preempted(self, victim: Request) -> None:
-        victim.state = State.WAITING_PREFILL
-        self.waiting_prefill.appendleft(victim)
-        self._kick_prefill()
-
-    def _peek_queued_for_migration(self) -> Optional[Request]:
-        return self.waiting_prefill[-1] if self.waiting_prefill else None
-
-    def _pop_queued_for_migration(self) -> Optional[Request]:
-        return self.waiting_prefill.pop() if self.waiting_prefill else None
-
-    def load_snapshot(self) -> LoadSnapshot:
-        pending_tokens = sum(r.prompt_len for r in self.waiting_prefill) + \
-            self.inflight_prefill_tokens
-        ps = self.serve.page_size
-        # transfers in flight count as imminent decode load: they are done
-        # with prefill but WILL join the decode batch, so both routers and
-        # the autoscaler's idle detection must see them
-        return LoadSnapshot(
-            queued_requests=len(self.waiting_prefill)
-            + len(self.pending_join) + self.inflight_transfers,
-            queued_prefill_tokens=pending_tokens,
-            running_decode=len(self.running) + self.inflight_transfers,
-            decode_ctx_tokens=sum(r.context_len for r in self.running)
-            + self.inflight_transfer_tokens,
-            kv_utilization=self.kv.utilization,
-            prefill_busy=self.prefill_busy,
-            decode_busy=self.decode_busy,
-            kv_free_blocks=self.kv.allocator.free_count,
-            kv_total_blocks=self.kv.allocator.num_blocks,
-            queued_kv_pages=sum(kv_pages_for(r.prompt_len, ps)
-                                for r in self.waiting_prefill)
-            + kv_pages_for(self.inflight_transfer_tokens, ps))
+        super().__init__(cfg, serve, hw,
+                         scheduler=DisaggScheduler(cfg, serve, hw),
+                         loop=loop)
 
 
 ENGINES = {
@@ -752,7 +541,7 @@ ENGINES = {
 
 def make_engine(mode: str, cfg, serve: ServeConfig,
                 hw: HardwareSpec = TPU_V5E,
-                loop: Optional[EventLoop] = None) -> BaseEngine:
+                loop: Optional[EventLoop] = None) -> Engine:
     if mode not in ENGINES:
         raise KeyError(
             f"unknown engine mode {mode!r}; known: {sorted(ENGINES)}")

@@ -1,0 +1,114 @@
+"""Typed request-lifecycle event stream (Serving API v2).
+
+Engines emit a stream of small frozen event records as requests move
+through the system; callers *subscribe* instead of scraping
+``records()`` after the fact:
+
+  * ``TokenEvent``    — one generated token (``index`` is 0-based; the
+    first token of a request is the one produced by prefill).
+  * ``PhaseEvent``    — a lifecycle transition: ``queued`` (arrival),
+    ``kv_allocated`` (decode-side block allocation, paper Fig 4),
+    ``prefill`` (prefill step started), ``transfer`` (disagg KV transfer
+    started), ``decode`` (joined the decode batch), ``preempted``.
+  * ``FinishedEvent`` — terminal success; carries enough metadata
+    (arrival, prompt_len, output_len, preemptions) that consumers can
+    build a full ``RequestRecord`` from the stream alone.
+  * ``RejectedEvent`` — terminal admission failure.
+
+Every request ends with exactly one ``FinishedEvent`` or
+``RejectedEvent``; its ``TokenEvent`` times are monotone and count
+exactly ``max_new_tokens`` on success (asserted in tests/test_events.py).
+
+``EventStream`` is a synchronous pub/sub hub with a replay log: under
+the virtual clock "streaming" means subscribers run inline at emission
+time (same ``loop.now``), and ``events()`` returns everything emitted so
+far for post-hoc consumers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    rid: int
+    t: float
+    index: int          # 0-based position in the request's output
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseEvent:
+    rid: int
+    t: float
+    phase: str          # queued|kv_allocated|prefill|transfer|decode|preempted
+
+
+@dataclasses.dataclass(frozen=True)
+class FinishedEvent:
+    rid: int
+    t: float
+    arrival: float
+    prompt_len: int
+    output_len: int
+    preemptions: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RejectedEvent:
+    rid: int
+    t: float
+    arrival: float
+    prompt_len: int
+    reason: str = "kv_infeasible"
+    output_len: int = 0
+    preemptions: int = 0
+
+
+Event = Union[TokenEvent, PhaseEvent, FinishedEvent, RejectedEvent]
+
+TERMINAL_EVENTS = (FinishedEvent, RejectedEvent)
+
+
+class EventStream:
+    """Synchronous pub/sub with a replay log.
+
+    ``subscribe(fn)`` registers a global consumer; ``subscribe(fn,
+    rid=...)`` a per-request one (only that request's events).  Consumers
+    are plain callables invoked inline at emission time — on the virtual
+    clock that is "streaming".  ``events()`` returns the replay log.
+    """
+
+    def __init__(self):
+        self._log: List[Event] = []
+        self._subs: List[Callable[[Event], None]] = []
+        self._per_rid: Dict[int, List[Callable[[Event], None]]] = {}
+
+    def emit(self, ev: Event) -> None:
+        self._log.append(ev)
+        for fn in self._subs:
+            fn(ev)
+        for fn in self._per_rid.get(ev.rid, ()):
+            fn(ev)
+
+    def subscribe(self, fn: Callable[[Event], None],
+                  rid: Optional[int] = None) -> Callable[[Event], None]:
+        """Register ``fn``; returns it so callers can unsubscribe."""
+        if rid is None:
+            self._subs.append(fn)
+        else:
+            self._per_rid.setdefault(rid, []).append(fn)
+        return fn
+
+    def unsubscribe(self, fn: Callable[[Event], None],
+                    rid: Optional[int] = None) -> None:
+        if rid is None:
+            self._subs.remove(fn)
+        else:
+            self._per_rid[rid].remove(fn)
+
+    def events(self) -> Tuple[Event, ...]:
+        return tuple(self._log)
+
+    def __len__(self) -> int:
+        return len(self._log)

@@ -1,0 +1,153 @@
+"""Step execution backends for the generic serving engine (API v2).
+
+An ``Executor`` prices the steps a ``Scheduler`` decided to launch: it
+turns a ``StepPlan`` into per-lane durations (and the ``StepCost``
+objects the interference model needs for overlapped steps).  The default
+``PerfModelExecutor`` wraps ``perfmodel.costs`` + ``perfmodel.
+interference`` — engine control flow is real, only durations are
+modelled (DESIGN.md §6).
+
+The split exists so a *real-kernel* executor can drop in behind the same
+interface: one that launches ``kernels/unified_pd.py`` (the fused
+prefill+decode Pallas kernel) and reports measured wall-clock step times
+instead of modelled ones.  ``KernelExecutor`` below is the documented
+stub for that door.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.scheduler import SchedView, StepPlan
+from repro.perfmodel import costs as C
+from repro.perfmodel import interference as I
+from repro.perfmodel.hw import TPU_V5E, HardwareSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchOutcome:
+    """One priced lane step: wall-clock duration (host overhead included,
+    Fig 6) plus the device cost the interference model consumes while
+    the step is in flight."""
+    duration_s: float
+    cost: C.StepCost
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOutputs:
+    """Durations for every launch in a ``StepPlan`` (None = not in plan)."""
+    prefill: Optional[LaunchOutcome] = None
+    decode: Optional[LaunchOutcome] = None
+    hybrid: Optional[LaunchOutcome] = None
+
+
+class Executor:
+    """Protocol: price a StepPlan.  Implementations must price launches
+    in plan order — prefill before decode — so a decode launched in the
+    same plan sees the new prefill in flight (colocated interference)."""
+
+    def execute(self, plan: StepPlan, view: SchedView) -> StepOutputs:
+        raise NotImplementedError
+
+    def transfer_seconds(self, r, serve) -> float:
+        """Disagg KV-transfer time for one request (ICI on the critical
+        path, §3.2.1)."""
+        raise NotImplementedError
+
+
+class PerfModelExecutor(Executor):
+    """Default executor: calibrated TPU-v5e perfmodel durations.
+
+    ``colocated`` selects the paper's intra-GPU interference coupling:
+    when prefill and decode share chips, an overlapped step's duration
+    comes from ``interference.overlapped_times`` under the decode lane's
+    resource split ``f_decode``; split-pool (disagg) lanes run at their
+    own ``phase_time``.
+    """
+
+    def __init__(self, cfg, hw: HardwareSpec = TPU_V5E,
+                 colocated: bool = True,
+                 lane_chips: Optional[Dict[str, int]] = None):
+        self.cfg = cfg
+        self.hw = hw
+        self.colocated = colocated
+        self.lane_chips = lane_chips or {}
+
+    def _chips(self, lane: str, serve) -> int:
+        return self.lane_chips.get(lane, serve.chips)
+
+    # -- host-side scheduling overhead (Fig 6a vs 6b) -----------------------
+    def _step_time(self, device_s: float, serve) -> float:
+        cpu = serve.scheduler_overhead_ms / 1e3
+        if serve.async_scheduling:
+            return max(device_s, cpu)
+        return device_s + cpu
+
+    def execute(self, plan: StepPlan, view: SchedView) -> StepOutputs:
+        serve = view.serve
+        p_out = d_out = h_out = None
+        if plan.prefill is not None:
+            chips = self._chips("prefill", serve)
+            cost = C.prefill_cost(
+                self.cfg, [r.prompt_len for r in plan.prefill.batch], chips)
+            dlane = view.lanes.get("decode", None)
+            if self.colocated and dlane is not None and dlane.busy and \
+                    dlane.cost is not None:
+                dur = I.overlapped_times(cost, dlane.cost, self.hw, chips,
+                                         f_decode=dlane.f_decode).t_prefill
+            else:
+                dur = I.phase_time(cost, self.hw, chips)
+            p_out = LaunchOutcome(self._step_time(dur, serve), cost)
+        if plan.decode is not None:
+            chips = self._chips("decode", serve)
+            batch = list(view.running) + list(plan.decode.joins)
+            ctx_total = float(sum(r.context_len for r in batch))
+            cost = C.decode_cost(self.cfg, len(batch), ctx_total, chips)
+            if p_out is not None:
+                p_cost = p_out.cost          # launched in this same plan
+            else:
+                plane = view.lanes.get("prefill", None)
+                p_cost = plane.cost if plane is not None and plane.busy \
+                    else None
+            if self.colocated and p_cost is not None:
+                dur = I.overlapped_times(p_cost, cost, self.hw, chips,
+                                         f_decode=plan.decode.f_decode
+                                         ).t_decode
+            else:
+                dur = I.phase_time(cost, self.hw, chips)
+            d_out = LaunchOutcome(self._step_time(dur, serve), cost)
+        if plan.hybrid is not None:
+            chips = self._chips("step", serve)
+            cost = C.ZERO_COST
+            for r, take in plan.hybrid.chunks:
+                cost = cost + C.chunk_prefill_cost(
+                    self.cfg, take, r.prefill_tokens_done, chips)
+            bs = len(view.running)
+            if bs:
+                ctx_total = float(sum(r.context_len for r in view.running))
+                cost = cost + C.decode_cost(self.cfg, bs, ctx_total, chips)
+            dur = I.phase_time(cost, self.hw, chips)
+            h_out = LaunchOutcome(self._step_time(dur, serve), cost)
+        return StepOutputs(prefill=p_out, decode=d_out, hybrid=h_out)
+
+    def transfer_seconds(self, r, serve) -> float:
+        return C.kv_transfer_bytes(self.cfg, r.prompt_len) / \
+            (serve.kv_transfer_gbps * 1e9)
+
+
+class KernelExecutor(Executor):
+    """Door-opener stub: execute steps with the real fused P/D kernel.
+
+    A full implementation would build model state once, then run
+    ``kernels.unified_pd`` for colocated plans (prefill + decode in one
+    fused launch) and the flash-prefill / paged-attention kernels for
+    split lanes, reporting measured wall-clock durations.  Kept as an
+    explicit stub so the interface is designed-in rather than bolted on;
+    see examples/serve_real.py for the CPU-real generation path.
+    """
+
+    def __init__(self, *a, **kw):
+        raise NotImplementedError(
+            "KernelExecutor is a design stub: durations come from "
+            "PerfModelExecutor until the real-kernel executor PR "
+            "(kernels/unified_pd.py) lands")

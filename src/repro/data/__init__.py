@@ -1,1 +1,1 @@
-from repro.data.pipeline import TokenPipeline, PipelineState  # noqa: F401
+from repro.data.pipeline import PipelineState, TokenPipeline  # noqa: F401

@@ -20,7 +20,6 @@ via @pl.when, so short sequences cost only their own pages.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -31,7 +31,7 @@ Mechanics:
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

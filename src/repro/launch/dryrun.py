@@ -24,11 +24,11 @@ import json
 import sys
 import time
 
-import jax
+import jax  # noqa: F401  (must initialize under the XLA_FLAGS above)
 
 from repro.config import SHAPES, get_config, list_archs
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import RooflineTerms, analyze
+from repro.launch.roofline import analyze
 from repro.launch.steps import build_cell, cells_for_arch
 
 

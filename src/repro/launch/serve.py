@@ -34,9 +34,9 @@ import json
 
 from repro.config import SLOConfig, ServeConfig, get_config, list_archs
 from repro.core import make_engine
-from repro.serving import (AdmissionPolicy, RebalancePolicy, ROUTERS,
-                           TRACES, generate_trace, parse_mix, run_fleet,
-                           summarize)
+from repro.serving import (ROUTERS, TRACES, AdmissionPolicy,
+                           RebalancePolicy, StreamMetrics, generate_trace,
+                           parse_mix, run_fleet)
 
 
 def _serve_config(mode: str, chips: int, slo: SLOConfig, chunk: int,
@@ -56,8 +56,13 @@ def run_one(arch: str, mode: str, trace: str, qps: float, duration: float,
     reqs = generate_trace(TRACES[trace], qps=qps, duration_s=duration,
                           seed=seed)
     eng = make_engine(mode, cfg, serve)
-    recs, span = eng.run([copy.deepcopy(r) for r in reqs])
-    return summarize(recs, slo, span)
+    # API v2: consume the event stream instead of scraping records()
+    metrics = StreamMetrics()
+    eng.subscribe(metrics)
+    eng.enqueue([copy.deepcopy(r) for r in reqs])
+    eng.loop.run()
+    span = eng.loop.now if eng.loop.now > 0 else 1.0
+    return metrics.summarize(slo, span)
 
 
 def run_cluster(arch: str, modes, router: str, trace: str, qps: float,

@@ -13,21 +13,20 @@ Shapes lower:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
-from repro.config import ModelConfig, ShapeConfig, SHAPES
+from repro.config import SHAPES, ModelConfig, ShapeConfig
 from repro.models.transformer import (cache_specs, decode_forward, forward,
                                       init_cache, init_model)
 from repro.sharding import (ShardingRules, make_constrain, param_sharding,
                             rules_for_mesh, spec_to_pspec)
 from repro.training.optimizer import OptConfig
-from repro.training.train_lib import (TrainState, init_train_state,
-                                      make_train_step, train_state_specs)
+from repro.training.train_lib import (TrainState, make_train_step,
+                                      train_state_specs)
 
 
 @dataclasses.dataclass

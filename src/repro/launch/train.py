@@ -16,9 +16,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.config import SHAPES, get_config, get_reduced_config, list_archs
+from repro.config import get_reduced_config, list_archs
 from repro.data import TokenPipeline
-from repro.launch.mesh import make_host_mesh
 from repro.training.checkpoint import CheckpointManager
 from repro.training.optimizer import OptConfig
 from repro.training.resilience import TrainingSupervisor

@@ -1,3 +1,3 @@
 from repro.models.transformer import (  # noqa: F401
-    init_model, init_cache, forward, decode_forward,
+    decode_forward, forward, init_cache, init_model,
 )

@@ -18,7 +18,6 @@ long-context decode reads O(window), not O(S).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

@@ -12,7 +12,6 @@ Logical sharding axes used below (translated to mesh axes in sharding.py):
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,7 @@ archs (audio/VLM backbones), precomputed float embeddings (B, S, d_model).
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

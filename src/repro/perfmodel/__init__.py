@@ -1,8 +1,8 @@
-from repro.perfmodel.hw import TPU_V5E, HardwareSpec  # noqa: F401
 from repro.perfmodel.costs import (  # noqa: F401
-    StepCost, prefill_cost, decode_cost, model_flops_per_token,
-    weight_bytes, kv_read_bytes,
+    StepCost, decode_cost, kv_read_bytes, model_flops_per_token,
+    prefill_cost, weight_bytes,
 )
+from repro.perfmodel.hw import TPU_V5E, HardwareSpec  # noqa: F401
 from repro.perfmodel.interference import (  # noqa: F401
-    phase_time, overlapped_times, OverlapResult,
+    OverlapResult, overlapped_times, phase_time,
 )

@@ -16,9 +16,8 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
-from repro.perfmodel.hw import HardwareSpec
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,9 +1,13 @@
-from repro.serving.sim import EventLoop  # noqa: F401
-from repro.serving.traces import TRACES, generate_trace, TraceSpec  # noqa: F401
-from repro.serving.metrics import (  # noqa: F401
-    RequestRecord, fleet_summarize, summarize)
 from repro.serving.admission import (  # noqa: F401
-    AdmissionController, AdmissionPolicy)
+    AdmissionController, AdmissionPolicy,
+)
 from repro.serving.cluster import (  # noqa: F401
-    BucketedRouter, Cluster, ROUTERS, RebalancePolicy, Replica,
-    ReplicaSpec, ScalePolicy, make_router, parse_mix, run_fleet)
+    ROUTERS, BucketedRouter, Cluster, RebalancePolicy, Replica,
+    ReplicaSpec, ScalePolicy, make_router, parse_mix, run_fleet,
+)
+from repro.serving.metrics import (  # noqa: F401
+    RequestRecord, StreamMetrics, fleet_summarize, records_from_events,
+    summarize,
+)
+from repro.serving.sim import EventLoop  # noqa: F401
+from repro.serving.traces import TRACES, TraceSpec, generate_trace  # noqa: F401

@@ -38,7 +38,19 @@ periodic tick picks victims on KV-overloaded replicas via the shared
 ``PreemptionPolicy`` (core/preemption.py), charges the KV-transfer cost
 from perfmodel/costs.py, and re-enqueues them on the least-loaded
 compatible replica — the placement is *revoked*, which the PR-1 router
-never did.
+never did.  The tick is hysteretic (a replica must stay hot for
+``hot_ticks`` consecutive checks before losing live KV) and cost/benefit
+gated (a live-context move is skipped when the KV transfer plus the
+destination's queue beats nothing — i.e. when ``kv_migration_seconds``
+exceeds the projected queue relief).
+
+Serving API v2: the cluster is an event-stream node.  Every replica
+engine's typed stream (core/events.py) is forwarded into one fleet
+stream (``cluster.subscribe`` / ``cluster.events``), cluster-side
+admission rejections are emitted as ``RejectedEvent``s, and both the
+autoscaler's TTFT-attainment window and ``run_fleet``'s summary consume
+the stream (via ``serving.metrics.StreamMetrics``) instead of scraping
+records after the fact.
 """
 from __future__ import annotations
 
@@ -48,13 +60,14 @@ from typing import (TYPE_CHECKING, Callable, Dict, List, Optional,
                     Sequence, Union)
 
 from repro.config import ServeConfig
+from repro.core.events import EventStream, RejectedEvent
 from repro.core.request import Request, State
 from repro.perfmodel import costs as C
 from repro.perfmodel import interference as I
 from repro.perfmodel.hw import TPU_V5E, HardwareSpec
 from repro.serving.admission import AdmissionController, AdmissionPolicy
-from repro.serving.metrics import (RequestRecord, fleet_summarize,
-                                   ttft_ceiling)
+from repro.serving.metrics import (RequestRecord, StreamMetrics,
+                                   fleet_summarize, ttft_ceiling)
 from repro.serving.sim import EventLoop
 
 if TYPE_CHECKING:   # deferred to break the serving <-> core import cycle
@@ -302,13 +315,28 @@ class RebalancePolicy:
     move up to ``max_moves_per_tick`` victims per check.  Queued victims
     are re-routed for free; running victims are preempted via the shared
     ``PreemptionPolicy`` and charged the KV-transfer time of their live
-    context (perfmodel ``kv_migration_seconds``) before re-enqueueing."""
+    context (perfmodel ``kv_migration_seconds``) before re-enqueueing.
+
+    Two guards keep the tick from thrashing:
+
+    * **hysteresis** — a replica must report ``kv_utilization >=
+      kv_high`` for ``hot_ticks`` *consecutive* checks before any live
+      KV is evicted from it (queued victims, which hold no KV, may still
+      be re-routed on the first hot tick);
+    * **cost/benefit** — a live-context move is skipped when the KV
+      transfer time plus the destination's projected prefill backlog
+      exceeds the victim's projected wait on the source, i.e. when
+      ``kv_migration_seconds`` exceeds the projected queue relief.
+      ``cost_benefit=False`` restores the unguarded PR-2 behaviour.
+    """
     check_interval_s: float = 1.0
     kv_high: float = 0.85
     kv_low: float = 0.65
     max_moves_per_tick: int = 2
     max_migrations_per_request: int = 2
     link_gbps: Optional[float] = None   # None => serve.kv_transfer_gbps
+    hot_ticks: int = 2                  # consecutive hot checks required
+    cost_benefit: bool = True           # gate live-KV moves on net win
 
 
 class Cluster:
@@ -327,6 +355,11 @@ class Cluster:
         self.serve = serve
         self.hw = hw
         self.loop = loop if loop is not None else EventLoop()
+        # fleet event stream: replica streams forward here, plus cluster-
+        # side rejections; the autoscaler window and run_fleet consume it
+        self.stream = EventStream()
+        self.metrics = StreamMetrics()
+        self.stream.subscribe(self.metrics)
         self.replicas: List[Replica] = []
         for spec in modes:
             self._add_replica(spec)
@@ -343,6 +376,7 @@ class Cluster:
         self._migrations: List[tuple] = []     # (t, src, dst, rid, had_kv)
         self._migration_counts: Dict[int, int] = {}
         self._idle_checks = 0
+        self._hot_streak: Dict[int, int] = {}  # replica idx -> hot ticks
 
     # -- replica lifecycle ---------------------------------------------------
     def _add_replica(self, spec: Union[str, ReplicaSpec]) -> Replica:
@@ -360,8 +394,18 @@ class Cluster:
                       engine=make_engine(spec.mode, self.cfg, serve,
                                          self.hw, loop=self.loop),
                       serve=serve)
+        rep.engine.subscribe(self.stream.emit)   # forward into fleet stream
         self.replicas.append(rep)
         return rep
+
+    # -- streaming API -------------------------------------------------------
+    def subscribe(self, fn, rid: Optional[int] = None):
+        """Attach a consumer to the merged fleet event stream (all
+        replicas plus cluster-side rejections)."""
+        return self.stream.subscribe(fn, rid)
+
+    def events(self):
+        return self.stream.events()
 
     @property
     def routable(self) -> List[Replica]:
@@ -385,6 +429,9 @@ class Cluster:
             if verdict == "reject":
                 r.state = State.REJECTED
                 self.rejected.append(r)
+                self.stream.emit(RejectedEvent(
+                    r.rid, self.loop.now, r.arrival, r.prompt_len,
+                    "admission"))
                 return
             if verdict == "wait":
                 self.loop.after(self.admission.policy.retry_s,
@@ -427,15 +474,14 @@ class Cluster:
 
     # -- autoscaler ------------------------------------------------------------
     def _recent_attainment(self) -> Optional[float]:
-        now = self.loop.now
-        lo = now - self.scale.window_s
-        window = [r for rep in self.replicas for r in rep.assigned
-                  if r.t_finish is not None and r.t_finish >= lo
-                  and r.token_times]
+        # stream consumer: the window comes from FinishedEvents folded by
+        # StreamMetrics, not from walking every replica's request list
+        window = [rec for rec in self.metrics.finished_since(
+            self.loop.now - self.scale.window_s) if rec.ttft is not None]
         if not window:
             return None
-        ok = sum(1 for r in window
-                 if r.ttft <= ttft_ceiling(r.prompt_len, self.serve.slo))
+        ok = sum(1 for rec in window
+                 if rec.ttft <= ttft_ceiling(rec.prompt_len, self.serve.slo))
         return ok / len(window)
 
     def _scale_tick(self) -> None:
@@ -490,11 +536,45 @@ class Cluster:
         # destination, so bucket compatibility is against context_len
         return self.router.admits(victim.context_len, tgt, live)
 
+    def _prefill_seconds(self, rep: Replica, tokens: int) -> float:
+        """Projected time for ``rep`` to prefill ``tokens`` prompt tokens
+        (its queued backlog plus a migrated victim's re-prefill)."""
+        chips = getattr(rep.engine, "chips_p", rep.serve.chips)
+        if tokens <= 0:
+            return 0.0
+        cost = C.prefill_cost(self.cfg, [tokens], chips)
+        return I.phase_time(cost, self.hw, chips)
+
+    def _benefit_ok(self, victim: Request, src: Replica, tgt: Replica,
+                    snaps: Dict[int, "LoadSnapshot"]) -> bool:
+        """Cost/benefit gate for live-KV moves: migrate only when the KV
+        transfer plus the destination's projected queue beats waiting out
+        the source's backlog — i.e. the transfer time must not exceed the
+        projected queue relief."""
+        if not self.rebalance.cost_benefit:
+            return True
+        gbps = self.rebalance.link_gbps or self.serve.kv_transfer_gbps
+        xfer = C.kv_migration_seconds(self.cfg, victim.context_len, gbps)
+        src_wait = self._prefill_seconds(
+            src, snaps[src.idx].queued_prefill_tokens + victim.context_len)
+        dst_wait = xfer + self._prefill_seconds(
+            tgt, snaps[tgt.idx].queued_prefill_tokens + victim.context_len)
+        return dst_wait < src_wait
+
     def _rebalance_tick(self) -> None:
         pol = self.rebalance
         live = self.routable or self.replicas
+        # hysteresis bookkeeping for EVERY replica, every tick: a replica
+        # that cools down (or sits retired/solo) must lose its streak, or
+        # it would migrate live KV on its first hot tick after rejoining
+        snaps = {rep.idx: rep.snapshot() for rep in self.replicas}
+        for rep in self.replicas:
+            if snaps[rep.idx].kv_utilization >= pol.kv_high:
+                self._hot_streak[rep.idx] = \
+                    self._hot_streak.get(rep.idx, 0) + 1
+            else:
+                self._hot_streak[rep.idx] = 0
         if len(live) > 1:
-            snaps = {rep.idx: rep.snapshot() for rep in live}
             hot = sorted((rep for rep in live
                           if snaps[rep.idx].kv_utilization >= pol.kv_high),
                          key=lambda rep: -snaps[rep.idx].kv_utilization)
@@ -508,8 +588,17 @@ class Cluster:
                     if not targets or cand is None:
                         break
                     victim, has_kv = cand
+                    if has_kv and \
+                            self._hot_streak.get(src.idx, 0) < pol.hot_ticks:
+                        # queued victims are free to move on the first hot
+                        # tick; live KV waits out the hysteresis window
+                        break
                     targets = [rep for rep in targets
                                if self._migration_ok(victim, rep, live)]
+                    if has_kv:
+                        targets = [rep for rep in targets
+                                   if self._benefit_ok(victim, src, rep,
+                                                       snaps)]
                     if not targets:
                         break
                     tgt = min(targets, key=lambda rep: (
@@ -566,12 +655,11 @@ def run_fleet(cfg, serve: ServeConfig,
     cluster = Cluster(cfg, serve, modes, router=router, hw=hw, scale=scale,
                       admission=admission, rebalance=rebalance)
     _, span = cluster.run([copy.deepcopy(r) for r in requests])
+    # the fleet-wide summary is built from the cluster's event stream
+    # (StreamMetrics), which already carries cluster-side rejections
     summary = fleet_summarize(cluster.per_replica_records(), serve.slo,
-                              span)
+                              span, fleet_records=cluster.metrics.records)
     f = summary["fleet"]
-    # cluster-side rejections never reach a replica, so surface them here
-    f["rejected"] = f.get("rejected", 0) + len(cluster.rejected)
-    f["requests"] += len(cluster.rejected)
     f["migrations"] = len(cluster._migrations)
     if cluster.admission is not None:
         summary["admission"] = cluster.admission_stats

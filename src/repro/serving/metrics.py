@@ -7,15 +7,21 @@ SLO attainment (paper's definition):
 
 goodput        = SLO-satisfying requests completed per second (both SLOs)
 itl_goodput    = same with only the ITL constraint (paper Fig 10)
+
+Serving API v2: ``StreamMetrics`` assembles the same ``RequestRecord``s
+incrementally from the typed engine/cluster event stream
+(core/events.py) — the replacement for scraping ``records()`` after a
+blocking ``run()``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
 from repro.config import SLOConfig
+from repro.core.events import FinishedEvent, RejectedEvent, TokenEvent
 from repro.core.request import Request, State
 
 
@@ -40,6 +46,64 @@ class RequestRecord:
             itl_p95=float(np.percentile(itls, 95)) if itls else None,
             finish=r.t_finish, preemptions=r.preemptions,
             rejected=r.state is State.REJECTED)
+
+
+class StreamMetrics:
+    """Event-stream consumer that assembles ``RequestRecord``s live.
+
+    Subscribe one to an engine or cluster (``engine.subscribe(metrics)``)
+    and it folds ``TokenEvent``s into per-request timelines, sealing a
+    record at each ``FinishedEvent`` / ``RejectedEvent`` — no post-hoc
+    ``records()`` scraping.  ``records`` accumulates in terminal-event
+    order (chronological under the shared virtual clock);
+    ``finished_since(t)`` serves windowed consumers like the autoscaler.
+    """
+
+    def __init__(self):
+        self._token_times: Dict[int, List[float]] = {}
+        self.records: List[RequestRecord] = []
+        self.finished: List[RequestRecord] = []   # finish-ordered subset
+
+    def __call__(self, ev) -> None:
+        if isinstance(ev, TokenEvent):
+            self._token_times.setdefault(ev.rid, []).append(ev.t)
+        elif isinstance(ev, FinishedEvent):
+            ts = self._token_times.pop(ev.rid, [])
+            itls = [b - a for a, b in zip(ts, ts[1:])]
+            rec = RequestRecord(
+                rid=ev.rid, arrival=ev.arrival, prompt_len=ev.prompt_len,
+                output_len=ev.output_len,
+                ttft=ts[0] - ev.arrival if ts else None,
+                itl_p95=float(np.percentile(itls, 95)) if itls else None,
+                finish=ev.t, preemptions=ev.preemptions, rejected=False)
+            self.records.append(rec)
+            self.finished.append(rec)
+        elif isinstance(ev, RejectedEvent):
+            self._token_times.pop(ev.rid, None)
+            self.records.append(RequestRecord(
+                rid=ev.rid, arrival=ev.arrival, prompt_len=ev.prompt_len,
+                output_len=ev.output_len, ttft=None, itl_p95=None,
+                finish=None, preemptions=ev.preemptions, rejected=True))
+
+    def finished_since(self, t_lo: float) -> List[RequestRecord]:
+        """Records that finished at or after ``t_lo`` (windowed view)."""
+        out: List[RequestRecord] = []
+        for rec in reversed(self.finished):
+            if rec.finish < t_lo:
+                break
+            out.append(rec)
+        return out
+
+    def summarize(self, slo: SLOConfig, span_s: float) -> Dict[str, float]:
+        return summarize(self.records, slo, span_s)
+
+
+def records_from_events(events: Iterable) -> List[RequestRecord]:
+    """Replay a recorded event stream into ``RequestRecord``s."""
+    metrics = StreamMetrics()
+    for ev in events:
+        metrics(ev)
+    return metrics.records
 
 
 def ttft_ceiling(prompt_len: int, slo: SLOConfig) -> float:
@@ -92,13 +156,21 @@ def summarize(records: List[RequestRecord], slo: SLOConfig,
 
 
 def fleet_summarize(per_replica: Dict[str, List[RequestRecord]],
-                    slo: SLOConfig, span_s: float) -> Dict[str, object]:
+                    slo: SLOConfig, span_s: float,
+                    fleet_records: Optional[List[RequestRecord]] = None
+                    ) -> Dict[str, object]:
     """Cluster-level aggregation: one fleet-wide summary over the union of
     all replicas' records, plus the per-replica summaries (every replica
-    shares the cluster's virtual clock, so one span normalizes all)."""
+    shares the cluster's virtual clock, so one span normalizes all).
+
+    ``fleet_records`` overrides the fleet-wide record set — the stream-
+    consuming cluster passes its ``StreamMetrics.records``, which also
+    carry cluster-side admission rejections that never reached a
+    replica."""
     union: List[RequestRecord] = [r for recs in per_replica.values()
                                   for r in recs]
-    fleet = summarize(union, slo, span_s)
+    fleet = summarize(union if fleet_records is None else fleet_records,
+                      slo, span_s)
     fleet["replicas"] = len(per_replica)
     counts = {name: len(recs) for name, recs in per_replica.items()}
     fleet["min_replica_share"] = (min(counts.values()) / max(1, len(union))

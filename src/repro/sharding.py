@@ -15,7 +15,7 @@ Multi pod  : mesh ("pod", "data", "model") = (2, 16, 16); "pod" is the
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Union
+from typing import Optional, Union
 
 import jax
 import numpy as np

@@ -1,13 +1,13 @@
-from repro.training.optimizer import (  # noqa: F401
-    AdamWState, adamw_init, adamw_update, OptConfig, wsd_schedule,
-    clip_by_global_norm,
-)
-from repro.training.train_lib import (  # noqa: F401
-    make_train_step, TrainState, train_state_specs,
-)
 from repro.training.checkpoint import (  # noqa: F401
-    CheckpointManager, save_checkpoint, restore_checkpoint,
+    CheckpointManager, restore_checkpoint, save_checkpoint,
 )
 from repro.training.compression import (  # noqa: F401
     compress_gradients, decompress_gradients,
+)
+from repro.training.optimizer import (  # noqa: F401
+    AdamWState, OptConfig, adamw_init, adamw_update, clip_by_global_norm,
+    wsd_schedule,
+)
+from repro.training.train_lib import (  # noqa: F401
+    TrainState, make_train_step, train_state_specs,
 )

@@ -12,7 +12,7 @@ one non-llama training detail of the assigned pool.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ per-leaf scale) optionally wraps the cross-pod reduction.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Optional
 
 import jax

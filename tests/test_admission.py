@@ -10,7 +10,7 @@ from repro.config import SLOConfig, ServeConfig, get_config
 from repro.core import make_engine
 from repro.core.request import Request, State
 from repro.kvcache import KVCacheManager
-from repro.serving import (AdmissionPolicy, Cluster, TRACES,
+from repro.serving import (TRACES, AdmissionPolicy, Cluster,
                            fleet_summarize, generate_trace, summarize)
 
 ARCH = "llama3-70b"

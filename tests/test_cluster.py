@@ -9,7 +9,7 @@ from repro.config import SLOConfig, ServeConfig, get_config
 from repro.core import make_engine
 from repro.core.engines import LoadSnapshot
 from repro.core.request import Request
-from repro.serving import (Cluster, ScalePolicy, TRACES, fleet_summarize,
+from repro.serving import (TRACES, Cluster, ScalePolicy, fleet_summarize,
                            generate_trace)
 
 ARCH = "llama3-70b"

@@ -13,14 +13,11 @@ The invariants the RAPID protocol (paper Fig 4) must keep:
 """
 import copy
 
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.config import SLOConfig, ServeConfig, get_config
-from repro.core import (DisaggEngine, HybridEngine, RapidEngine,
-                        build_decode_profile, make_engine)
-from repro.core.request import Request
+from repro.core import RapidEngine, build_decode_profile, make_engine
 from repro.kvcache import BlockAllocator, KVCacheManager, OutOfBlocks
 from repro.perfmodel.hw import TPU_V5E
 from repro.serving import TRACES, generate_trace, summarize

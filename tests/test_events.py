@@ -1,0 +1,153 @@
+"""Event-stream properties (Serving API v2, core/events.py).
+
+For every engine mode on real traces:
+  * per-request token events are monotone in time;
+  * a finished request emits exactly ``max_new_tokens`` TokenEvents and
+    exactly one FinishedEvent; a rejected one ends with RejectedEvent;
+  * TTFT/ITL derived purely from the stream equal the ``RequestRecord``
+    values from the legacy scrape path;
+  * per-request ``subscribe(fn, rid=...)`` narrows correctly;
+  * the cluster forwards replica streams (plus its own admission
+    rejections) into one fleet stream.
+"""
+import copy
+
+import pytest
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core import make_engine
+from repro.core.events import (FinishedEvent, PhaseEvent, RejectedEvent,
+                               TokenEvent)
+from repro.kvcache import KVCacheManager
+from repro.serving import (TRACES, Cluster, StreamMetrics, generate_trace,
+                           records_from_events)
+
+CFG = get_config("llama3-70b")
+
+
+def _serve(mode):
+    return ServeConfig(mode=mode, chips=32, slo=SLOConfig(itl_ms=100.0),
+                       disagg_split=(16, 16), max_batch_slots=128)
+
+
+def _drained(mode, qps=5.0, duration=15.0, seed=2, tiny_pool=None):
+    reqs = generate_trace(TRACES["lmsys"], qps=qps, duration_s=duration,
+                          seed=seed)
+    eng = make_engine(mode, CFG, _serve(mode))
+    if tiny_pool is not None:
+        eng.kv = KVCacheManager(num_blocks=tiny_pool, page_size=16)
+    eng.enqueue([copy.deepcopy(r) for r in reqs])
+    eng.loop.run()
+    return eng, reqs
+
+
+@pytest.mark.parametrize("mode", ["rapid", "hybrid", "disagg"])
+def test_token_events_monotone_and_conserved(mode):
+    eng, reqs = _drained(mode)
+    by_rid = {}
+    for ev in eng.events():
+        if isinstance(ev, TokenEvent):
+            by_rid.setdefault(ev.rid, []).append(ev)
+    want = {r.rid: r.max_new_tokens for r in reqs}
+    assert set(by_rid) == set(want)
+    for rid, evs in by_rid.items():
+        ts = [ev.t for ev in evs]
+        assert all(b >= a for a, b in zip(ts, ts[1:])), "non-monotone"
+        assert [ev.index for ev in evs] == list(range(len(evs)))
+        assert len(evs) == want[rid]
+
+
+@pytest.mark.parametrize("mode", ["rapid", "hybrid", "disagg"])
+def test_exactly_one_terminal_event(mode):
+    eng, reqs = _drained(mode)
+    finals = {}
+    for ev in eng.events():
+        if isinstance(ev, (FinishedEvent, RejectedEvent)):
+            finals[ev.rid] = finals.get(ev.rid, 0) + 1
+    assert finals == {r.rid: 1 for r in reqs}
+
+
+def test_rejected_requests_end_with_rejected_event():
+    """Tiny pool: oversized prompts must terminate via RejectedEvent and
+    emit no FinishedEvent (and the stream count matches the engine's)."""
+    eng, reqs = _drained("rapid", tiny_pool=100)
+    rejected = [ev.rid for ev in eng.events()
+                if isinstance(ev, RejectedEvent)]
+    finished = {ev.rid for ev in eng.events()
+                if isinstance(ev, FinishedEvent)}
+    assert rejected, "trace never hit the rejection path"
+    assert len(rejected) == len(eng.rejected)
+    assert not set(rejected) & finished
+    # terminal means terminal: nothing after a request's RejectedEvent
+    last_seen = {}
+    for i, ev in enumerate(eng.events()):
+        last_seen[ev.rid] = (i, ev)
+    for rid in rejected:
+        assert isinstance(last_seen[rid][1], RejectedEvent)
+
+
+@pytest.mark.parametrize("mode", ["rapid", "hybrid", "disagg"])
+def test_stream_metrics_equal_request_records(mode):
+    """TTFT / p95 ITL / finish / output_len derived from the stream alone
+    must equal the legacy ``records()`` scrape exactly."""
+    eng, _ = _drained(mode)
+    stream_recs = {r.rid: r for r in records_from_events(eng.events())}
+    legacy = {r.rid: r for r in eng.records()}
+    assert set(stream_recs) == set(legacy)
+    for rid, rec in legacy.items():
+        assert stream_recs[rid] == rec
+
+
+def test_per_request_subscription():
+    reqs = generate_trace(TRACES["lmsys"], qps=4.0, duration_s=10, seed=5)
+    eng = make_engine("rapid", CFG, _serve("rapid"))
+    target = reqs[3].rid
+    only_mine, everything = [], []
+    eng.subscribe(only_mine.append, rid=target)
+    eng.subscribe(everything.append)
+    eng.enqueue([copy.deepcopy(r) for r in reqs])
+    eng.loop.run()
+    assert only_mine and all(ev.rid == target for ev in only_mine)
+    assert [ev for ev in everything if ev.rid == target] == only_mine
+    assert any(isinstance(ev, FinishedEvent) for ev in only_mine)
+
+
+def test_live_subscription_sees_events_at_emission_time():
+    """Streaming, not post-hoc: a subscriber observes each token at the
+    virtual-clock instant it is produced."""
+    eng = make_engine("rapid", CFG, _serve("rapid"))
+    seen = []
+    eng.subscribe(lambda ev, eng=eng: seen.append((eng.loop.now, ev)))
+    reqs = generate_trace(TRACES["lmsys"], qps=3.0, duration_s=5, seed=1)
+    eng.enqueue([copy.deepcopy(r) for r in reqs])
+    eng.loop.run()
+    assert seen
+    for now, ev in seen:
+        assert now == ev.t
+
+
+def test_phase_events_cover_lifecycle():
+    eng, reqs = _drained("rapid")
+    phases = {}
+    for ev in eng.events():
+        if isinstance(ev, PhaseEvent):
+            phases.setdefault(ev.rid, []).append(ev.phase)
+    for r in reqs:
+        assert phases[r.rid][0] == "queued"
+        assert "kv_allocated" in phases[r.rid]     # Fig 4 decode-side alloc
+        assert "prefill" in phases[r.rid]
+
+
+def test_cluster_fleet_stream_merges_replicas():
+    reqs = generate_trace(TRACES["lmsys"], qps=8.0, duration_s=10, seed=4)
+    cluster = Cluster(CFG, _serve("rapid"), ["rapid"] * 2,
+                      router="least_loaded")
+    fleet = StreamMetrics()
+    cluster.subscribe(fleet)
+    recs, _ = cluster.run([copy.deepcopy(r) for r in reqs])
+    assert {r.rid for r in fleet.records} == {r.rid for r in reqs}
+    legacy = {r.rid: r for r in recs}
+    for rec in fleet.records:
+        assert rec == legacy[rec.rid]
+    # the cluster's own collector saw the same thing
+    assert cluster.metrics.records == fleet.records

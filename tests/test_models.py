@@ -1,7 +1,6 @@
 """Per-arch smoke tests (reduced configs) + decode/forward consistency."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.config import get_reduced_config, list_archs

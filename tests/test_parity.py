@@ -1,0 +1,88 @@
+"""Golden parity: the scheduler/executor engines (Serving API v2) must
+reproduce the pre-split monolithic engines' per-request metrics EXACTLY.
+
+tests/golden/engine_parity.json was recorded from the PR-2 engines
+(commit bf5b531) on fixed traces: per-request ttft / itl_p95 / finish /
+output_len / preemptions / rejected plus the total span, for all three
+modes, including preemption-heavy and admission-rejection regimes.
+JSON round-trips Python floats exactly (repr), so comparison is ``==``,
+not approx."""
+import copy
+import json
+import pathlib
+
+import pytest
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core import make_engine
+from repro.kvcache import KVCacheManager
+from repro.serving import TRACES, generate_trace
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" /
+     "engine_parity.json").read_text())
+CFG = get_config("llama3-70b")
+
+STANDARD_POINTS = [(trace, qps, dur, seed)
+                   for trace, qps, dur, seed in
+                   [("lmsys", 6.0, 20.0, 3), ("arxiv", 4.0, 15.0, 11)]]
+
+
+def _standard_serve(mode):
+    return ServeConfig(mode=mode, chips=32, slo=SLOConfig(itl_ms=100.0),
+                       disagg_split=(16, 16), max_batch_slots=128)
+
+
+def _assert_parity(key, eng, reqs):
+    with pytest.deprecated_call():     # run() is the deprecation shim
+        recs, span = eng.run([copy.deepcopy(r) for r in reqs])
+    golden = GOLDEN[key]
+    assert span == golden["span"], f"{key}: span diverged"
+    assert len(recs) == len(golden["records"])
+    for rec, want in zip(recs, golden["records"]):
+        got = dict(rid=rec.rid, ttft=rec.ttft, itl_p95=rec.itl_p95,
+                   finish=rec.finish, output_len=rec.output_len,
+                   preemptions=rec.preemptions, rejected=rec.rejected)
+        assert got == want, f"{key}: rid {rec.rid} diverged"
+
+
+@pytest.mark.parametrize("mode", ["rapid", "hybrid", "disagg"])
+@pytest.mark.parametrize("point", STANDARD_POINTS,
+                         ids=[f"{t}-qps{q}" for t, q, _, _ in
+                              STANDARD_POINTS])
+def test_standard_trace_parity(mode, point):
+    trace, qps, dur, seed = point
+    reqs = generate_trace(TRACES[trace], qps=qps, duration_s=dur,
+                          seed=seed)
+    eng = make_engine(mode, CFG, _standard_serve(mode))
+    _assert_parity(f"{mode}/{trace}@{qps}s{seed}", eng, reqs)
+
+
+def test_rapid_preemption_parity():
+    """Tiny pool => preemption + rejection paths must also be bit-equal."""
+    serve = ServeConfig(mode="rapid", chips=32, slo=SLOConfig(itl_ms=100.0),
+                        max_batch_slots=8, max_seq_len=32768)
+    reqs = generate_trace(TRACES["loogle"], qps=3.0, duration_s=15, seed=7)
+    eng = make_engine("rapid", CFG, serve)
+    eng.kv = KVCacheManager(num_blocks=1500, page_size=16)
+    _assert_parity("rapid/loogle-tinypool", eng, reqs)
+
+
+def test_hybrid_preemption_parity():
+    serve = ServeConfig(mode="hybrid", chips=32,
+                        slo=SLOConfig(itl_ms=100.0), max_batch_slots=32)
+    reqs = generate_trace(TRACES["loogle"], qps=3.0, duration_s=15, seed=7)
+    eng = make_engine("hybrid", CFG, serve)
+    eng.kv = KVCacheManager(num_blocks=1500, page_size=16)
+    _assert_parity("hybrid/loogle-tinypool", eng, reqs)
+
+
+def test_disagg_backpressure_parity():
+    """Shrunken decode pool => admission retries + rejections bit-equal."""
+    serve = ServeConfig(mode="disagg", chips=32,
+                        slo=SLOConfig(itl_ms=100.0), disagg_split=(16, 16),
+                        max_batch_slots=128)
+    reqs = generate_trace(TRACES["loogle"], qps=3.0, duration_s=15, seed=9)
+    eng = make_engine("disagg", CFG, serve)
+    eng.kv = KVCacheManager(num_blocks=1500, page_size=16)
+    _assert_parity("disagg/loogle-tinypool", eng, reqs)

@@ -2,7 +2,6 @@
 model shape (paper §3.1/§3.2/§3.4/Fig 7 calibration points)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.config import get_config, get_reduced_config

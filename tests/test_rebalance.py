@@ -110,8 +110,11 @@ def _hot_cold_cluster(policy):
 
 
 def test_rebalance_migrates_from_hot_to_cold_replica():
+    # hot_ticks=1 / cost_benefit=False exercises the raw (ungated)
+    # migration machinery; the guards get their own tests below
     policy = RebalancePolicy(check_interval_s=0.5, kv_high=0.5,
-                             kv_low=0.4, max_moves_per_tick=4)
+                             kv_low=0.4, max_moves_per_tick=4,
+                             hot_ticks=1, cost_benefit=False)
     cluster, reqs = _hot_cold_cluster(policy)
     recs, _ = cluster.run(copy.deepcopy(reqs))
     assert cluster._migrations, "no migrations under clear hot/cold skew"
@@ -127,7 +130,8 @@ def test_rebalance_migrates_from_hot_to_cold_replica():
 def test_rebalance_respects_migration_cap():
     policy = RebalancePolicy(check_interval_s=0.5, kv_high=0.5,
                              kv_low=0.4, max_moves_per_tick=4,
-                             max_migrations_per_request=1)
+                             max_migrations_per_request=1,
+                             hot_ticks=1, cost_benefit=False)
     cluster, reqs = _hot_cold_cluster(policy)
     cluster.run(copy.deepcopy(reqs))
     per_rid = {}
@@ -149,6 +153,65 @@ def test_migration_charges_kv_transfer_cost():
         __import__("pytest").approx(xfer / 2)
 
 
+def test_hysteresis_blocks_live_kv_until_k_hot_ticks():
+    """With ``hot_ticks=K`` a replica must stay KV-hot for K consecutive
+    checks before any *live-context* victim is evicted; queued victims
+    (no KV) may still be re-routed on the first hot tick."""
+    for k in (1, 3):
+        policy = RebalancePolicy(check_interval_s=0.5, kv_high=0.5,
+                                 kv_low=0.4, max_moves_per_tick=4,
+                                 hot_ticks=k, cost_benefit=False)
+        # sustained pressure: long outputs keep replica 0 hot for seconds
+        # (final context 1700 tokens = 107 pages still fits one pool)
+        cfg = get_config(ARCH)
+        cluster = Cluster(cfg, _serve(), ["rapid"] * 2,
+                          router="least_loaded", rebalance=policy)
+        for rep in cluster.replicas:
+            rep.engine.kv = KVCacheManager(150, 16)
+        cluster.replicas[1].routable = False
+        cluster.loop.at(0.6, lambda c=cluster: setattr(c.replicas[1],
+                                                       "routable", True))
+        reqs = [_req(i, arrival=0.05 * i, prompt=500, out=1200)
+                for i in range(8)]
+        cluster.run(copy.deepcopy(reqs))
+        live_moves = [(t, rid) for t, _, _, rid, had_kv
+                      in cluster._migrations if had_kv]
+        assert live_moves, f"hot_ticks={k}: no live-KV moves at all"
+        first_t = min(t for t, _ in live_moves)
+        # streaks accumulate from the first tick (0.5s) even while the
+        # cold replica is still unroutable, so the K-th consecutive hot
+        # observation lands at K * interval; migration additionally needs
+        # a second live replica, which joins at 0.6 (first joint tick at
+        # 1.0)
+        floor = max(1.0, k * policy.check_interval_s)
+        assert first_t >= floor - 1e-9, \
+            f"hot_ticks={k}: live KV moved at t={first_t} < {floor}"
+
+
+def test_cost_benefit_gate_skips_unprofitable_transfers():
+    """A crawling migration link makes every live-context move cost more
+    than the projected queue relief — the gate must suppress them while
+    still allowing free queued re-routes."""
+    cfg = get_config(ARCH)
+    gated = RebalancePolicy(check_interval_s=0.5, kv_high=0.5, kv_low=0.4,
+                            max_moves_per_tick=4, hot_ticks=1,
+                            cost_benefit=True, link_gbps=0.001)
+    cluster = Cluster(cfg, _serve(), ["rapid"] * 2, router="least_loaded",
+                      rebalance=gated)
+    for rep in cluster.replicas:
+        rep.engine.kv = KVCacheManager(150, 16)
+    cluster.replicas[1].routable = False
+    cluster.loop.at(0.6, lambda: setattr(cluster.replicas[1],
+                                         "routable", True))
+    reqs = [_req(i, arrival=0.05 * i, prompt=500, out=1200)
+            for i in range(8)]
+    recs, _ = cluster.run(copy.deepcopy(reqs))
+    assert not any(had_kv for *_, had_kv in cluster._migrations), \
+        "live KV moved over a 1 MB/s link (transfer >> relief)"
+    # the trace still completes: the gate degrades to local service
+    assert all(r.finish is not None for r in recs)
+
+
 def test_disagg_replica_can_receive_migrations():
     """Migration target compatibility is engine-agnostic: a victim evicted
     from a rapid replica finishes on a disagg one."""
@@ -157,7 +220,9 @@ def test_disagg_replica_can_receive_migrations():
                       router="least_loaded",
                       rebalance=RebalancePolicy(check_interval_s=0.5,
                                                 kv_high=0.5, kv_low=0.4,
-                                                max_moves_per_tick=4))
+                                                max_moves_per_tick=4,
+                                                hot_ticks=1,
+                                                cost_benefit=False))
     cluster.replicas[0].engine.kv = KVCacheManager(150, 16)
     cluster.replicas[1].routable = False
     cluster.loop.at(0.6, lambda: setattr(cluster.replicas[1],

@@ -4,8 +4,9 @@ solo -> overalloc -> distinct mode transitions in decode_bs."""
 import pytest
 
 from repro.config import get_reduced_config
-from repro.core.resource_manager import (AdaptiveResourceManager,
-                                         BS_BUCKETS, DecodeProfile,
+from repro.core.resource_manager import (BS_BUCKETS,
+                                         AdaptiveResourceManager,
+                                         DecodeProfile,
                                          build_decode_profile)
 from repro.perfmodel.hw import TPU_V5E
 

@@ -1,9 +1,8 @@
 """Sharding translation + small-mesh integration (runs on 1 CPU device)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.config import get_reduced_config
 from repro.sharding import (ShardingRules, make_constrain, param_sharding,

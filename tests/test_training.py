@@ -16,8 +16,7 @@ from repro.training.checkpoint import (CheckpointManager, restore_checkpoint,
                                        save_checkpoint)
 from repro.training.compression import (compress_gradients,
                                         decompress_gradients)
-from repro.training.optimizer import OptConfig, adamw_init, adamw_update, \
-    wsd_schedule
+from repro.training.optimizer import OptConfig, wsd_schedule
 from repro.training.resilience import (FailureEvent, HeartbeatMonitor,
                                        StragglerDetector, TrainingSupervisor)
 from repro.training.train_lib import init_train_state, make_train_step
