@@ -4,7 +4,7 @@
 #   make test       tier-1 suite (what the driver runs) + junit report
 #   make smoke      tier-1 + quick benchmark smokes (single-engine
 #                   fig8/9/10/11, cluster fig12, admission/preemption
-#                   fig13)
+#                   fig13, projection-driven scaling fig14)
 #   make ci         dev-deps + smoke  (the one command CI runs)
 #   make lint       ruff style gate (blocking CI job)
 
@@ -27,6 +27,7 @@ smoke: test
 	$(PY) -m benchmarks.fig11_tail_latency --smoke
 	$(PY) -m benchmarks.fig12_cluster_goodput --smoke
 	$(PY) -m benchmarks.fig13_admission_preemption --smoke
+	$(PY) -m benchmarks.fig14_projection_scaling --smoke
 
 ci: dev-deps smoke
 

@@ -2,17 +2,20 @@
 
 Serves one LMSYS-like trace against a 4-replica fleet three times — one
 per router — and prints the fleet summary plus the per-replica load
-split, then shows SLO-driven autoscaling absorbing a burst.  The fleet
-summary comes from the cluster's merged event stream
-(``cluster.metrics``), the Serving API v2 path.
+split, then shows SLO-driven autoscaling absorbing a burst: first the
+reactive TTFT-attainment window, then the projection-driven policy
+(perfmodel forecasts; for disagg replicas it also grows the prefill and
+decode chip pools independently).  The fleet summary comes from the
+cluster's merged event stream (``cluster.metrics``), the Serving API v2
+path.
 
     PYTHONPATH=src python examples/cluster_serving.py
 """
 import copy
 
 from repro.config import SLOConfig, ServeConfig, get_config
-from repro.serving import (TRACES, Cluster, ScalePolicy, fleet_summarize,
-                           generate_trace)
+from repro.serving import (TRACES, Cluster, ProjectionPolicy, ScalePolicy,
+                           fleet_summarize, generate_trace)
 
 ARCH = "llama3-70b"
 QPS, DURATION = 20.0, 30.0
@@ -43,21 +46,36 @@ def main():
               f"ttft_p99={f['ttft_p99_s']:6.2f}s  "
               f"slo_ok={f['slo_attainment'] * 100:5.1f}%   [{split}]")
 
-    # SLO-driven scaling: start with 1 replica, let the controller grow
-    # the fleet while the TTFT-attainment window is red
-    policy = ScalePolicy(min_replicas=1, max_replicas=4,
-                         check_interval_s=2.0, window_s=5.0)
-    cluster = Cluster(cfg, serve, ["rapid"], router="least_loaded",
-                      scale=policy)
-    _, span = cluster.run([copy.deepcopy(r) for r in reqs])
-    res = fleet_summarize(cluster.per_replica_records(), serve.slo, span,
-                          fleet_records=cluster.metrics.records)
-    f = res["fleet"]
-    print(f"\nautoscaled   goodput={f['goodput_req_s']:6.2f} req/s  "
-          f"ttft_p99={f['ttft_p99_s']:6.2f}s  "
-          f"replicas={cluster.num_replicas}")
-    for t, action, n in cluster._scale_events:
-        print(f"  t={t:6.1f}s scale_{action} -> {n} routable")
+    # SLO-driven scaling: start with 1 replica under a genuinely hot
+    # burst (~2x one replica's prefill rate), let the controller grow
+    # the fleet — reactive attainment window vs perfmodel projections
+    hot = generate_trace(TRACES["lmsys"], qps=2.4 * QPS,
+                         duration_s=DURATION / 2, seed=0)
+    for label, policy, modes, serve_i in (
+            ("reactive", ScalePolicy(min_replicas=1, max_replicas=4,
+                                     check_interval_s=2.0, window_s=5.0),
+             ["rapid"], serve),
+            ("projection", ProjectionPolicy(min_replicas=1, max_replicas=4,
+                                            check_interval_s=2.0),
+             ["rapid"], serve),
+            ("projection (disagg per-pool)",
+             ProjectionPolicy(min_replicas=1, max_replicas=2,
+                              check_interval_s=2.0, pool_chip_step=4,
+                              max_pool_chips=32),
+             ["disagg"], build("disagg"))):
+        cluster = Cluster(cfg, serve_i, modes, router="least_loaded",
+                          scale=policy)
+        _, span = cluster.run([copy.deepcopy(r) for r in hot])
+        res = fleet_summarize(cluster.per_replica_records(), serve_i.slo,
+                              span, fleet_records=cluster.metrics.records)
+        f = res["fleet"]
+        print(f"\nautoscaled [{label}]  "
+              f"goodput={f['goodput_req_s']:6.2f} req/s  "
+              f"ttft_p99={f['ttft_p99_s']:6.2f}s  "
+              f"replicas={cluster.num_replicas}")
+        for t, action, n in cluster._scale_events:
+            unit = "chips" if action.startswith("pool_") else "routable"
+            print(f"  t={t:6.1f}s {action} -> {n} {unit}")
 
 
 if __name__ == "__main__":

@@ -71,6 +71,14 @@ class LoadSnapshot:
     unallocated requests will claim when admitted — together they let the
     cluster admission controller project whether a new request fits
     without the engine ever hitting ``OutOfBlocks`` mid-flight.
+
+    Split-pool (disagg) engines additionally expose the transient
+    *prefill-side* pool (``prefill_kv_free_blocks`` /
+    ``prefill_kv_total_blocks``, with ``queued_prefill_kv_pages`` the
+    claims of queued-but-unstarted prompts against it) and their per-pool
+    chip counts — the signals projection-driven admission and the
+    per-pool autoscaler consume.  Colocated engines report zero pool
+    fields and ``chips_prefill == chips_decode == serve.chips``.
     """
     queued_requests: int
     queued_prefill_tokens: int
@@ -82,6 +90,19 @@ class LoadSnapshot:
     kv_free_blocks: int = 0
     kv_total_blocks: int = 0
     queued_kv_pages: int = 0
+    # split-pool (disagg) per-pool occupancy; zeros on colocated engines
+    prefill_kv_free_blocks: int = 0
+    prefill_kv_total_blocks: int = 0
+    queued_prefill_kv_pages: int = 0
+    chips_prefill: int = 0
+    chips_decode: int = 0
+
+    @property
+    def prefill_kv_utilization(self) -> float:
+        if self.prefill_kv_total_blocks <= 0:
+            return 0.0
+        return 1.0 - self.prefill_kv_free_blocks / \
+            self.prefill_kv_total_blocks
 
 
 class Engine:
@@ -113,7 +134,6 @@ class Engine:
         self.executor = executor if executor is not None else \
             PerfModelExecutor(cfg, hw, colocated=sched.colocated,
                               lane_chips=lane_chips)
-        self.tp = serve.chips
         self.arm = getattr(sched, "arm", None)     # rapid compat
         # queues: named deques, also exposed as attributes for direct
         # inspection (waiting_kv / waiting_prefill / pending_join / ...)
@@ -455,6 +475,38 @@ class Engine:
         victim.state = State.ARRIVED
         return victim, True
 
+    # -- runtime pool scaling (cluster autoscaler) ---------------------------
+    def resize_lane(self, lane: str, chips: int) -> None:
+        """Grow one lane's chip group in place (split-pool engines only):
+        the matching KV pool gains the extra chips' HBM worth of pages,
+        the executor prices that lane on the new chip count, and the
+        OTHER pool — including every live KV page in it — is untouched.
+        Chip groups only grow; shrinking would strand live KV."""
+        sched = self.scheduler
+        old = sched.lane_chips(self.serve).get(lane)
+        if old is None:
+            raise KeyError(f"engine has no lane {lane!r}")
+        if chips < old:
+            raise ValueError(
+                f"lane {lane!r} only grows ({old} -> {chips} shrinks)")
+        if chips == old:
+            return
+        pools = sched.resize_lane(lane, chips, self.cfg, self.serve,
+                                  self.hw)
+        for pool, mgr in (("decode", self.kv), ("prefill", self.kv_p)):
+            if mgr is not None and pools.get(pool, 0) > \
+                    mgr.allocator.num_blocks:
+                mgr.grow(pools[pool] - mgr.allocator.num_blocks)
+        self.chips_p = sched.chips_p
+        self.chips_d = sched.chips_d
+        if hasattr(self.executor, "lane_chips"):
+            self.executor.lane_chips[lane] = chips
+        # total chips / split recorded on the config so routers and
+        # admission (which read serve.chips) see the new capacity
+        self.serve = dataclasses.replace(
+            self.serve, chips=self.chips_p + self.chips_d,
+            disagg_split=(self.chips_p, self.chips_d))
+
     # -- load view ------------------------------------------------------------
     def load_snapshot(self) -> LoadSnapshot:
         sched = self.scheduler
@@ -468,6 +520,13 @@ class Engine:
         tokens += self.inflight_prefill_tokens
         pages = sum(kv_pages_for(r.prompt_len, ps)
                     for q in sched.unalloc_queues for r in self.queues[q])
+        # split-pool engines: the same queued prompts also claim transient
+        # prefill-side pages before they ever reach the decode pool
+        prefill_free = prefill_total = prefill_pages = 0
+        if self.kv_p is not None:
+            prefill_free = self.kv_p.allocator.free_count
+            prefill_total = self.kv_p.allocator.num_blocks
+            prefill_pages = pages
         running = len(self.running)
         ctx = sum(r.context_len for r in self.running)
         if sched.prefill_route == "transfer":
@@ -488,7 +547,12 @@ class Engine:
             decode_busy=self.decode_busy,
             kv_free_blocks=self.kv.allocator.free_count,
             kv_total_blocks=self.kv.allocator.num_blocks,
-            queued_kv_pages=pages)
+            queued_kv_pages=pages,
+            prefill_kv_free_blocks=prefill_free,
+            prefill_kv_total_blocks=prefill_total,
+            queued_prefill_kv_pages=prefill_pages,
+            chips_prefill=getattr(self, "chips_p", self.serve.chips),
+            chips_decode=getattr(self, "chips_d", self.serve.chips))
 
 
 # legacy name: PR-1/PR-2 callers subclassed/annotated against BaseEngine

@@ -32,8 +32,13 @@ BS_BUCKETS = [1, 2, 4, 8, 16, 32, 48, 64, 96, 128, 192, 256]
 
 @dataclasses.dataclass(frozen=True)
 class DecodeProfile:
-    """bs bucket -> min f_d meeting the SLO; and the largest bs for which
-    overallocation still meets the SLO (the Fig 7 crossover)."""
+    """bs bucket -> min f_d meeting the SLO; plus the Fig 7 crossover:
+    ``overalloc_bs_limit`` is the largest profiled bs *below the first
+    SLO miss* for which overallocation meets the SLO.  The scan stops
+    raising the limit at the first miss — a non-monotone interference
+    curve (a mid bs failing while a larger bs passes) must not re-open
+    the overallocation regime above the crossover, or the runtime would
+    overallocate at batch sizes bracketed by known SLO violations."""
     buckets: List[int]
     min_f: Dict[int, float]
     overalloc_bs_limit: int
@@ -47,14 +52,19 @@ def build_decode_profile(cfg, hw: HardwareSpec, chips: int,
     tp = tp or chips
     min_f: Dict[int, float] = {}
     overalloc_limit = 0
+    crossover_hit = False
     # a representative co-resident prefill (saturating, compute-bound)
     p_cost = C.prefill_cost(cfg, [4096], tp)
     for bs in BS_BUCKETS:
         d_cost = C.decode_cost(cfg, bs, float(bs * avg_ctx), tp)
-        # overallocation check (P100-D100 of Fig 7)
+        # overallocation check (P100-D100 of Fig 7): the crossover is the
+        # FIRST SLO miss — later passes on a non-monotone curve must not
+        # raise the limit past a known-violating batch size
         r = I.overlapped_times(p_cost, d_cost, hw, chips)
-        if r.t_decode <= slo_itl_s:
+        if r.t_decode <= slo_itl_s and not crossover_hit:
             overalloc_limit = bs
+        elif r.t_decode > slo_itl_s:
+            crossover_hit = True
         # distinct-allocation frontier
         for f in F_GRID:
             t_d = I.phase_time(d_cost, hw, chips, f=f,
@@ -70,7 +80,7 @@ def build_decode_profile(cfg, hw: HardwareSpec, chips: int,
 @dataclasses.dataclass
 class Allocation:
     f_decode: Optional[float]   # None => overallocation
-    mode: str
+    mode: str                   # solo | overalloc | distinct | distinct_clamped
 
     @property
     def f_prefill(self) -> float:
@@ -78,21 +88,48 @@ class Allocation:
 
 
 class AdaptiveResourceManager:
-    """Runtime allocation policy driven by the offline profile."""
+    """Runtime allocation policy driven by the offline profile.
+
+    Regime selection is explicit in ``allocate`` (the branches are
+    pinned by tests, not by evaluation order):
+
+      * ``decode_bs <= 0``      -> ``solo``: no decode work exists, so
+        prefill (or an idle engine) owns the chips regardless of
+        ``prefill_active``;
+      * ``not prefill_active``  -> ``solo``: decode runs alone at f=1;
+      * ``bs <= crossover``     -> ``overalloc`` (both phases at 100%);
+      * within profiled buckets -> ``distinct`` at the bucket's min f_d
+        (between-bucket sizes round UP to the next bucket);
+      * above the largest bucket -> ``distinct_clamped``: the profile
+        has no data, so decode gets the conservative ``F_GRID[-1]``
+        rather than silently reusing the last bucket's (smaller) f_d —
+        the clamp is visible in ``Allocation.mode`` / ``history``.
+    """
 
     def __init__(self, profile: DecodeProfile):
         self.profile = profile
         self.history: List[Allocation] = []
 
     def allocate(self, decode_bs: int, prefill_active: bool) -> Allocation:
-        if decode_bs == 0 or not prefill_active:
+        if decode_bs <= 0:
+            # no decode work: prefill-only (or idle) — solo even when a
+            # prefill is active, and regardless of the crossover value
+            a = Allocation(None, "solo")
+        elif not prefill_active:
+            # decode alone owns the chips: no split needed
             a = Allocation(None, "solo")
         elif decode_bs <= self.profile.overalloc_bs_limit:
             a = Allocation(None, "overalloc")
         else:
             i = bisect.bisect_left(self.profile.buckets, decode_bs)
-            i = min(i, len(self.profile.buckets) - 1)
-            a = Allocation(self.profile.min_f[self.profile.buckets[i]],
-                           "distinct")
+            if i >= len(self.profile.buckets):
+                # beyond the profiled range: conservative extrapolation —
+                # the largest profiled f_d would under-provision a bigger
+                # batch, so give decode the top of the capacity grid and
+                # record the clamp where history consumers can see it
+                a = Allocation(F_GRID[-1], "distinct_clamped")
+            else:
+                a = Allocation(self.profile.min_f[self.profile.buckets[i]],
+                               "distinct")
         self.history.append(a)
         return a

@@ -217,6 +217,17 @@ class Scheduler:
     def lane_chips(self, serve) -> Dict[str, int]:
         return {lane: serve.chips for lane in self.lanes}
 
+    def resize_lane(self, lane: str, chips: int, cfg, serve,
+                    hw: HardwareSpec) -> Dict[str, int]:
+        """Grow one lane's chip group at runtime (cluster autoscaler
+        adding chips to one pool of a split-pool replica).  Returns the
+        new ``pool_blocks`` mapping.  Colocated topologies share every
+        chip between both phases, so per-lane resizing is undefined —
+        the cluster scales those replicas whole."""
+        raise NotImplementedError(
+            f"{type(self).__name__} is colocated: per-pool scaling only "
+            "applies to split-pool (disagg) topologies")
+
     # -- shared helpers ------------------------------------------------------
     @staticmethod
     def _fits_pool(prompt_len: int, kv: KVCacheManager,
@@ -412,6 +423,18 @@ class DisaggScheduler(Scheduler):
 
     def lane_chips(self, serve) -> Dict[str, int]:
         return {"prefill": self.chips_p, "decode": self.chips_d}
+
+    def resize_lane(self, lane: str, chips: int, cfg, serve,
+                    hw: HardwareSpec) -> Dict[str, int]:
+        """Independent P/D pool scaling: grow ONE pool's chip group
+        (the other pool — and its KV — is untouched)."""
+        if lane not in ("prefill", "decode"):
+            raise KeyError(f"disagg has no lane {lane!r}")
+        if lane == "prefill":
+            self.chips_p = chips
+        else:
+            self.chips_d = chips
+        return self.pool_blocks(cfg, serve, hw)
 
     def schedule(self, view: SchedView) -> StepPlan:
         plan = StepPlan()

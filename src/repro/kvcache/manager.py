@@ -61,6 +61,18 @@ class BlockAllocator:
         self._free.extend(reversed(blocks))
         assert len(self._free) <= self.num_blocks
 
+    def grow(self, extra_blocks: int) -> None:
+        """Append ``extra_blocks`` fresh pages to the pool (runtime pool
+        scaling — e.g. the cluster autoscaler adding chips to a disagg
+        prefill pool).  Pools only grow: shrinking would require evicting
+        live KV out from under running requests."""
+        if extra_blocks < 0:
+            raise ValueError("block pools only grow; cannot shrink by "
+                             f"{-extra_blocks} blocks")
+        start = self.num_blocks
+        self.num_blocks += extra_blocks
+        self._free.extend(range(self.num_blocks - 1, start - 1, -1))
+
 
 @dataclasses.dataclass
 class _SeqAlloc:
@@ -118,6 +130,10 @@ class KVCacheManager:
         tokens = seq.num_tokens
         self.free(rid)
         return tokens
+
+    def grow(self, extra_blocks: int) -> None:
+        """Runtime pool expansion (see ``BlockAllocator.grow``)."""
+        self.allocator.grow(extra_blocks)
 
     # -- accounting ---------------------------------------------------------
     def blocks_of(self, rid: int) -> List[int]:

@@ -18,8 +18,19 @@ explicit per-replica engine list; heterogeneous fleets use
         --admission --rebalance
 
 ``--admission`` enables KV-aware admission control (queue/redirect/
-reject arrivals that would overflow a replica's block pool);
+reject arrivals that would overflow a replica's block pool — for disagg
+replicas the transient prefill pool is projected too);
 ``--rebalance`` enables the cross-replica preemption/migration tick.
+
+``--scale-policy`` turns on SLO-driven autoscaling: ``reactive`` is the
+trailing TTFT-attainment window, ``projection`` forecasts TTFT/ITL from
+each replica's live load via the perfmodel and scales before violations
+happen — including growing a disagg replica's prefill and decode chip
+pools independently.  Per-pool fleet shapes use ``mode:COUNTxP+D``:
+
+    python -m repro.launch.serve --arch llama3-70b --trace lmsys \
+        --qps 16 --mix disagg:2x12+20 --scale-policy projection \
+        --max-replicas 4
 
 Engine logic is real; step durations come from the calibrated TPU-v5e
 perfmodel (this container has no accelerator — DESIGN.md §6).  Use
@@ -35,8 +46,9 @@ import json
 from repro.config import SLOConfig, ServeConfig, get_config, list_archs
 from repro.core import make_engine
 from repro.serving import (ROUTERS, TRACES, AdmissionPolicy,
-                           RebalancePolicy, StreamMetrics, generate_trace,
-                           parse_mix, run_fleet)
+                           ProjectionPolicy, RebalancePolicy, ScalePolicy,
+                           StreamMetrics, generate_trace, parse_mix,
+                           run_fleet)
 
 
 def _serve_config(mode: str, chips: int, slo: SLOConfig, chunk: int,
@@ -69,7 +81,7 @@ def run_cluster(arch: str, modes, router: str, trace: str, qps: float,
                 duration: float, chips: int, slo_itl_ms: float,
                 chunk: int = 512, seed: int = 0, max_slots: int = 128,
                 admission: AdmissionPolicy = None,
-                rebalance: RebalancePolicy = None):
+                rebalance: RebalancePolicy = None, scale=None):
     """Run a trace against an N-replica cluster; returns the fleet/per-
     replica summary dict from ``fleet_summarize`` plus the fleet span."""
     cfg = get_config(arch)
@@ -78,9 +90,12 @@ def run_cluster(arch: str, modes, router: str, trace: str, qps: float,
     serve = _serve_config(mode0, chips, slo, chunk, max_slots)
     reqs = generate_trace(TRACES[trace], qps=qps, duration_s=duration,
                           seed=seed)
-    out, _ = run_fleet(cfg, serve, modes, router, reqs,
-                       admission=admission, rebalance=rebalance)
+    out, cluster = run_fleet(cfg, serve, modes, router, reqs,
+                             admission=admission, rebalance=rebalance,
+                             scale=scale)
     out["router"] = router
+    if scale is not None:
+        out["scale_events"] = list(cluster._scale_events)
     return out
 
 
@@ -112,11 +127,20 @@ def main(argv=None):
                    help="admission: queueing deadline before rejection (s)")
     p.add_argument("--rebalance", action="store_true",
                    help="cross-replica preemption/migration tick")
+    p.add_argument("--scale-policy", default=None,
+                   choices=["reactive", "projection"],
+                   help="SLO-driven autoscaling: 'reactive' trailing "
+                        "TTFT-attainment window, 'projection' perfmodel "
+                        "forecasts incl. independent disagg P/D pool "
+                        "scaling")
+    p.add_argument("--min-replicas", type=int, default=1)
+    p.add_argument("--max-replicas", type=int, default=4)
     p.add_argument("--json", default=None)
     args = p.parse_args(argv)
 
     out = {}
-    if args.mix or args.replicas > 1 or args.admission or args.rebalance:
+    if args.mix or args.replicas > 1 or args.admission or \
+            args.rebalance or args.scale_policy:
         if args.mode == "all" and not args.mix:
             p.error("--mode all cannot combine with --replicas; use "
                     "--mix rapid,hybrid,disagg to build a mixed fleet")
@@ -126,10 +150,18 @@ def main(argv=None):
                                     max_wait_s=args.admission_max_wait) \
             if args.admission else None
         rebalance = RebalancePolicy() if args.rebalance else None
+        scale = None
+        if args.scale_policy == "reactive":
+            scale = ScalePolicy(min_replicas=args.min_replicas,
+                                max_replicas=args.max_replicas)
+        elif args.scale_policy == "projection":
+            scale = ProjectionPolicy(min_replicas=args.min_replicas,
+                                     max_replicas=args.max_replicas)
         res = run_cluster(args.arch, mix, args.router, args.trace,
                           args.qps, args.duration, args.chips,
                           args.slo_itl_ms, args.chunk,
-                          admission=admission, rebalance=rebalance)
+                          admission=admission, rebalance=rebalance,
+                          scale=scale)
         out["cluster"] = res
         f = res["fleet"]
         names = [m if isinstance(m, str)
@@ -143,6 +175,12 @@ def main(argv=None):
               f"rej={f['rejected']}  migr={f['migrations']}")
         if res.get("admission"):
             print(f"  admission: {res['admission']}")
+        if res.get("scale_events"):
+            ups = sum(1 for _, a, _ in res["scale_events"] if a == "up")
+            pools = sum(1 for _, a, _ in res["scale_events"]
+                        if a.startswith("pool_"))
+            print(f"  scaling[{args.scale_policy}]: {ups} replica "
+                  f"add(s), {pools} independent pool grow(s)")
         for name, s in res["per_replica"].items():
             print(f"  {name:10s} n={s['requests']:4d}  "
                   f"thpt={s['throughput_tok_s']:9.1f} tok/s  "

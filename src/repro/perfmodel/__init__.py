@@ -4,5 +4,5 @@ from repro.perfmodel.costs import (  # noqa: F401
 )
 from repro.perfmodel.hw import TPU_V5E, HardwareSpec  # noqa: F401
 from repro.perfmodel.interference import (  # noqa: F401
-    OverlapResult, overlapped_times, phase_time,
+    OverlapResult, forecast_phase_times, overlapped_times, phase_time,
 )

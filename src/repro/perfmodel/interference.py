@@ -107,3 +107,25 @@ def overlapped_times(p_cost: Optional[StepCost], d_cost: Optional[StepCost],
     t_p = phase_time(p_cost, hw, chips, f=f_p,
                      mem_interference=MEM_INTERFERENCE_PREFILL)
     return OverlapResult(t_p, t_d, f_p, f_d, "distinct")
+
+
+def forecast_phase_times(p_cost: Optional[StepCost],
+                         d_cost: Optional[StepCost], hw: HardwareSpec,
+                         chips_p: int, chips_d: int, *,
+                         colocated: bool = True,
+                         f_decode: Optional[float] = None
+                         ) -> "tuple[float, float]":
+    """Projected ``(t_prefill, t_decode)`` for a replica's current load —
+    the primitive behind projection-driven cluster decisions (autoscaler,
+    admission).  Colocated replicas couple the two phases through
+    ``overlapped_times`` on the shared chip group; split-pool (disagg)
+    replicas run each phase at its own pool's ``phase_time`` with no
+    cross-phase interference (§3.2: the pools share nothing but the
+    transfer link)."""
+    if colocated:
+        r = overlapped_times(p_cost, d_cost, hw, chips_p,
+                             f_decode=f_decode)
+        return r.t_prefill, r.t_decode
+    t_p = phase_time(p_cost, hw, chips_p) if p_cost is not None else 0.0
+    t_d = phase_time(d_cost, hw, chips_d) if d_cost is not None else 0.0
+    return t_p, t_d

@@ -2,8 +2,8 @@ from repro.serving.admission import (  # noqa: F401
     AdmissionController, AdmissionPolicy,
 )
 from repro.serving.cluster import (  # noqa: F401
-    ROUTERS, BucketedRouter, Cluster, RebalancePolicy, Replica,
-    ReplicaSpec, ScalePolicy, make_router, parse_mix, run_fleet,
+    ROUTERS, BucketedRouter, Cluster, ProjectionPolicy, RebalancePolicy,
+    Replica, ReplicaSpec, ScalePolicy, make_router, parse_mix, run_fleet,
 )
 from repro.serving.metrics import (  # noqa: F401
     RequestRecord, StreamMetrics, fleet_summarize, records_from_events,

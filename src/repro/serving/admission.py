@@ -17,6 +17,15 @@ will claim) and
   * **rejects** cleanly when the prompt can never fit any replica's pool
     or the queueing deadline expires — instead of letting an engine hit
     ``OutOfBlocks`` (or preemption-thrash) mid-flight.
+
+Split-pool (disagg) targets are checked against BOTH pools: the prompt's
+transient *prefill-side* footprint must also fit the prefill pool's
+projected occupancy (live pages plus the claims of every queued-but-
+unstarted prompt, from ``LoadSnapshot.prefill_kv_*``).  Without this the
+controller admits work whose transient prefill KV the replica cannot
+hold — the request then sits in ``waiting_prefill`` starving the batch
+former, exactly the §3.2.2 imbalance the decode-side check cannot see.
+``prefill_pool_aware=False`` restores the decode-only projection.
 """
 from __future__ import annotations
 
@@ -37,11 +46,18 @@ class AdmissionPolicy:
     already-running requests).  ``projected_output_frac`` scales the
     request's ``max_new_tokens`` in the footprint projection — 1.0
     reserves for the worst case, smaller values statistically multiplex.
+
+    ``prefill_pool_aware`` additionally projects the prompt's transient
+    footprint against split-pool (disagg) replicas' *prefill* pools;
+    ``prefill_headroom`` is that pool's occupancy ceiling (transient
+    pages churn faster than decode KV, so it defaults looser).
     """
     kv_headroom: float = 0.90
     projected_output_frac: float = 0.5
     retry_s: float = 0.25           # cluster-side queue poll interval
     max_wait_s: float = 60.0        # queued longer than this => reject
+    prefill_pool_aware: bool = True
+    prefill_headroom: float = 0.95
 
 
 class AdmissionController:
@@ -58,24 +74,49 @@ class AdmissionController:
             round(self.policy.projected_output_frac * r.max_new_tokens))
         return kv_pages_for(horizon, page_size)
 
+    def prefill_pool_fits(self, replica, r: Request, snap=None) -> bool:
+        """Split-pool targets only: would the prompt's transient
+        prefill-side pages keep the *prefill* pool's projected occupancy
+        (live pages + every queued prompt's claim + this request) under
+        ``prefill_headroom``?  Colocated replicas report a zero-sized
+        prefill pool and pass vacuously."""
+        if not self.policy.prefill_pool_aware:
+            return True
+        s = snap if snap is not None else replica.snapshot()
+        if getattr(s, "prefill_kv_total_blocks", 0) <= 0:
+            return True        # colocated engine: no transient pool
+        pages = kv_pages_for(r.prompt_len, replica.serve.page_size)
+        used = s.prefill_kv_total_blocks - s.prefill_kv_free_blocks
+        return used + s.queued_prefill_kv_pages + pages <= \
+            self.policy.prefill_headroom * s.prefill_kv_total_blocks
+
     def fits(self, replica, r: Request, snap=None) -> bool:
         """Would admitting ``r`` keep the replica's projected pool
-        occupancy (live + queued claims + this request) under headroom?"""
+        occupancy (live + queued claims + this request) under headroom?
+        Disagg replicas must fit BOTH the decode pool (prompt + projected
+        output) and the transient prefill pool (prompt)."""
         s = snap if snap is not None else replica.snapshot()
         if s.kv_total_blocks <= 0:
             return True        # engine without a paged pool: no signal
         pages = self.projected_pages(r, replica.serve.page_size)
         used = s.kv_total_blocks - s.kv_free_blocks
-        return used + s.queued_kv_pages + pages <= \
-            self.policy.kv_headroom * s.kv_total_blocks
+        if used + s.queued_kv_pages + pages > \
+                self.policy.kv_headroom * s.kv_total_blocks:
+            return False
+        return self.prefill_pool_fits(replica, r, snap=s)
 
     def feasible(self, replica, r: Request, snap=None) -> bool:
-        """Can the prompt *ever* fit this replica's pool?"""
+        """Can the prompt *ever* fit this replica's pools?"""
         s = snap if snap is not None else replica.snapshot()
         if s.kv_total_blocks <= 0:
             return True
-        return kv_pages_for(r.prompt_len, replica.serve.page_size) <= \
-            s.kv_total_blocks
+        pages = kv_pages_for(r.prompt_len, replica.serve.page_size)
+        if pages > s.kv_total_blocks:
+            return False
+        if self.policy.prefill_pool_aware and \
+                getattr(s, "prefill_kv_total_blocks", 0) > 0:
+            return pages <= s.prefill_kv_total_blocks
+        return True
 
     # -- the decision -------------------------------------------------------
     def decide(self, r: Request, replicas: Sequence, now: float

@@ -1,0 +1,332 @@
+"""Projection-driven adaptive resource management at cluster scale:
+per-pool LoadSnapshot fields, runtime pool growth (Engine.resize_lane),
+independent P/D pool scaling and deficit-sized replica adds under
+ProjectionPolicy, prefill-pool-aware admission for disagg targets, and
+the parity guarantee that a cluster with projections disabled reproduces
+the bare engine exactly."""
+import copy
+
+import pytest
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core import make_engine
+from repro.core.request import Request
+from repro.kvcache import BlockAllocator, KVCacheManager, kv_pages_for
+from repro.perfmodel import forecast_phase_times, prefill_cost
+from repro.perfmodel.hw import TPU_V5E
+from repro.serving import (TRACES, AdmissionController, AdmissionPolicy,
+                           Cluster, ProjectionPolicy, ReplicaSpec,
+                           generate_trace, parse_mix)
+
+ARCH = "llama3-70b"
+
+
+def _serve(mode="rapid", chips=32):
+    return ServeConfig(mode=mode, chips=chips, slo=SLOConfig(itl_ms=100.0),
+                       disagg_split=(chips // 2, chips // 2),
+                       max_batch_slots=128)
+
+
+def _trace(qps=24.0, duration=20.0, seed=0):
+    return generate_trace(TRACES["lmsys"], qps=qps, duration_s=duration,
+                          seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# per-pool LoadSnapshot fields
+# ---------------------------------------------------------------------------
+
+
+def test_disagg_snapshot_exposes_prefill_pool():
+    cfg = get_config(ARCH)
+    eng = make_engine("disagg", cfg, _serve("disagg"))
+    s = eng.load_snapshot()
+    assert s.prefill_kv_total_blocks == eng.kv_p.allocator.num_blocks > 0
+    assert s.prefill_kv_free_blocks == s.prefill_kv_total_blocks
+    assert s.prefill_kv_utilization == 0.0
+    assert (s.chips_prefill, s.chips_decode) == (16, 16)
+    # a queued prompt claims transient prefill pages before any launch
+    eng.submit(Request(rid=0, arrival=0.0, prompt_len=640,
+                       max_new_tokens=8))
+    s2 = eng.load_snapshot()
+    # submit() wakes the scheduler, which may launch the prefill at once;
+    # the claim then shows as live pool pages instead of a queued claim
+    ps = eng.serve.page_size
+    claimed = s2.queued_prefill_kv_pages + \
+        (s2.prefill_kv_total_blocks - s2.prefill_kv_free_blocks)
+    assert claimed >= kv_pages_for(640, ps)
+
+
+@pytest.mark.parametrize("mode", ["rapid", "hybrid"])
+def test_colocated_snapshot_has_zero_prefill_pool(mode):
+    cfg = get_config(ARCH)
+    eng = make_engine(mode, cfg, _serve(mode))
+    s = eng.load_snapshot()
+    assert s.prefill_kv_total_blocks == 0
+    assert s.queued_prefill_kv_pages == 0
+    assert s.prefill_kv_utilization == 0.0
+    assert s.chips_prefill == s.chips_decode == eng.serve.chips
+
+
+# ---------------------------------------------------------------------------
+# runtime pool growth
+# ---------------------------------------------------------------------------
+
+
+def test_block_allocator_grows_and_refuses_shrink():
+    alloc = BlockAllocator(4)
+    got = alloc.alloc(3)
+    alloc.grow(4)
+    assert alloc.num_blocks == 8 and alloc.free_count == 5
+    more = alloc.alloc(5)
+    assert len(set(got) | set(more)) == 8       # no duplicate block ids
+    with pytest.raises(ValueError):
+        alloc.grow(-1)
+    mgr = KVCacheManager(2, 16)
+    mgr.allocate_prompt(0, 32)
+    mgr.grow(2)
+    assert mgr.allocator.num_blocks == 4
+    assert mgr.utilization == 0.5               # live KV untouched
+
+
+def test_disagg_resize_lane_grows_one_pool_only():
+    cfg = get_config(ARCH)
+    eng = make_engine("disagg", cfg, _serve("disagg"))
+    before = eng.load_snapshot()
+    eng.resize_lane("prefill", 24)
+    after = eng.load_snapshot()
+    assert after.chips_prefill == 24 and after.chips_decode == 16
+    assert after.prefill_kv_total_blocks > before.prefill_kv_total_blocks
+    assert after.kv_total_blocks == before.kv_total_blocks  # decode pool
+    assert eng.serve.chips == 40
+    assert eng.serve.disagg_split == (24, 16)
+    assert eng.executor.lane_chips["prefill"] == 24
+    with pytest.raises(ValueError):
+        eng.resize_lane("prefill", 8)           # pools only grow
+    with pytest.raises(KeyError):
+        eng.resize_lane("step", 8)
+
+
+def test_colocated_resize_lane_refused():
+    cfg = get_config(ARCH)
+    eng = make_engine("rapid", cfg, _serve())
+    with pytest.raises(NotImplementedError):
+        eng.resize_lane("prefill", 64)
+
+
+# ---------------------------------------------------------------------------
+# per-pool ReplicaSpec / --mix syntax
+# ---------------------------------------------------------------------------
+
+
+def test_parse_mix_per_pool_syntax():
+    specs = parse_mix("disagg:2x12+20,rapid:1x16")
+    assert specs[0] == ReplicaSpec("disagg", chips_p=12, chips_d=20)
+    assert specs[:2] == [specs[0]] * 2
+    assert specs[2] == ReplicaSpec("rapid", chips=16)
+
+
+def test_per_pool_replica_spec_builds_asymmetric_split():
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve("disagg"),
+                      [ReplicaSpec("disagg", chips_p=12, chips_d=20)])
+    eng = cluster.replicas[0].engine
+    assert (eng.chips_p, eng.chips_d) == (12, 20)
+    assert cluster.replicas[0].serve.chips == 32
+    with pytest.raises(ValueError):
+        Cluster(cfg, _serve("disagg"), [ReplicaSpec("disagg", chips_p=12)])
+    # per-pool chips on a colocated mode is a misconfiguration, not a
+    # silently-ignored disagg_split
+    with pytest.raises(ValueError):
+        Cluster(cfg, _serve(),
+                [ReplicaSpec("rapid", chips_p=12, chips_d=20)])
+
+
+def test_scale_up_clones_per_pool_spec():
+    """Autoscaled replicas keep the mode's original per-pool chip shape
+    instead of falling back to the base ServeConfig's split."""
+    cfg = get_config(ARCH)
+    pol = ProjectionPolicy(min_replicas=1, max_replicas=2)
+    cluster = Cluster(cfg, _serve("disagg"),
+                      [ReplicaSpec("disagg", chips_p=12, chips_d=20)],
+                      scale=pol)
+    cluster._scale_up_one()
+    clone = cluster.replicas[1].engine
+    assert (clone.chips_p, clone.chips_d) == (12, 20)
+
+
+# ---------------------------------------------------------------------------
+# ProjectionPolicy scaling behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_projection_scales_before_first_slo_miss():
+    """Under load clearly beyond one replica's capacity, the projection
+    tick (queued backlog + arrival-rate surplus) must scale up at the
+    FIRST check, even though no request has finished yet (the reactive
+    attainment window is still empty then)."""
+    cfg = get_config(ARCH)
+    reqs = _trace(qps=48.0, duration=15.0)   # ~2x one replica's rate
+    pol = ProjectionPolicy(min_replicas=1, max_replicas=3,
+                           check_interval_s=2.0)
+    cluster = Cluster(cfg, _serve(), ["rapid"], router="least_loaded",
+                      scale=pol)
+    recs, _ = cluster.run([copy.deepcopy(r) for r in reqs])
+    ups = [t for t, a, _ in cluster._scale_events if a == "up"]
+    assert ups and ups[0] == pytest.approx(pol.check_interval_s), \
+        "projection must act on the first tick, before any SLO miss"
+    assert 1 < cluster.num_replicas <= 3
+    assert sum(1 for r in recs if r.finish is not None) == len(reqs)
+
+
+def test_projection_grows_disagg_prefill_pool_independently():
+    cfg = get_config(ARCH)
+    reqs = _trace(qps=24.0, duration=15.0)
+    pol = ProjectionPolicy(min_replicas=1, max_replicas=1,   # pools only
+                           check_interval_s=2.0, pool_chip_step=4,
+                           max_pool_chips=32)
+    cluster = Cluster(cfg, _serve("disagg"), ["disagg"],
+                      router="least_loaded", scale=pol)
+    recs, _ = cluster.run([copy.deepcopy(r) for r in reqs])
+    eng = cluster.replicas[0].engine
+    pool_events = [(a, n) for _, a, n in cluster._scale_events
+                   if a.startswith("pool_")]
+    assert pool_events, "prefill-bound load must trigger pool growth"
+    assert eng.chips_p > 16, "prefill pool grew"
+    assert eng.chips_d == 16, "decode pool untouched"
+    assert not any(a == "up" for _, a, _ in cluster._scale_events)
+    assert sum(1 for r in recs if r.finish is not None) == len(reqs)
+
+
+def test_projection_deficit_adds_multiple_replicas_per_tick():
+    """A large projected capacity deficit is covered in ONE tick instead
+    of dripping one replica per window."""
+    cfg = get_config(ARCH)
+    # a hot burst: inbound token rate many times one replica's prefill
+    # throughput, so the capacity forecast demands several replicas
+    reqs = [Request(rid=i, arrival=0.01 * i, prompt_len=8000,
+                    max_new_tokens=32) for i in range(200)]
+    pol = ProjectionPolicy(min_replicas=1, max_replicas=4,
+                           check_interval_s=2.0)
+    cluster = Cluster(cfg, _serve(), ["rapid"], router="least_loaded",
+                      scale=pol)
+    cluster.run([copy.deepcopy(r) for r in reqs])
+    ups = [t for t, a, _ in cluster._scale_events if a == "up"]
+    first_tick = [t for t in ups if t == pytest.approx(2.0)]
+    assert len(first_tick) >= 2, \
+        f"deficit-sized scale-up expected >=2 adds at t=2, got {ups}"
+
+
+def test_projection_holds_fleet_under_comfortable_load():
+    """Steady sub-capacity traffic must NOT read as pressure: only the
+    surplus a replica cannot drain compounds over the horizon, so a
+    fleet comfortably meeting SLO stays at min_replicas."""
+    cfg = get_config(ARCH)
+    reqs = _trace(qps=4.0, duration=30.0, seed=1)
+    pol = ProjectionPolicy(min_replicas=1, max_replicas=4,
+                           check_interval_s=2.0)
+    cluster = Cluster(cfg, _serve(), ["rapid"], router="least_loaded",
+                      scale=pol)
+    recs, _ = cluster.run([copy.deepcopy(r) for r in reqs])
+    assert cluster._scale_events == []
+    assert cluster.num_replicas == 1
+    assert sum(1 for r in recs if r.finish is not None) == len(reqs)
+
+
+def test_projection_disabled_cluster_matches_bare_engine():
+    """Golden-parity guarantee: with projections neutralized (no scale
+    action possible) the cluster reproduces the bare engine exactly —
+    the new per-pool snapshot fields and projection plumbing must be
+    observation-only."""
+    cfg = get_config(ARCH)
+    reqs = generate_trace(TRACES["lmsys"], qps=6.0, duration_s=20.0,
+                          seed=0)
+    for mode in ("rapid", "disagg"):
+        eng = make_engine(mode, cfg, _serve(mode))
+        with pytest.deprecated_call():
+            recs_bare, span_bare = eng.run([copy.deepcopy(r)
+                                            for r in reqs])
+        pol = ProjectionPolicy(min_replicas=1, max_replicas=1,
+                               pool_scaling=False)
+        cluster = Cluster(cfg, _serve(mode), [mode],
+                          router="round_robin", scale=pol)
+        recs_cl, _ = cluster.run([copy.deepcopy(r) for r in reqs])
+        # per-request metrics must be bit-identical; the span is padded
+        # by the final no-op scale tick (same as ScalePolicy), so it is
+        # deliberately not compared
+        assert recs_cl == recs_bare, f"{mode}: projections perturbed run"
+        del span_bare
+
+
+# ---------------------------------------------------------------------------
+# prefill-pool-aware admission
+# ---------------------------------------------------------------------------
+
+
+class _FakeReplica:
+    def __init__(self, snap, serve):
+        self._snap = snap
+        self.serve = serve
+
+    def snapshot(self):
+        return self._snap
+
+
+def _snap(**kw):
+    from repro.core.engines import LoadSnapshot
+    base = dict(queued_requests=0, queued_prefill_tokens=0,
+                running_decode=0, decode_ctx_tokens=0, kv_utilization=0.0,
+                prefill_busy=False, decode_busy=False)
+    base.update(kw)
+    return LoadSnapshot(**base)
+
+
+def test_admission_consults_prefill_pool_occupancy():
+    """A disagg target whose decode pool has room but whose transient
+    prefill pool is projected full must NOT be in the fit list."""
+    serve = _serve("disagg")
+    r = Request(rid=0, arrival=0.0, prompt_len=1600, max_new_tokens=16)
+    ctl = AdmissionController(AdmissionPolicy(projected_output_frac=1.0))
+    roomy_decode = dict(kv_free_blocks=10_000, kv_total_blocks=10_000)
+    # prefill pool: 100 pages, 95 already claimed by queued prompts
+    tight = _snap(**roomy_decode, prefill_kv_total_blocks=100,
+                  prefill_kv_free_blocks=100, queued_prefill_kv_pages=95)
+    open_ = _snap(**roomy_decode, prefill_kv_total_blocks=1000,
+                  prefill_kv_free_blocks=1000)
+    assert not ctl.fits(_FakeReplica(tight, serve), r)
+    assert ctl.fits(_FakeReplica(open_, serve), r)
+    # decode-only projection (the pre-fix behaviour) is still selectable
+    legacy = AdmissionController(AdmissionPolicy(
+        projected_output_frac=1.0, prefill_pool_aware=False))
+    assert legacy.fits(_FakeReplica(tight, serve), r)
+
+
+def test_admission_infeasible_for_prefill_pool():
+    """A prompt that can never fit the prefill pool is rejected outright
+    instead of being queued against a replica it can never start on."""
+    serve = _serve("disagg")
+    r = Request(rid=1, arrival=0.0, prompt_len=3200, max_new_tokens=4)
+    ctl = AdmissionController(AdmissionPolicy())
+    snap = _snap(kv_free_blocks=10_000, kv_total_blocks=10_000,
+                 prefill_kv_total_blocks=100, prefill_kv_free_blocks=100)
+    rep = _FakeReplica(snap, serve)
+    assert not ctl.feasible(rep, r)
+    verdict, fit = ctl.decide(r, [rep], now=0.0)
+    assert verdict == "reject" and fit is None
+
+
+def test_forecast_phase_times_split_vs_colocated():
+    cfg = get_config(ARCH)
+    p = prefill_cost(cfg, [4096], 16)
+    from repro.perfmodel import decode_cost
+    d = decode_cost(cfg, 32, 32 * 2048.0, 16)
+    t_p_split, t_d_split = forecast_phase_times(
+        p, d, TPU_V5E, 16, 16, colocated=False)
+    t_p_co, t_d_co = forecast_phase_times(
+        p, d, TPU_V5E, 16, 16, colocated=True)
+    # split pools run interference-free; colocated phases slow each other
+    assert t_p_split < t_p_co
+    assert t_d_split < t_d_co
+    # empty lanes cost nothing on split pools
+    assert forecast_phase_times(None, d, TPU_V5E, 16, 16,
+                                colocated=False)[0] == 0.0

@@ -1,16 +1,22 @@
-"""AdaptiveResourceManager.allocate: bucket clamping at and beyond the
-largest profiled batch size, exact-boundary lookups, and monotone
-solo -> overalloc -> distinct mode transitions in decode_bs."""
+"""AdaptiveResourceManager.allocate: conservative extrapolation beyond
+the largest profiled batch size (``distinct_clamped``), exact-boundary
+lookups, pinned solo-regime corners, monotone solo -> overalloc ->
+distinct mode transitions in decode_bs, and the build_decode_profile
+crossover stopping at the FIRST SLO miss on non-monotone curves."""
+import dataclasses
+
 import pytest
 
 from repro.config import get_reduced_config
-from repro.core.resource_manager import (BS_BUCKETS,
+from repro.core import resource_manager as rm
+from repro.core.resource_manager import (BS_BUCKETS, F_GRID,
                                          AdaptiveResourceManager,
                                          DecodeProfile,
                                          build_decode_profile)
 from repro.perfmodel.hw import TPU_V5E
 
-MODE_ORDER = {"solo": 0, "overalloc": 1, "distinct": 2}
+MODE_ORDER = {"solo": 0, "overalloc": 1, "distinct": 2,
+              "distinct_clamped": 3}
 
 
 def _profile(overalloc_limit: int = 16) -> DecodeProfile:
@@ -20,13 +26,18 @@ def _profile(overalloc_limit: int = 16) -> DecodeProfile:
                          slo_itl_s=0.1)
 
 
-def test_allocate_above_largest_bucket_clamps():
+def test_allocate_above_largest_bucket_extrapolates_conservatively():
+    """bs > 256 has no profile data: decode must get F_GRID[-1] (not the
+    last bucket's smaller f_d) and the clamp must be visible in mode."""
     arm = AdaptiveResourceManager(_profile())
     top = BS_BUCKETS[-1]
     for bs in (top + 1, top + 100, 10 * top):
         a = arm.allocate(bs, prefill_active=True)   # must not raise
-        assert a.mode == "distinct"
-        assert a.f_decode == arm.profile.min_f[top]
+        assert a.mode == "distinct_clamped"
+        assert a.f_decode == F_GRID[-1]
+        assert a.f_decode >= arm.profile.min_f[top]
+    # the clamp is recorded in history, not silently folded into distinct
+    assert [h.mode for h in arm.history] == ["distinct_clamped"] * 3
 
 
 @pytest.mark.parametrize("bs", BS_BUCKETS)
@@ -54,7 +65,24 @@ def test_mode_transitions_monotone_in_decode_bs():
     assert seen == sorted(seen), "mode must be monotone in decode_bs"
     assert seen[0] == MODE_ORDER["solo"]          # bs == 0
     assert MODE_ORDER["overalloc"] in seen
-    assert seen[-1] == MODE_ORDER["distinct"]
+    assert MODE_ORDER["distinct"] in seen
+    assert seen[-1] == MODE_ORDER["distinct_clamped"]   # bs > top bucket
+
+
+@pytest.mark.parametrize("boundary", [16, 17, 48, 49, 128, 129, 256])
+def test_regime_switch_across_bucket_boundaries(boundary):
+    """solo -> overalloc -> distinct regime edges at exact-bucket and
+    between-bucket batch sizes around the crossover."""
+    arm = AdaptiveResourceManager(_profile(overalloc_limit=16))
+    a = arm.allocate(boundary, prefill_active=True)
+    if boundary <= 16:
+        assert a.mode == "overalloc" and a.f_decode is None
+    else:
+        assert a.mode == "distinct"
+        import bisect
+        bucket = BS_BUCKETS[bisect.bisect_left(BS_BUCKETS, boundary)]
+        assert bucket >= boundary            # conservative: round UP
+        assert a.f_decode == arm.profile.min_f[bucket]
 
 
 def test_solo_whenever_prefill_idle():
@@ -64,12 +92,58 @@ def test_solo_whenever_prefill_idle():
         assert arm.allocate(bs, prefill_active=False).f_decode is None
 
 
+def test_zero_decode_bs_corner_pinned():
+    """decode_bs == 0 is solo under EVERY ordering of the other inputs —
+    including prefill_active=True and a zero overalloc crossover, where
+    the old branch order was the only thing keeping bs=0 out of the
+    distinct-bucket lookup."""
+    for limit in (0, 16):
+        arm = AdaptiveResourceManager(_profile(overalloc_limit=limit))
+        for prefill_active in (True, False):
+            a = arm.allocate(0, prefill_active=prefill_active)
+            assert a.mode == "solo"
+            assert a.f_decode is None
+            assert a.f_prefill == 1.0
+    # negative batch sizes (defensive) also resolve to solo, not a
+    # bisect into bucket 1
+    assert arm.allocate(-1, prefill_active=True).mode == "solo"
+
+
 def test_real_profile_clamps_and_is_consistent():
     cfg = get_reduced_config("llama3-70b")
     prof = build_decode_profile(cfg, TPU_V5E, chips=1, slo_itl_s=0.1,
                                 avg_ctx=1024, tp=1)
     arm = AdaptiveResourceManager(prof)
     a = arm.allocate(BS_BUCKETS[-1] + 123, prefill_active=True)
-    assert a.mode in ("overalloc", "distinct")
-    if a.mode == "distinct":
-        assert 0.0 < a.f_decode <= 0.9
+    assert a.mode in ("overalloc", "distinct_clamped")
+    if a.mode == "distinct_clamped":
+        assert a.f_decode == F_GRID[-1]
+
+
+def test_crossover_stops_at_first_slo_miss(monkeypatch):
+    """A non-monotone interference curve (mid bs misses the SLO, larger
+    bs passes again) must NOT re-open the overallocation regime above
+    the first miss."""
+    cfg = get_reduced_config("llama3-70b")
+    slo = 0.1
+    # synthetic overlapped-decode times: pass at bs<=4, miss at 8, then
+    # "pass" again from 16 up (a non-monotone profile the old scan read
+    # as overalloc_bs_limit == 256)
+    def fake_overlapped(p_cost, d_cost, hw, chips, *, f_decode=None):
+        bs = fake_overlapped.calls
+        fake_overlapped.calls += 1
+        t_d = slo / 2 if BS_BUCKETS[bs] != 8 else slo * 2
+        return dataclasses.replace(
+            rm.I.OverlapResult(0.0, 0.0, 0.5, 0.5, "overalloc"),
+            t_decode=t_d)
+    fake_overlapped.calls = 0
+    monkeypatch.setattr(rm.I, "overlapped_times", fake_overlapped)
+    prof = build_decode_profile(cfg, TPU_V5E, chips=1, slo_itl_s=slo,
+                                avg_ctx=1024, tp=1)
+    assert prof.overalloc_bs_limit == 4, (
+        "crossover must stop at the first SLO miss (bs=8), not resume "
+        "raising the limit when larger batches pass again")
+    # and the runtime regime switch follows the fixed crossover
+    arm = AdaptiveResourceManager(prof)
+    assert arm.allocate(4, prefill_active=True).mode == "overalloc"
+    assert arm.allocate(16, prefill_active=True).mode == "distinct"
