@@ -4,14 +4,18 @@
 #   make test       tier-1 suite (what the driver runs) + junit report
 #   make smoke      tier-1 + quick benchmark smokes (single-engine
 #                   fig8/9/10/11, cluster fig12, admission/preemption
-#                   fig13, projection-driven scaling fig14)
+#                   fig13, projection-driven scaling fig14, hot-path
+#                   simulator-throughput bench)
+#   make bench-hotpath  full hot-path macro-benchmark; writes
+#                   BENCH_hotpath.json (simulated req/wall-s, per-event
+#                   cost, speedup vs the pinned pre-PR-5 baseline)
 #   make ci         dev-deps + smoke  (the one command CI runs)
 #   make lint       ruff style gate (blocking CI job)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: dev-deps test smoke ci bench lint
+.PHONY: dev-deps test smoke ci bench bench-hotpath lint
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt || \
@@ -28,6 +32,10 @@ smoke: test
 	$(PY) -m benchmarks.fig12_cluster_goodput --smoke
 	$(PY) -m benchmarks.fig13_admission_preemption --smoke
 	$(PY) -m benchmarks.fig14_projection_scaling --smoke
+	$(PY) -m benchmarks.bench_hotpath --smoke
+
+bench-hotpath:
+	$(PY) -m benchmarks.bench_hotpath
 
 ci: dev-deps smoke
 

@@ -1,0 +1,528 @@
+"""Hot-path macro-benchmark: simulator throughput on a cluster trace.
+
+Drives a 3-replica mixed-mode cluster (rapid + hybrid + disagg behind the
+least-loaded router, with the rebalance tick on) through a ~20k-request
+bimodal trace — short chat prompts interleaved with long documents at
+~1.5x fleet capacity, so queues actually get deep — and reports how fast
+the *simulator* runs: simulated requests per wall-second, p50/p95
+per-event dispatch cost, and event-loop health (``EventLoop.stats``).
+
+The same trace is then replayed against an in-process **pre-optimization
+baseline**: the PR-4 hot path (full ``load_snapshot`` queue rescans on
+every router/rebalance call, ``list()`` queue materialization on every
+scheduler wake, linear-scan remove/membership, O(batch) executor context
+sums, uncached step-cost pricing, per-read event-log copies, O(n)
+``Cluster._outstanding`` walks) reconstructed from the seed sources and
+monkeypatched in — "pinned" meaning the legacy implementations live in
+this file and no longer drift with the optimized modules.  The baseline
+is deliberately *conservative*: shared lower layers it still runs
+(memoized per-config scalars, the scalar percentile, ``slots=True``
+event records, the queue container's own O(1) append/pop) are PR-5
+improvements too, so the measured speedup **understates** the true
+PR-4 delta.  Both runs must produce *identical* simulation results
+(asserted); only the wall-clock differs.
+
+Results are written to ``BENCH_hotpath.json`` (schema below) so the perf
+trajectory is tracked run over run::
+
+    {
+      "schema": "bench_hotpath/v1",
+      "config":    {requests, trace, router, replicas, seed},
+      "optimized": {wall_s, span_s, completed, rejected, tokens,
+                    events_dispatched, req_per_wall_s, events_per_wall_s,
+                    event_cost_us: {p50, p95}, loop: {dispatched,
+                    clamped, peak_heap}},
+      "baseline":  {... same fields ...},
+      "speedup":   optimized.req_per_wall_s / baseline.req_per_wall_s
+    }
+
+``--smoke`` (CI) asserts the speedup is at least ``SMOKE_MIN_SPEEDUP``
+and that the two runs' simulation outputs match exactly.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import heapq
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core import engines as E
+from repro.core import events as EV
+from repro.core import executor as X
+from repro.core import scheduler as S
+from repro.core.queues import IndexedQueue
+from repro.core.request import State
+from repro.kvcache import kv_pages_for
+from repro.perfmodel import costs as C
+from repro.perfmodel import interference as I
+from repro.serving import cluster as CL
+from repro.serving import metrics as M
+from repro.serving.sim import EventLoop
+from repro.serving.traces import TraceSpec, generate_trace
+
+ARCH = "llama3-70b"
+REPLICAS = ["rapid", "hybrid", "disagg"]
+ROUTER = "least_loaded"
+DEFAULT_REQUESTS = 20_000
+SMOKE_MIN_SPEEDUP = 4.0
+
+# bimodal request mix: interactive chat + long-document summarization;
+# outputs kept short so wall time is dominated by the control plane
+# (queues, routing, snapshots) the benchmark is about, not token events
+SHORT = TraceSpec("hot-short", mean_prompt=512, sigma_prompt=0.6,
+                  mean_output=24, sigma_output=0.5,
+                  max_prompt=8192, max_output=64)
+LONG = TraceSpec("hot-long", mean_prompt=6144, sigma_prompt=0.5,
+                 mean_output=24, sigma_output=0.5,
+                 max_prompt=16384, max_output=64)
+QPS_TOTAL = 60.0      # ~1.5x the 3-replica prefill capacity: queues deepen
+
+
+def bimodal_trace(n_requests: int, seed: int):
+    """~n_requests arrivals, half short / half long, merged by arrival."""
+    duration = n_requests / QPS_TOTAL
+    short = generate_trace(SHORT, qps=QPS_TOTAL / 2, duration_s=duration,
+                           seed=seed)
+    long_ = generate_trace(LONG, qps=QPS_TOTAL / 2, duration_s=duration,
+                           seed=seed + 1)
+    merged = sorted(short + long_, key=lambda r: (r.arrival, r.prompt_len))
+    for i, r in enumerate(merged):
+        r.rid = i
+    return merged
+
+
+def _serve() -> ServeConfig:
+    return ServeConfig(mode="rapid", chips=32, slo=SLOConfig(itl_ms=100.0),
+                       disagg_split=(16, 16), max_batch_slots=128)
+
+
+class TimedLoop(EventLoop):
+    """EventLoop that times every callback (per-event cost distribution).
+
+    Both the optimized and the baseline run use this loop, so the
+    perf_counter overhead cancels out of the speedup ratio."""
+
+    def __init__(self):
+        super().__init__()
+        self.samples_ns: List[int] = []
+
+    def run(self, until=None, max_events: int = 50_000_000) -> None:
+        assert until is None, "benchmark drains the loop in one pass"
+        heap = self._heap
+        samples = self.samples_ns
+        clock = time.perf_counter_ns
+        n = 0
+        while heap and n < max_events:
+            t, _, fn = heapq.heappop(heap)
+            self.now = t
+            t0 = clock()
+            fn()
+            samples.append(clock() - t0)
+            n += 1
+        self.stats.dispatched += n
+        if n >= max_events:
+            raise RuntimeError("event budget exceeded (runaway sim?)")
+
+
+# ---------------------------------------------------------------------------
+# Pinned pre-optimization baseline (the PR-4 hot path, verbatim).
+#
+# Everything below reconstructs the seed implementations that PR-5
+# replaced; ``legacy_hot_path()`` swaps them in for the baseline run and
+# restores the optimized code afterwards.  The reconstructions are
+# semantically identical to both the seed AND the optimized code — the
+# benchmark asserts the two runs' simulation outputs match exactly.
+# ---------------------------------------------------------------------------
+
+
+def _legacy_load_snapshot(self):
+    # PR-4: full queue rescan on every call (routers call this per
+    # arrival per replica; the rebalance tick per replica per tick)
+    return E.Engine.load_snapshot_recompute(self)
+
+
+# real (optimized) implementations bound at import time: the legacy
+# shims below must not resolve through the patched class attributes
+_REAL_IQ_REMOVE = IndexedQueue.remove
+_REAL_METRICS_CALL = M.StreamMetrics.__call__
+
+
+def _legacy_iq_remove(self, r):
+    # deque.remove(): linear scan from the head to the victim
+    for x in self:
+        if x is r:
+            break
+    else:
+        raise ValueError(f"request {r.rid} not in queue")
+    _REAL_IQ_REMOVE(self, r)
+
+
+def _legacy_iq_contains(self, r):
+    # list.__contains__: linear scan
+    for x in self:
+        if x is r:
+            return True
+    return False
+
+
+def _legacy_rapid_schedule(self, view):
+    # PR-4 RapidScheduler.schedule: list() materializes whole queues on
+    # every wake
+    plan = S.StepPlan()
+    serve = view.serve
+    ps = serve.page_size
+    admitted = []
+    if view.wake.kind == "arrival" or view.wake.kv_freed:
+        free = view.kv.allocator.free_count
+        for r in list(view.queues["waiting_kv"]):
+            if not self._fits_pool(r.prompt_len, view.kv, ps):
+                plan.rejects.append((r, "waiting_kv"))
+                continue
+            need = kv_pages_for(r.prompt_len, ps)
+            if need > free:
+                break
+            free -= need
+            plan.admits.append(S.Admission(
+                r, "waiting_kv", "waiting_prefill",
+                State.WAITING_PREFILL))
+            admitted.append(r)
+    if not view.lanes["prefill"].busy:
+        batch = []
+        tokens = 0
+        for r in list(view.queues["waiting_prefill"]) + admitted:
+            if batch and tokens + r.prompt_len > serve.prefill_max_tokens:
+                break
+            batch.append(r)
+            tokens += r.prompt_len
+        if batch:
+            plan.prefill = S.PrefillLaunch(batch, "waiting_prefill")
+    if not view.lanes["decode"].busy:
+        joins = []
+        slots = len(view.running)
+        for r in view.queues["pending_join"]:
+            if slots >= serve.max_batch_slots:
+                break
+            joins.append(r)
+            slots += 1
+        bs = len(view.running) + len(joins)
+        if bs:
+            prefill_active = view.lanes["prefill"].busy or \
+                plan.prefill is not None
+            alloc = self.arm.allocate(bs, prefill_active)
+            plan.decode = S.DecodeLaunch(joins, f_decode=alloc.f_decode)
+    return plan
+
+
+def _legacy_hybrid_schedule(self, view):
+    plan = S.StepPlan()
+    if view.lanes["step"].busy:
+        return plan
+    serve = view.serve
+    ps = serve.page_size
+    free = view.kv.allocator.free_count
+    slots = len(view.queues["chunking"]) + len(view.running)
+    admitted = []
+    for r in list(view.queues["waiting"]):
+        if not self._fits_pool(r.prompt_len, view.kv, ps):
+            plan.rejects.append((r, "waiting"))
+            continue
+        need = kv_pages_for(r.prompt_len, ps)
+        if need > free or slots >= serve.max_batch_slots:
+            break
+        free -= need
+        slots += 1
+        plan.admits.append(S.Admission(
+            r, "waiting", "chunking", State.PREFILLING,
+            stamp_prefill_start=True))
+        admitted.append(r)
+    bs = len(view.running)
+    budget = max(0, serve.token_budget - bs)
+    chunks = []
+    for r in list(view.queues["chunking"]) + admitted:
+        if budget <= 0:
+            break
+        take = min(serve.chunk_size, budget,
+                   r.prompt_len - r.prefill_tokens_done)
+        if take <= 0:
+            continue
+        chunks.append((r, take))
+        budget -= take
+    if chunks or bs:
+        plan.hybrid = S.HybridLaunch(chunks)
+    return plan
+
+
+def _legacy_disagg_schedule(self, view):
+    plan = S.StepPlan()
+    serve = view.serve
+    ps = serve.page_size
+    if view.wake.kind in ("transfer_arrived", "admit_retry"):
+        r = view.wake.request
+        if not self._fits_pool(r.prompt_len, view.kv, ps):
+            plan.rejects.append((r, None))
+        elif kv_pages_for(r.prompt_len, ps) > \
+                view.kv.allocator.free_count:
+            plan.retries.append(S.AdmitRetry(r, serve.slo.itl_ms / 1e3))
+        else:
+            plan.admits.append(S.Admission(
+                r, None, "pending_join", State.PREFILL_FINISHED,
+                stamp_t_blocks=False))
+    if not view.lanes["prefill"].busy:
+        free_p = view.kv_p.allocator.free_count
+        batch = []
+        tokens = 0
+        for r in list(view.queues["waiting_prefill"]):
+            if not self._fits_pool(r.prompt_len, view.kv_p, ps) or \
+                    not self._fits_pool(r.prompt_len, view.kv, ps):
+                plan.rejects.append((r, "waiting_prefill"))
+                continue
+            need = kv_pages_for(r.prompt_len, ps)
+            if need > free_p:
+                break
+            if batch and tokens + r.prompt_len > serve.prefill_max_tokens:
+                break
+            free_p -= need
+            batch.append(r)
+            tokens += r.prompt_len
+        if batch:
+            plan.prefill = S.PrefillLaunch(batch, "waiting_prefill",
+                                           pool="prefill")
+    if not view.lanes["decode"].busy:
+        joins = []
+        slots = len(view.running)
+        newly = [a.request for a in plan.admits
+                 if a.to_queue == "pending_join"]
+        for r in list(view.queues["pending_join"]) + newly:
+            if slots >= serve.max_batch_slots:
+                break
+            joins.append(r)
+            slots += 1
+        if view.running or joins:
+            plan.decode = S.DecodeLaunch(joins)
+    return plan
+
+
+# uncached pricing entry points (bypass the PR-5 lru_cache layers)
+_RAW_PREFILL = C._prefill_cost.__wrapped__
+_RAW_DECODE = C.decode_cost.__wrapped__
+_RAW_CHUNK = C.chunk_prefill_cost.__wrapped__
+
+
+def _legacy_execute(self, plan, view):
+    # PR-4 PerfModelExecutor.execute: O(batch) context sums per decode
+    # launch, pricing recomputed from scratch on every call
+    serve = view.serve
+    p_out = d_out = h_out = None
+    if plan.prefill is not None:
+        chips = self._chips("prefill", serve)
+        cost = _RAW_PREFILL(
+            self.cfg, tuple(r.prompt_len for r in plan.prefill.batch),
+            chips, 2)
+        dlane = view.lanes.get("decode", None)
+        if self.colocated and dlane is not None and dlane.busy and \
+                dlane.cost is not None:
+            dur = I.overlapped_times(cost, dlane.cost, self.hw, chips,
+                                     f_decode=dlane.f_decode).t_prefill
+        else:
+            dur = I.phase_time(cost, self.hw, chips)
+        p_out = X.LaunchOutcome(self._step_time(dur, serve), cost)
+    if plan.decode is not None:
+        chips = self._chips("decode", serve)
+        batch = list(view.running) + list(plan.decode.joins)
+        ctx_total = float(sum(r.context_len for r in batch))
+        cost = _RAW_DECODE(self.cfg, len(batch), ctx_total, chips, 2)
+        if p_out is not None:
+            p_cost = p_out.cost
+        else:
+            plane = view.lanes.get("prefill", None)
+            p_cost = plane.cost if plane is not None and plane.busy \
+                else None
+        if self.colocated and p_cost is not None:
+            dur = I.overlapped_times(p_cost, cost, self.hw, chips,
+                                     f_decode=plan.decode.f_decode
+                                     ).t_decode
+        else:
+            dur = I.phase_time(cost, self.hw, chips)
+        d_out = X.LaunchOutcome(self._step_time(dur, serve), cost)
+    if plan.hybrid is not None:
+        chips = self._chips("step", serve)
+        cost = C.ZERO_COST
+        for r, take in plan.hybrid.chunks:
+            cost = cost + _RAW_CHUNK(
+                self.cfg, take, r.prefill_tokens_done, chips, 2)
+        bs = len(view.running)
+        if bs:
+            ctx_total = float(sum(r.context_len for r in view.running))
+            cost = cost + _RAW_DECODE(self.cfg, bs, ctx_total, chips, 2)
+        dur = I.phase_time(cost, self.hw, chips)
+        h_out = X.LaunchOutcome(self._step_time(dur, serve), cost)
+    return X.StepOutputs(prefill=p_out, decode=d_out, hybrid=h_out)
+
+
+def _legacy_emit(self, ev):
+    # PR-4 EventStream.emit: per-rid fanout dict probed on every event
+    self._log.append(ev)
+    for fn in self._subs:
+        fn(ev)
+    for fn in self._per_rid.get(ev.rid, ()):
+        fn(ev)
+
+
+def _legacy_events(self):
+    # PR-4 EventStream.events(): a fresh full copy per read
+    return tuple(self._log)
+
+
+def _legacy_metrics_call(self, ev):
+    if isinstance(ev, EV.TokenEvent):
+        # PR-4: setdefault allocates a fresh empty list on every token
+        self._token_times.setdefault(ev.rid, []).append(ev.t)
+    else:
+        _REAL_METRICS_CALL(self, ev)   # terminal events: identical paths
+
+
+def _legacy_outstanding(self):
+    # PR-4 Cluster._outstanding: walk every request ever enqueued
+    return any(r.t_finish is None and r.state is not State.REJECTED
+               for r in self._all)
+
+
+_LEGACY_PATCHES = [
+    (E.Engine, "load_snapshot", _legacy_load_snapshot),
+    (IndexedQueue, "remove", _legacy_iq_remove),
+    (IndexedQueue, "__contains__", _legacy_iq_contains),
+    (S.RapidScheduler, "schedule", _legacy_rapid_schedule),
+    (S.HybridScheduler, "schedule", _legacy_hybrid_schedule),
+    (S.DisaggScheduler, "schedule", _legacy_disagg_schedule),
+    (X.PerfModelExecutor, "execute", _legacy_execute),
+    (EV.EventStream, "emit", _legacy_emit),
+    (EV.EventStream, "events", _legacy_events),
+    (M.StreamMetrics, "__call__", _legacy_metrics_call),
+    (CL.Cluster, "_outstanding", _legacy_outstanding),
+]
+
+
+class legacy_hot_path:
+    """Context manager: swap in the pinned PR-4 hot path."""
+
+    def __enter__(self):
+        self._saved = [(tgt, name, tgt.__dict__[name])
+                       for tgt, name, _ in _LEGACY_PATCHES]
+        for tgt, name, fn in _LEGACY_PATCHES:
+            setattr(tgt, name, fn)
+        return self
+
+    def __exit__(self, *exc):
+        for tgt, name, fn in self._saved:
+            setattr(tgt, name, fn)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Measurement
+# ---------------------------------------------------------------------------
+
+
+def run_once(requests, seed: int) -> Dict[str, object]:
+    cfg = get_config(ARCH)
+    serve = _serve()
+    loop = TimedLoop()
+    cluster = CL.Cluster(cfg, serve, REPLICAS, router=ROUTER,
+                         rebalance=CL.RebalancePolicy(), loop=loop)
+    reqs = [copy.deepcopy(r) for r in requests]   # copies outside the clock
+    wall0 = time.perf_counter()
+    _, span = cluster.run(reqs)
+    wall = time.perf_counter() - wall0
+    summary = cluster.metrics.summarize(serve.slo, span)
+    ev_us = np.asarray(loop.samples_ns, dtype=np.float64) / 1e3
+    return {
+        "wall_s": round(wall, 3),
+        "span_s": span,
+        "completed": int(summary["completed"]),
+        "rejected": int(summary["rejected"]),
+        "tokens": int(summary["tokens"]),
+        "migrations": len(cluster._migrations),
+        "events_dispatched": loop.stats.dispatched,
+        "req_per_wall_s": round(summary["completed"] / wall, 1),
+        "events_per_wall_s": round(loop.stats.dispatched / wall, 1),
+        "event_cost_us": {
+            "p50": round(float(np.percentile(ev_us, 50)), 2),
+            "p95": round(float(np.percentile(ev_us, 95)), 2),
+        },
+        "loop": loop.stats.as_dict(),
+    }
+
+
+def main(argv=None) -> Dict[str, object]:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=DEFAULT_REQUESTS)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_hotpath.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"assert >= {SMOKE_MIN_SPEEDUP}x speedup and "
+                         "identical simulation outputs")
+    args = ap.parse_args(argv)
+
+    trace = bimodal_trace(args.requests, args.seed)
+    print(f"# bench_hotpath: {len(trace)} requests, "
+          f"{sum(r.prompt_len for r in trace)} prompt tokens, "
+          f"replicas={REPLICAS}, router={ROUTER}")
+
+    # interpreter warmup (bytecode, numpy, perfmodel first-touch) so the
+    # baseline-first ordering doesn't hand the optimized run a freebie
+    run_once(bimodal_trace(500, args.seed + 17), args.seed)
+
+    with legacy_hot_path():
+        base = run_once(trace, args.seed)
+    print(f"baseline : {base['wall_s']:8.2f}s wall  "
+          f"{base['req_per_wall_s']:9.1f} req/s  "
+          f"p50/p95 {base['event_cost_us']['p50']}/"
+          f"{base['event_cost_us']['p95']} us/event")
+    opt = run_once(trace, args.seed)
+    print(f"optimized: {opt['wall_s']:8.2f}s wall  "
+          f"{opt['req_per_wall_s']:9.1f} req/s  "
+          f"p50/p95 {opt['event_cost_us']['p50']}/"
+          f"{opt['event_cost_us']['p95']} us/event")
+
+    speedup = opt["req_per_wall_s"] / max(base["req_per_wall_s"], 1e-9)
+    result = {
+        "schema": "bench_hotpath/v1",
+        "config": {
+            "requests": len(trace),
+            "trace": f"bimodal {SHORT.mean_prompt}/{LONG.mean_prompt} "
+                     f"prompt @ {QPS_TOTAL} qps",
+            "router": ROUTER,
+            "replicas": REPLICAS,
+            "arch": ARCH,
+            "seed": args.seed,
+        },
+        "optimized": opt,
+        "baseline": base,
+        "speedup": round(speedup, 2),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"speedup: {speedup:.2f}x  -> {args.out}")
+
+    # cost changed, behavior must not have: the two runs simulated the
+    # exact same virtual history
+    for k in ("span_s", "completed", "rejected", "tokens", "migrations",
+              "events_dispatched"):
+        assert opt[k] == base[k], \
+            f"baseline/optimized diverged on {k}: {base[k]} vs {opt[k]}"
+    if args.smoke:
+        assert speedup >= SMOKE_MIN_SPEEDUP, (
+            f"hot-path smoke: expected >= {SMOKE_MIN_SPEEDUP}x over the "
+            f"pinned PR-4 baseline, measured {speedup:.2f}x")
+        print(f"SMOKE OK: {speedup:.2f}x >= {SMOKE_MIN_SPEEDUP}x")
+    return result
+
+
+if __name__ == "__main__":
+    main()

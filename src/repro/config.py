@@ -128,10 +128,22 @@ class ModelConfig:
     def ffn_at(self, pos: int) -> str:
         return self.ffn_pattern[pos % len(self.ffn_pattern)]
 
+    # NOTE on the ``self.__dict__`` memos below: the serving perfmodel
+    # prices every simulated step through these derived scalars, and each
+    # walks the full layer pattern.  They are pure in the (frozen) config,
+    # so the first result is stashed in the instance ``__dict__`` — the
+    # generated ``__eq__``/``__hash__`` only see declared fields, so the
+    # memo never leaks into config identity, and ``object.__setattr__``
+    # is not needed because the dict itself is mutable.
+
     @property
     def attn_layer_count(self) -> int:
-        return sum(1 for i in range(self.num_layers)
-                   if self.mixer_at(i) == "attn")
+        v = self.__dict__.get("_attn_layer_count")
+        if v is None:
+            v = sum(1 for i in range(self.num_layers)
+                    if self.mixer_at(i) == "attn")
+            self.__dict__["_attn_layer_count"] = v
+        return v
 
     @property
     def d_inner(self) -> int:
@@ -157,6 +169,12 @@ class ModelConfig:
 
     def param_count(self) -> int:
         """Analytic parameter count (logical, unpadded)."""
+        v = self.__dict__.get("_param_count")
+        if v is None:
+            v = self.__dict__["_param_count"] = self._param_count()
+        return v
+
+    def _param_count(self) -> int:
         d, L = self.d_model, self.num_layers
         D = self.head_dim
         total = self.vocab_size * d  # embed
@@ -200,6 +218,13 @@ class ModelConfig:
 
     def active_param_count(self) -> int:
         """Params touched per token (MoE: only top-k experts)."""
+        v = self.__dict__.get("_active_param_count")
+        if v is None:
+            v = self.__dict__["_active_param_count"] = \
+                self._active_param_count()
+        return v
+
+    def _active_param_count(self) -> int:
         if self.moe is None:
             return self.param_count()
         total = self.param_count()
@@ -213,11 +238,23 @@ class ModelConfig:
 
     def kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
         """Eq. (1) of the paper: 2 * L_attn * H_kv * D * E per token."""
-        return 2 * self.attn_layer_count * self.num_kv_heads * \
-            self.head_dim * dtype_bytes
+        key = ("_kv_bytes_per_token", dtype_bytes)
+        v = self.__dict__.get(key)
+        if v is None:
+            v = self.__dict__[key] = 2 * self.attn_layer_count * \
+                self.num_kv_heads * self.head_dim * dtype_bytes
+        return v
 
     def state_bytes_per_seq(self, dtype_bytes: int = 2) -> int:
         """Recurrent-state bytes per sequence (SSM/xLSTM layers)."""
+        key = ("_state_bytes_per_seq", dtype_bytes)
+        v = self.__dict__.get(key)
+        if v is None:
+            v = self.__dict__[key] = \
+                self._state_bytes_per_seq(dtype_bytes)
+        return v
+
+    def _state_bytes_per_seq(self, dtype_bytes: int = 2) -> int:
         total = 0
         m = self.mamba or MambaConfig()
         x = self.xlstm or XLSTMConfig()

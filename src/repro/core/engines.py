@@ -27,16 +27,16 @@ traces; tests/test_cluster.py single-replica equivalence).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import warnings
-from typing import Deque, Dict, List, Optional
+from typing import Dict, List, Optional
 
 from repro.config import ServeConfig
 from repro.core.events import (EventStream, FinishedEvent, PhaseEvent,
                                RejectedEvent, TokenEvent)
 from repro.core.executor import Executor, PerfModelExecutor
 from repro.core.preemption import DEFAULT_PREEMPTION, PreemptionPolicy
+from repro.core.queues import IndexedQueue
 from repro.core.request import Request, State
 from repro.core.scheduler import (DisaggScheduler, HybridScheduler,
                                   LaneState, RapidScheduler, SchedView,
@@ -135,13 +135,16 @@ class Engine:
             PerfModelExecutor(cfg, hw, colocated=sched.colocated,
                               lane_chips=lane_chips)
         self.arm = getattr(sched, "arm", None)     # rapid compat
-        # queues: named deques, also exposed as attributes for direct
-        # inspection (waiting_kv / waiting_prefill / pending_join / ...)
-        self.queues: Dict[str, Deque[Request]] = {
-            name: collections.deque() for name in sched.queue_names}
+        # queues: named order-preserving indexed queues (O(1) remove /
+        # membership + incremental load accounting, core/queues.py), also
+        # exposed as attributes for direct inspection (waiting_kv /
+        # waiting_prefill / pending_join / ...)
+        self.queues: Dict[str, IndexedQueue] = {
+            name: IndexedQueue(serve.page_size)
+            for name in sched.queue_names}
         for name, q in self.queues.items():
             setattr(self, name, q)
-        self.running: List[Request] = []
+        self.running = IndexedQueue(serve.page_size)
         self._lane_busy: Dict[str, bool] = {ln: False for ln in sched.lanes}
         self._lane_cost: Dict[str, object] = {ln: None for ln in sched.lanes}
         self._lane_f: Dict[str, Optional[float]] = \
@@ -340,6 +343,7 @@ class Engine:
                     continue
                 self.kv.append_token(r.rid)
             r.emit_token(now)
+            self.running.note_token(r)
             self.stream.emit(TokenEvent(r.rid, now, r.tokens_generated - 1))
             if r.done:
                 self.kv.free(r.rid)
@@ -357,6 +361,7 @@ class Engine:
         chunking = self.queues["chunking"]
         for r, take in chunks:
             r.prefill_tokens_done += take
+            chunking.note_chunk_progress(r, take)
             if r.prefill_tokens_done >= r.prompt_len:
                 r.t_prefill_end = now
                 r.emit_token(now)     # last chunk produces first token
@@ -381,6 +386,7 @@ class Engine:
                     continue
                 self.kv.append_token(r.rid)
             r.emit_token(now)
+            self.running.note_token(r)
             self.stream.emit(TokenEvent(r.rid, now, r.tokens_generated - 1))
             if r.done:
                 self.kv.free(r.rid)
@@ -509,6 +515,63 @@ class Engine:
 
     # -- load view ------------------------------------------------------------
     def load_snapshot(self) -> LoadSnapshot:
+        """O(1) load view from the incremental ``IndexedQueue`` counters.
+
+        Routers, admission and the autoscaler call this per arrival and
+        per tick; the PR-4 implementation re-walked every queue on every
+        call (kept below as ``load_snapshot_recompute`` — the reference
+        the property tests compare against, and the pinned baseline the
+        hot-path benchmark measures its speedup from)."""
+        sched = self.scheduler
+        ps = self.serve.page_size
+        queues = self.queues
+        queued = sum(len(queues[q]) for q in sched.count_queues)
+        tokens = sum(queues[q].prompt_tokens for q in sched.token_queues)
+        tokens += sum(queues[q].pending_prefill_tokens
+                      for q in sched.partial_token_queues)
+        tokens += self.inflight_prefill_tokens
+        pages = sum(queues[q].kv_pages for q in sched.unalloc_queues)
+        # split-pool engines: the same queued prompts also claim transient
+        # prefill-side pages before they ever reach the decode pool
+        prefill_free = prefill_total = prefill_pages = 0
+        if self.kv_p is not None:
+            prefill_free = self.kv_p.allocator.free_count
+            prefill_total = self.kv_p.allocator.num_blocks
+            prefill_pages = pages
+        running = len(self.running)
+        ctx = self.running.ctx_tokens
+        if sched.prefill_route == "transfer":
+            # transfers in flight count as imminent decode load: they are
+            # done with prefill but WILL join the decode batch, so both
+            # routers and the autoscaler's idle detection must see them
+            queued += self.inflight_transfers
+            running += self.inflight_transfers
+            ctx += self.inflight_transfer_tokens
+            pages += kv_pages_for(self.inflight_transfer_tokens, ps)
+        return LoadSnapshot(
+            queued_requests=queued,
+            queued_prefill_tokens=tokens,
+            running_decode=running,
+            decode_ctx_tokens=ctx,
+            kv_utilization=self.kv.utilization,
+            prefill_busy=self.prefill_busy,
+            decode_busy=self.decode_busy,
+            kv_free_blocks=self.kv.allocator.free_count,
+            kv_total_blocks=self.kv.allocator.num_blocks,
+            queued_kv_pages=pages,
+            prefill_kv_free_blocks=prefill_free,
+            prefill_kv_total_blocks=prefill_total,
+            queued_prefill_kv_pages=prefill_pages,
+            chips_prefill=getattr(self, "chips_p", self.serve.chips),
+            chips_decode=getattr(self, "chips_d", self.serve.chips))
+
+    def load_snapshot_recompute(self) -> LoadSnapshot:
+        """Recompute the load view from scratch by walking every queue —
+        the PR-4 O(n) implementation, kept verbatim as (a) the oracle the
+        hypothesis property tests compare the incremental counters
+        against and (b) the pinned pre-optimization baseline
+        ``benchmarks/bench_hotpath.py`` measures its speedup from.
+        Must stay semantically identical to ``load_snapshot``."""
         sched = self.scheduler
         ps = self.serve.page_size
         queued = sum(len(self.queues[q]) for q in sched.count_queues)
@@ -520,8 +583,6 @@ class Engine:
         tokens += self.inflight_prefill_tokens
         pages = sum(kv_pages_for(r.prompt_len, ps)
                     for q in sched.unalloc_queues for r in self.queues[q])
-        # split-pool engines: the same queued prompts also claim transient
-        # prefill-side pages before they ever reach the decode pool
         prefill_free = prefill_total = prefill_pages = 0
         if self.kv_p is not None:
             prefill_free = self.kv_p.allocator.free_count
@@ -530,9 +591,6 @@ class Engine:
         running = len(self.running)
         ctx = sum(r.context_len for r in self.running)
         if sched.prefill_route == "transfer":
-            # transfers in flight count as imminent decode load: they are
-            # done with prefill but WILL join the decode batch, so both
-            # routers and the autoscaler's idle detection must see them
             queued += self.inflight_transfers
             running += self.inflight_transfers
             ctx += self.inflight_transfer_tokens

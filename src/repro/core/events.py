@@ -23,6 +23,14 @@ exactly ``max_new_tokens`` on success (asserted in tests/test_events.py).
 the virtual clock "streaming" means subscribers run inline at emission
 time (same ``loop.now``), and ``events()`` returns everything emitted so
 far for post-hoc consumers.
+
+Hot-path notes (the stream sits on every token of every request): the
+event records are ``slots=True`` frozen dataclasses (no per-instance
+``__dict__``), ``emit`` skips the per-rid fanout dict entirely while no
+per-rid subscriber exists (the overwhelmingly common case), and
+``events()`` amortizes its immutable replay view — the tuple is rebuilt
+only when something was emitted since the last call, so polling
+consumers stop paying a full copy per read.
 """
 from __future__ import annotations
 
@@ -30,21 +38,21 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class TokenEvent:
     rid: int
     t: float
     index: int          # 0-based position in the request's output
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class PhaseEvent:
     rid: int
     t: float
     phase: str          # queued|kv_allocated|prefill|transfer|decode|preempted
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class FinishedEvent:
     rid: int
     t: float
@@ -54,7 +62,7 @@ class FinishedEvent:
     preemptions: int = 0
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class RejectedEvent:
     rid: int
     t: float
@@ -83,13 +91,15 @@ class EventStream:
         self._log: List[Event] = []
         self._subs: List[Callable[[Event], None]] = []
         self._per_rid: Dict[int, List[Callable[[Event], None]]] = {}
+        self._view: Tuple[Event, ...] = ()   # cached replay tuple
 
     def emit(self, ev: Event) -> None:
         self._log.append(ev)
         for fn in self._subs:
             fn(ev)
-        for fn in self._per_rid.get(ev.rid, ()):
-            fn(ev)
+        if self._per_rid:                    # skip fanout dict when empty
+            for fn in self._per_rid.get(ev.rid, ()):
+                fn(ev)
 
     def subscribe(self, fn: Callable[[Event], None],
                   rid: Optional[int] = None) -> Callable[[Event], None]:
@@ -106,9 +116,16 @@ class EventStream:
             self._subs.remove(fn)
         else:
             self._per_rid[rid].remove(fn)
+            if not self._per_rid[rid]:       # keep the empty-dict fast path
+                del self._per_rid[rid]
 
     def events(self) -> Tuple[Event, ...]:
-        return tuple(self._log)
+        """Immutable replay log.  Amortized: the tuple is only rebuilt
+        when events were emitted since the previous call, so interleaved
+        emit/read patterns cost O(new events), not O(log) per read."""
+        if len(self._view) != len(self._log):
+            self._view = tuple(self._log)
+        return self._view
 
     def __len__(self) -> int:
         return len(self._log)

@@ -100,9 +100,12 @@ class PerfModelExecutor(Executor):
             p_out = LaunchOutcome(self._step_time(dur, serve), cost)
         if plan.decode is not None:
             chips = self._chips("decode", serve)
-            batch = list(view.running) + list(plan.decode.joins)
-            ctx_total = float(sum(r.context_len for r in batch))
-            cost = C.decode_cost(self.cfg, len(batch), ctx_total, chips)
+            # running batch context from the queue's incremental counter
+            # (identical integer sum, without the O(batch) walk)
+            bs = len(view.running) + len(plan.decode.joins)
+            ctx_total = float(view.running.ctx_tokens +
+                              sum(r.context_len for r in plan.decode.joins))
+            cost = C.decode_cost(self.cfg, bs, ctx_total, chips)
             if p_out is not None:
                 p_cost = p_out.cost          # launched in this same plan
             else:
@@ -124,7 +127,7 @@ class PerfModelExecutor(Executor):
                     self.cfg, take, r.prefill_tokens_done, chips)
             bs = len(view.running)
             if bs:
-                ctx_total = float(sum(r.context_len for r in view.running))
+                ctx_total = float(view.running.ctx_tokens)
                 cost = cost + C.decode_cost(self.cfg, bs, ctx_total, chips)
             dur = I.phase_time(cost, self.hw, chips)
             h_out = LaunchOutcome(self._step_time(dur, serve), cost)

@@ -77,6 +77,28 @@ def build_decode_profile(cfg, hw: HardwareSpec, chips: int,
     return DecodeProfile(list(BS_BUCKETS), min_f, overalloc_limit, slo_itl_s)
 
 
+_PROFILE_CACHE: Dict[tuple, DecodeProfile] = {}
+
+
+def cached_decode_profile(cfg, hw: HardwareSpec, chips: int,
+                          slo_itl_s: float, avg_ctx: int,
+                          tp: Optional[int] = None) -> DecodeProfile:
+    """Memoized ``build_decode_profile`` for runtime consumers.
+
+    Every autoscaled rapid replica clone used to re-run the full offline
+    sweep (``len(BS_BUCKETS) * len(F_GRID)`` perfmodel evaluations) for a
+    (model, chips, SLO) triple the fleet already profiled; identical
+    triples now share one read-only ``DecodeProfile``.  Tests that
+    monkeypatch the interference model must call ``build_decode_profile``
+    directly — this cache assumes the real perfmodel."""
+    key = (cfg, hw, chips, slo_itl_s, avg_ctx, tp)
+    prof = _PROFILE_CACHE.get(key)
+    if prof is None:
+        prof = _PROFILE_CACHE[key] = build_decode_profile(
+            cfg, hw, chips, slo_itl_s, avg_ctx, tp=tp)
+    return prof
+
+
 @dataclasses.dataclass
 class Allocation:
     f_decode: Optional[float]   # None => overallocation

@@ -35,11 +35,13 @@ against golden traces in tests/test_parity.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import Deque, Dict, List, Mapping, Optional, Tuple
+import itertools
+from typing import Dict, List, Mapping, Optional, Tuple
 
+from repro.core.queues import IndexedQueue
 from repro.core.request import Request, State
 from repro.core.resource_manager import (AdaptiveResourceManager,
-                                         build_decode_profile)
+                                         cached_decode_profile)
 from repro.kvcache import KVCacheManager, kv_pages_for
 from repro.perfmodel import costs as C
 from repro.perfmodel.hw import TPU_V5E, HardwareSpec
@@ -99,8 +101,8 @@ class SchedView:
     """
     now: float
     serve: object                       # ServeConfig
-    queues: Mapping[str, Deque[Request]]
-    running: List[Request]
+    queues: Mapping[str, IndexedQueue]
+    running: IndexedQueue
     kv: KVCacheManager
     kv_p: Optional[KVCacheManager]
     lanes: Mapping[str, LaneState]
@@ -258,7 +260,7 @@ class RapidScheduler(Scheduler):
 
     def __init__(self, cfg, serve, hw: HardwareSpec = TPU_V5E,
                  avg_ctx_hint: int = 4096):
-        profile = build_decode_profile(
+        profile = cached_decode_profile(
             cfg, hw, serve.chips, serve.slo.itl_ms / 1e3, avg_ctx_hint,
             tp=serve.chips)
         self.arm = AdaptiveResourceManager(profile)
@@ -275,7 +277,7 @@ class RapidScheduler(Scheduler):
         # victim only after a finish returns capacity
         if view.wake.kind == "arrival" or view.wake.kv_freed:
             free = view.kv.allocator.free_count
-            for r in list(view.queues["waiting_kv"]):
+            for r in view.queues["waiting_kv"]:
                 if not self._fits_pool(r.prompt_len, view.kv, ps):
                     plan.rejects.append((r, "waiting_kv"))
                     continue
@@ -291,7 +293,8 @@ class RapidScheduler(Scheduler):
         if not view.lanes["prefill"].busy:
             batch: List[Request] = []
             tokens = 0
-            for r in list(view.queues["waiting_prefill"]) + admitted:
+            for r in itertools.chain(view.queues["waiting_prefill"],
+                                     admitted):
                 if batch and tokens + r.prompt_len > serve.prefill_max_tokens:
                     break
                 batch.append(r)
@@ -351,7 +354,7 @@ class HybridScheduler(Scheduler):
         free = view.kv.allocator.free_count
         slots = len(view.queues["chunking"]) + len(view.running)
         admitted: List[Request] = []
-        for r in list(view.queues["waiting"]):
+        for r in view.queues["waiting"]:
             if not self._fits_pool(r.prompt_len, view.kv, ps):
                 plan.rejects.append((r, "waiting"))
                 continue
@@ -368,7 +371,7 @@ class HybridScheduler(Scheduler):
         bs = len(view.running)
         budget = max(0, serve.token_budget - bs)
         chunks: List[Tuple[Request, int]] = []
-        for r in list(view.queues["chunking"]) + admitted:
+        for r in itertools.chain(view.queues["chunking"], admitted):
             if budget <= 0:
                 break
             take = min(serve.chunk_size, budget,
@@ -460,7 +463,7 @@ class DisaggScheduler(Scheduler):
             free_p = view.kv_p.allocator.free_count
             batch: List[Request] = []
             tokens = 0
-            for r in list(view.queues["waiting_prefill"]):
+            for r in view.queues["waiting_prefill"]:
                 if not self._fits_pool(r.prompt_len, view.kv_p, ps) or \
                         not self._fits_pool(r.prompt_len, view.kv, ps):
                     # oversized for the prefill pool (queue-head wedge) or
@@ -486,7 +489,7 @@ class DisaggScheduler(Scheduler):
             slots = len(view.running)
             newly = [a.request for a in plan.admits
                      if a.to_queue == "pending_join"]
-            for r in list(view.queues["pending_join"]) + newly:
+            for r in itertools.chain(view.queues["pending_join"], newly):
                 if slots >= serve.max_batch_slots:
                     break
                 joins.append(r)

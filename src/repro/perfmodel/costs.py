@@ -6,6 +6,15 @@ has no TPU).  The same three terms are independently derived from the
 assert the analytic and HLO-derived FLOP counts agree within tolerance,
 which keeps the simulator honest.
 
+All pricing functions are pure in their arguments, so the step-cost
+entry points are memoized (``functools.lru_cache``) on their exact
+operating points: the projection autoscaler re-prices identical
+``LoadSnapshot``s every tick, the SLO-aware router re-prices repeated
+(backlog, batch) pairs per arrival, and hybrid chunk boundaries land on
+quantized (chunk, ctx) points — all of which now hit the cache instead
+of re-walking the layer pattern.  Cached values are the *same* objects,
+so memoization can never change simulator behavior, only its cost.
+
 Conventions:
   * matmul FLOPs = 2*M*N*K;   causal attention scores halved.
   * weights are streamed from HBM once per step (valid for serving batch
@@ -16,8 +25,8 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
-
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +54,7 @@ def model_flops_per_token(cfg) -> float:
     return 6.0 * cfg.active_param_count()
 
 
+@functools.lru_cache(maxsize=None)
 def weight_bytes(cfg, dtype_bytes: int = 2) -> float:
     """Bytes of weights streamed per step (MoE: only routed experts are
     read in expectation when the batch is small; we charge min(full,
@@ -52,6 +62,7 @@ def weight_bytes(cfg, dtype_bytes: int = 2) -> float:
     return cfg.param_count() * dtype_bytes
 
 
+@functools.lru_cache(maxsize=65536)
 def active_weight_bytes(cfg, tokens: int, dtype_bytes: int = 2) -> float:
     """Expected weight bytes touched by `tokens` tokens in one step.
 
@@ -94,6 +105,9 @@ def _attn_flops(cfg, q_tokens: float, ctx_tokens: float,
 
 def _ssm_flops(cfg, tokens: float) -> float:
     """Selective-scan / xLSTM recurrence FLOPs (non-matmul part)."""
+    if not any(m in ("mamba", "mlstm", "slstm")
+               for m in cfg.layer_pattern):
+        return 0.0    # pure-attention arch: skip the per-layer walk
     total = 0.0
     for i in range(cfg.num_layers):
         mx = cfg.mixer_at(i)
@@ -123,11 +137,15 @@ def _tp_collective_bytes(cfg, tokens: float, tp: int,
 def prefill_cost(cfg, seq_lens: Sequence[int], tp: int = 1,
                  dtype_bytes: int = 2) -> StepCost:
     """One prefill step over whole prompts (RAPID: no chunking)."""
+    return _prefill_cost(cfg, tuple(seq_lens), tp, dtype_bytes)
+
+
+@functools.lru_cache(maxsize=65536)
+def _prefill_cost(cfg, seq_lens: tuple, tp: int,
+                  dtype_bytes: int) -> StepCost:
     T = float(sum(seq_lens))
     if T == 0:
         return ZERO_COST
-    sq = float(sum(s * s for s in seq_lens))
-    del sq
     n_active = cfg.active_param_count()
     flops = 2.0 * n_active * T + \
         (sum(_attn_flops(cfg, s, s, True) for s in seq_lens)
@@ -139,6 +157,7 @@ def prefill_cost(cfg, seq_lens: Sequence[int], tp: int = 1,
     return StepCost(flops, bytes_, coll)
 
 
+@functools.lru_cache(maxsize=65536)
 def chunk_prefill_cost(cfg, chunk_tokens: int, ctx_so_far: int,
                        tp: int = 1, dtype_bytes: int = 2) -> StepCost:
     """One chunk of a chunked prefill: chunk_tokens queries attend to
@@ -156,6 +175,7 @@ def chunk_prefill_cost(cfg, chunk_tokens: int, ctx_so_far: int,
     return StepCost(flops, bytes_, coll)
 
 
+@functools.lru_cache(maxsize=65536)
 def decode_cost(cfg, batch: int, ctx_tokens_total: float, tp: int = 1,
                 dtype_bytes: int = 2) -> StepCost:
     """One decode iteration: `batch` single-token queries, total live

@@ -24,6 +24,7 @@ into durations, modeling:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 from repro.perfmodel.costs import StepCost
@@ -109,6 +110,7 @@ def overlapped_times(p_cost: Optional[StepCost], d_cost: Optional[StepCost],
     return OverlapResult(t_p, t_d, f_p, f_d, "distinct")
 
 
+@functools.lru_cache(maxsize=65536)
 def forecast_phase_times(p_cost: Optional[StepCost],
                          d_cost: Optional[StepCost], hw: HardwareSpec,
                          chips_p: int, chips_d: int, *,
@@ -121,7 +123,12 @@ def forecast_phase_times(p_cost: Optional[StepCost],
     ``overlapped_times`` on the shared chip group; split-pool (disagg)
     replicas run each phase at its own pool's ``phase_time`` with no
     cross-phase interference (§3.2: the pools share nothing but the
-    transfer link)."""
+    transfer link).
+
+    Memoized: the projection autoscaler and admission controller call
+    this with the same (cost, chips) operating points tick after tick
+    whenever the fleet state is unchanged; caching returns the identical
+    tuple without re-running the overlap model."""
     if colocated:
         r = overlapped_times(p_cost, d_cost, hw, chips_p,
                              f_decode=f_decode)

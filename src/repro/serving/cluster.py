@@ -73,6 +73,7 @@ from typing import (TYPE_CHECKING, Callable, Dict, List, Optional,
 
 from repro.config import ServeConfig
 from repro.core.events import EventStream, RejectedEvent
+from repro.core.queues import IndexedQueue
 from repro.core.request import Request, State
 from repro.perfmodel import costs as C
 from repro.perfmodel import interference as I
@@ -142,7 +143,10 @@ class Replica:
     engine: BaseEngine
     serve: ServeConfig
     routable: bool = True
-    assigned: List[Request] = dataclasses.field(default_factory=list)
+    # indexed so the rebalance tick's eviction is O(1), not an O(n)
+    # list.remove over every request the replica ever served
+    assigned: IndexedQueue = dataclasses.field(
+        default_factory=IndexedQueue)
 
     @property
     def name(self) -> str:
@@ -495,7 +499,8 @@ class Cluster:
         # string, so autoscaled replicas keep per-pool chip shapes
         self._base_specs.setdefault(spec.mode, spec)
         rep = Replica(idx=len(self.replicas), mode=spec.mode,
-                      engine=engine, serve=serve)
+                      engine=engine, serve=serve,
+                      assigned=IndexedQueue(serve.page_size))
         rep.engine.subscribe(self.stream.emit)   # forward into fleet stream
         self.replicas.append(rep)
         return rep
@@ -563,8 +568,13 @@ class Cluster:
         return [RequestRecord.from_request(r) for r in self._all], span
 
     def _outstanding(self) -> bool:
-        return any(r.t_finish is None and r.state is not State.REJECTED
-                   for r in self._all)
+        # O(1): every request ends with exactly one terminal event
+        # (FinishedEvent / RejectedEvent, incl. cluster-side admission
+        # rejections), and StreamMetrics folds each into one record —
+        # so "any request still in flight" is a count comparison, not a
+        # walk over every request ever enqueued (the PR-4 version
+        # rescanned self._all on every rebalance/scale tick)
+        return len(self._all) > len(self.metrics.records)
 
     # -- per-replica views -----------------------------------------------------
     def per_replica_records(self) -> Dict[str, List[RequestRecord]]:

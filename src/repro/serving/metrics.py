@@ -16,6 +16,7 @@ blocking ``run()``.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
@@ -23,6 +24,30 @@ import numpy as np
 from repro.config import SLOConfig
 from repro.core.events import FinishedEvent, RejectedEvent, TokenEvent
 from repro.core.request import Request, State
+
+
+def percentile_linear(vals: Sequence[float], q: float) -> float:
+    """Scalar ``np.percentile(vals, q)`` (default linear interpolation),
+    bit-identical to numpy on float64 inputs but without the per-call
+    array/ufunc machinery — this runs once per *finished request* (both
+    record-assembly paths), where numpy's constant overhead dominated
+    the whole metrics pipeline.  Replicates numpy's ``_lerp`` exactly,
+    including the ``gamma >= 0.5`` symmetric form (golden parity asserts
+    the results stay bit-equal to the recorded traces)."""
+    a = sorted(vals)
+    n = len(a)
+    if n == 1:
+        return float(a[0])
+    vi = (q / 100.0) * (n - 1)
+    lo = math.floor(vi)
+    gamma = vi - lo
+    lo = int(lo)
+    hi = lo + 1 if lo + 1 < n else n - 1
+    x, y = float(a[lo]), float(a[hi])
+    diff = y - x
+    if gamma >= 0.5:
+        return y - diff * (1.0 - gamma)
+    return x + diff * gamma
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +68,7 @@ class RequestRecord:
         return cls(
             rid=r.rid, arrival=r.arrival, prompt_len=r.prompt_len,
             output_len=r.tokens_generated, ttft=r.ttft,
-            itl_p95=float(np.percentile(itls, 95)) if itls else None,
+            itl_p95=percentile_linear(itls, 95) if itls else None,
             finish=r.t_finish, preemptions=r.preemptions,
             rejected=r.state is State.REJECTED)
 
@@ -66,7 +91,13 @@ class StreamMetrics:
 
     def __call__(self, ev) -> None:
         if isinstance(ev, TokenEvent):
-            self._token_times.setdefault(ev.rid, []).append(ev.t)
+            # hot path: one call per generated token — avoid setdefault's
+            # unconditional empty-list allocation on every hit
+            times = self._token_times.get(ev.rid)
+            if times is None:
+                self._token_times[ev.rid] = [ev.t]
+            else:
+                times.append(ev.t)
         elif isinstance(ev, FinishedEvent):
             ts = self._token_times.pop(ev.rid, [])
             itls = [b - a for a, b in zip(ts, ts[1:])]
@@ -74,7 +105,7 @@ class StreamMetrics:
                 rid=ev.rid, arrival=ev.arrival, prompt_len=ev.prompt_len,
                 output_len=ev.output_len,
                 ttft=ts[0] - ev.arrival if ts else None,
-                itl_p95=float(np.percentile(itls, 95)) if itls else None,
+                itl_p95=percentile_linear(itls, 95) if itls else None,
                 finish=ev.t, preemptions=ev.preemptions, rejected=False)
             self.records.append(rec)
             self.finished.append(rec)

@@ -8,13 +8,23 @@ collection time — tier-1 must never *error* at collection — and say so
 in the report header.
 """
 import importlib.util
+import pathlib
+import sys
 
 import jax
 import pytest
 
+# tests import the benchmark harness (e.g. test_events' conservation
+# check on the bench_hotpath trace); make the repo root importable even
+# when pytest is launched as a bare console script (no cwd on sys.path)
+_ROOT = str(pathlib.Path(__file__).resolve().parents[1])
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
 _HAS_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
 _HYPOTHESIS_MODULES = ["test_engines.py", "test_training.py",
-                       "test_router_properties.py"]
+                       "test_router_properties.py",
+                       "test_engine_accounting_properties.py"]
 
 collect_ignore = [] if _HAS_HYPOTHESIS else list(_HYPOTHESIS_MODULES)
 

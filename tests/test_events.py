@@ -151,3 +151,86 @@ def test_cluster_fleet_stream_merges_replicas():
         assert rec == legacy[rec.rid]
     # the cluster's own collector saw the same thing
     assert cluster.metrics.records == fleet.records
+
+
+# ---------------------------------------------------------------------------
+# PR-5: stream behavior under load (amortized events(), per-rid churn,
+# token conservation on the hot-path benchmark trace)
+# ---------------------------------------------------------------------------
+
+
+def test_per_rid_subscribe_unsubscribe_under_load():
+    """Per-rid consumers attach and detach while thousands of events
+    flow; each sees exactly its window, and a fully-detached stream
+    returns to the no-fanout fast path."""
+    from repro.core.events import EventStream, TokenEvent
+
+    stream = EventStream()
+    seen = {rid: [] for rid in range(8)}
+    subs = {}
+    for i in range(5000):
+        rid = i % 16
+        if i == 500:
+            for r in range(8):
+                subs[r] = stream.subscribe(seen[r].append, rid=r)
+        if i == 3500:
+            for r in range(4):
+                stream.unsubscribe(subs.pop(r), rid=r)
+        stream.emit(TokenEvent(rid, float(i), i // 16))
+    # rids 0-3: subscribed for emissions 500..3499 only
+    for r in range(4):
+        assert [ev.t for ev in seen[r]] == \
+            [float(i) for i in range(500, 3500) if i % 16 == r]
+    # rids 4-7: subscribed from 500 to the end
+    for r in range(4, 8):
+        assert [ev.t for ev in seen[r]] == \
+            [float(i) for i in range(500, 5000) if i % 16 == r]
+    for r in range(4, 8):
+        stream.unsubscribe(subs[r], rid=r)
+    assert not stream._per_rid     # empty-dict fast path restored
+
+
+def test_events_stable_across_interleaved_emit_read():
+    """events() snapshots are immutable and amortized: re-reads without
+    new emissions return the same tuple; earlier snapshots never mutate
+    under later emissions."""
+    from repro.core.events import EventStream, TokenEvent
+
+    stream = EventStream()
+    snapshots = []
+    for i in range(200):
+        stream.emit(TokenEvent(0, float(i), i))
+        if i % 10 == 0:
+            view = stream.events()
+            assert stream.events() is view          # cached until emit
+            snapshots.append((i + 1, view))
+    for n, view in snapshots:
+        assert len(view) == n                       # old snapshots frozen
+        assert [ev.index for ev in view] == list(range(n))
+    assert len(stream.events()) == len(stream) == 200
+
+
+def test_token_conservation_on_bench_trace():
+    """On (a slice of) the hot-path benchmark's bimodal cluster trace:
+    every token emitted is exactly one TokenEvent, and the stream's
+    per-request counts equal the sealed records' output_len."""
+    from benchmarks.bench_hotpath import REPLICAS, ROUTER, _serve, \
+        bimodal_trace
+    from repro.core.events import TokenEvent as TE
+
+    reqs = bimodal_trace(400, seed=11)
+    cluster = Cluster(CFG, _serve(), REPLICAS, router=ROUTER)
+    cluster.run([copy.deepcopy(r) for r in reqs])
+    tokens_by_rid = {}
+    for ev in cluster.events():
+        if isinstance(ev, TE):
+            tokens_by_rid[ev.rid] = tokens_by_rid.get(ev.rid, 0) + 1
+    recs = {r.rid: r for r in cluster.metrics.records}
+    assert set(recs) == {r.rid for r in reqs}
+    emitted = sum(tokens_by_rid.values())
+    recorded = sum(r.output_len for r in recs.values())
+    assert emitted == recorded, "token conservation violated"
+    for rid, rec in recs.items():
+        assert tokens_by_rid.get(rid, 0) == rec.output_len
+        if not rec.rejected:
+            assert rec.output_len > 0

@@ -1,0 +1,210 @@
+"""Incremental load accounting: pinned values + recompute equivalence.
+
+``Engine.load_snapshot()`` is now O(1) over ``IndexedQueue`` counters;
+``Engine.load_snapshot_recompute()`` is the retained PR-4 full rescan.
+This module (a) pins queued-token / queued-page numbers for all three
+schedulers against hand-computed values — including the queues that
+appear in BOTH ``token_queues`` and ``unalloc_queues``, which the old
+implementation double-walked — and (b) asserts counter == recompute at
+many points of real traces, including across preemption, migration and
+full drain.  The hypothesis suite (test_engine_accounting_properties)
+extends (b) to arbitrary op sequences.
+"""
+import copy
+
+import pytest
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core import make_engine
+from repro.core.request import Request
+from repro.kvcache import KVCacheManager
+from repro.serving import TRACES, generate_trace
+
+CFG = get_config("llama3-70b")
+
+
+def _serve(mode):
+    return ServeConfig(mode=mode, chips=32, slo=SLOConfig(itl_ms=100.0),
+                       disagg_split=(16, 16), max_batch_slots=128)
+
+
+def _req(rid, prompt, out=4, arrival=0.0):
+    return Request(rid=rid, arrival=arrival, prompt_len=prompt,
+                   max_new_tokens=out)
+
+
+def _check(eng):
+    assert eng.load_snapshot() == eng.load_snapshot_recompute()
+
+
+# ---------------------------------------------------------------------------
+# Hand-computed pins (page_size = 16 throughout)
+# ---------------------------------------------------------------------------
+
+
+def test_rapid_pinned_counts():
+    eng = make_engine("rapid", CFG, _serve("rapid"))
+    # decode pool of 16 pages: two 100-token prompts (7 pages each) fit,
+    # the third is blocked in waiting_kv
+    eng.kv = KVCacheManager(num_blocks=16, page_size=16)
+    s = eng.load_snapshot()
+    assert (s.queued_requests, s.queued_prefill_tokens,
+            s.queued_kv_pages) == (0, 0, 0)
+    eng.submit(_req(0, 100))     # admitted AND launched (prefill idle)
+    s = eng.load_snapshot()
+    # in-flight prefill tokens count toward the router's backlog signal
+    assert (s.queued_requests, s.queued_prefill_tokens,
+            s.queued_kv_pages) == (0, 100, 0)
+    assert s.prefill_busy and s.kv_free_blocks == 16 - 7
+    eng.submit(_req(1, 100))     # admitted, prefill busy -> queued
+    eng.submit(_req(2, 100))     # needs 7 pages, 2 free -> waiting_kv
+    s = eng.load_snapshot()
+    assert (s.queued_requests, s.queued_prefill_tokens,
+            s.queued_kv_pages) == (2, 300, 7)
+    assert s.kv_free_blocks == 2
+    _check(eng)
+
+
+def test_hybrid_pinned_counts():
+    eng = make_engine("hybrid", CFG, _serve("hybrid"))
+    eng.submit(_req(0, 1000))
+    s = eng.load_snapshot()
+    # admitted straight into chunking (PREFILLING) with a 512-token chunk
+    # launched; partial_token_queues count prompt - prefill_tokens_done,
+    # and nothing has completed a step yet
+    assert (s.queued_requests, s.queued_prefill_tokens,
+            s.queued_kv_pages) == (1, 1000, 0)
+    eng.loop.run()               # first step: 512 of 1000 tokens done
+    _check(eng)
+    # drained: every counter returns to zero exactly
+    s = eng.load_snapshot()
+    assert (s.queued_requests, s.queued_prefill_tokens, s.running_decode,
+            s.decode_ctx_tokens, s.queued_kv_pages) == (0, 0, 0, 0, 0)
+
+
+def test_hybrid_partial_tokens_after_one_chunk():
+    eng = make_engine("hybrid", CFG, _serve("hybrid"))
+    eng.enqueue([_req(0, 1000, out=8)])
+    # run exactly the arrival + one step completion: 512 tokens chunked
+    eng.loop.run(until=0.0)      # arrival only (chunk still in flight)
+    assert eng.load_snapshot().queued_prefill_tokens == 1000
+    eng.loop.run(until=10.0)     # step completes; second chunk in flight
+    s = eng.load_snapshot()
+    # whatever progressed, counters must equal the rescan exactly
+    _check(eng)
+    assert s.queued_prefill_tokens == \
+        sum(r.prompt_len - r.prefill_tokens_done for r in eng.chunking)
+
+
+def test_disagg_pinned_counts():
+    eng = make_engine("disagg", CFG, _serve("disagg"))
+    eng.submit(_req(0, 100))     # straight into the prefill launch
+    s = eng.load_snapshot()
+    assert (s.queued_requests, s.queued_prefill_tokens,
+            s.queued_kv_pages) == (0, 100, 0)
+    eng.submit(_req(1, 40))      # prefill busy: queued, 3 pages claimed
+    eng.submit(_req(2, 100))     # queued, 7 pages
+    s = eng.load_snapshot()
+    assert (s.queued_requests, s.queued_prefill_tokens,
+            s.queued_kv_pages) == (2, 240, 10)
+    assert s.prefill_kv_total_blocks > 0
+    assert s.queued_prefill_kv_pages == 10
+    _check(eng)
+
+
+def test_disagg_transfer_counts():
+    """In-flight transfers count as imminent decode load (queued +
+    running + ctx + pages) in both implementations."""
+    eng = make_engine("disagg", CFG, _serve("disagg"))
+    eng.enqueue([_req(0, 100, out=4)])
+    # drain prefill, stop inside the KV transfer window
+    while eng.inflight_transfers == 0 and eng.loop._heap:
+        eng.loop.run(until=eng.loop.now + 1e-3)
+    assert eng.inflight_transfers == 1
+    s = eng.load_snapshot()
+    assert s.queued_requests == 1 and s.running_decode == 1
+    assert s.decode_ctx_tokens == 100 and s.queued_kv_pages == 7
+    _check(eng)
+    eng.loop.run()
+    _check(eng)
+
+
+# ---------------------------------------------------------------------------
+# Recompute equivalence over real traces (sliced, preempting, migrating)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["rapid", "hybrid", "disagg"])
+def test_counters_equal_recompute_over_trace(mode):
+    reqs = generate_trace(TRACES["lmsys"], qps=6.0, duration_s=12, seed=3)
+    eng = make_engine(mode, CFG, _serve(mode))
+    eng.enqueue([copy.deepcopy(r) for r in reqs])
+    t = 0.0
+    while eng.loop._heap:
+        t += 0.25
+        eng.loop.run(until=t)
+        _check(eng)
+    _check(eng)
+    assert len(eng.finished) + len(eng.rejected) == len(reqs)
+
+
+@pytest.mark.parametrize("mode", ["rapid", "hybrid"])
+def test_counters_survive_preemption(mode):
+    """Tiny pool => preemption churn; counters must track evictions and
+    re-queues exactly."""
+    serve = ServeConfig(mode=mode, chips=32, slo=SLOConfig(itl_ms=100.0),
+                        max_batch_slots=8, max_seq_len=32768)
+    reqs = generate_trace(TRACES["loogle"], qps=3.0, duration_s=10, seed=7)
+    eng = make_engine(mode, CFG, serve)
+    eng.kv = KVCacheManager(num_blocks=1500, page_size=16)
+    eng.enqueue([copy.deepcopy(r) for r in reqs])
+    t, preempted = 0.0, 0
+    while eng.loop._heap:
+        t += 0.5
+        eng.loop.run(until=t)
+        _check(eng)
+        preempted = max(preempted,
+                        sum(r.preemptions for r in eng._all))
+    _check(eng)
+    assert preempted > 0, "trace did not exercise preemption"
+
+
+@pytest.mark.parametrize("mode", ["rapid", "hybrid", "disagg"])
+def test_counters_survive_migration(mode):
+    """evict_for_migration() + re-submit (the cluster rebalance path)
+    must leave both engines' counters equal to their rescans."""
+    reqs = generate_trace(TRACES["lmsys"], qps=8.0, duration_s=8, seed=5)
+    src = make_engine(mode, CFG, _serve(mode))
+    dst = make_engine(mode, CFG, _serve(mode), loop=src.loop)
+    src.enqueue([copy.deepcopy(r) for r in reqs])
+    t, moved = 0.0, 0
+    while src.loop._heap:
+        t += 0.5
+        src.loop.run(until=t)
+        evicted = src.evict_for_migration()
+        if evicted is not None:
+            dst.submit(evicted[0])
+            moved += 1
+        _check(src)
+        _check(dst)
+    assert moved > 0
+    assert src.load_snapshot() == src.load_snapshot_recompute()
+    assert dst.load_snapshot() == dst.load_snapshot_recompute()
+    done = len(src.finished) + len(dst.finished) + \
+        len(src.rejected) + len(dst.rejected)
+    assert done == len(reqs)
+
+
+def test_double_walk_queues_counted_once():
+    """Regression for the PR-4 double walk: rapid's ``waiting_kv`` is in
+    both ``token_queues`` and ``unalloc_queues``; its tokens must be
+    counted once and its pages once — in both implementations."""
+    eng = make_engine("rapid", CFG, _serve("rapid"))
+    eng.kv = KVCacheManager(num_blocks=8, page_size=16)
+    eng.submit(_req(0, 100))             # 7 pages: admitted + launched
+    eng.submit(_req(1, 64))              # 4 pages > 1 free: waiting_kv
+    eng.submit(_req(2, 32))              # 2 pages, FCFS-blocked behind r1
+    for snap in (eng.load_snapshot(), eng.load_snapshot_recompute()):
+        assert snap.queued_prefill_tokens == 100 + 64 + 32
+        assert snap.queued_kv_pages == 4 + 2
+        assert snap.queued_requests == 2

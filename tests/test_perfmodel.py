@@ -111,3 +111,76 @@ def test_analytic_flops_vs_hlo():
 def test_eq1_kv_bytes():
     """Paper Eq (1): 2*L*H*D*E per token."""
     assert CFG.kv_bytes_per_token(2) == 2 * 80 * 8 * 128 * 2
+
+
+# ---------------------------------------------------------------------------
+# PR-5: memoized pricing must be invisible (same values, cheaper calls)
+# ---------------------------------------------------------------------------
+
+
+def test_cached_costs_equal_uncached():
+    """The lru_cache layers must return exactly what a fresh computation
+    returns — memoization changes cost, never values."""
+    pts = [((CFG, (4096,), 32, 2), C._prefill_cost),
+           ((CFG, 2048, 512, 32, 2), C.chunk_prefill_cost),
+           ((CFG, 64, 64 * 2048.0, 32, 2), C.decode_cost)]
+    for args, fn in pts:
+        assert fn(*args) == fn.__wrapped__(*args)
+
+
+def test_cached_costs_return_identical_objects():
+    a = C.prefill_cost(CFG, [1024, 2048], tp=16)
+    b = C.prefill_cost(CFG, (1024, 2048), tp=16)   # list/tuple same key
+    assert a is b
+    d1 = C.decode_cost(CFG, 32, 32 * 1000.0, 16)
+    d2 = C.decode_cost(CFG, 32, 32 * 1000.0, 16)
+    assert d1 is d2
+
+
+def test_forecast_phase_times_memoized_and_exact():
+    p = C.prefill_cost(CFG, [4096], 16)
+    d = C.decode_cost(CFG, 8, 8 * 1024.0, 16)
+    got = I.forecast_phase_times(p, d, HW, 16, 16, colocated=False)
+    again = I.forecast_phase_times(p, d, HW, 16, 16, colocated=False)
+    assert got is again
+    want = (I.phase_time(p, HW, 16), I.phase_time(d, HW, 16))
+    assert got == want
+
+
+def test_cached_decode_profile_shared_and_equal():
+    from repro.core.resource_manager import (build_decode_profile,
+                                             cached_decode_profile)
+    cfg = get_reduced_config("llama3-70b")
+    a = cached_decode_profile(cfg, HW, 1, 0.1, 1024, tp=1)
+    b = cached_decode_profile(cfg, HW, 1, 0.1, 1024, tp=1)
+    assert a is b                                   # one shared profile
+    fresh = build_decode_profile(cfg, HW, 1, 0.1, 1024, tp=1)
+    assert a == fresh                               # and it is the real one
+
+
+def test_config_derived_scalars_memo_invisible():
+    """The __dict__ memos on ModelConfig must not leak into config
+    identity (equality/hash are field-based)."""
+    import dataclasses
+    cfg2 = dataclasses.replace(CFG)
+    assert CFG.param_count() == cfg2.param_count()
+    assert CFG.attn_layer_count == cfg2.attn_layer_count
+    assert CFG.kv_bytes_per_token() == cfg2.kv_bytes_per_token()
+    assert CFG.state_bytes_per_seq() == cfg2.state_bytes_per_seq()
+    assert cfg2 == CFG and hash(cfg2) == hash(CFG)
+
+
+def test_percentile_linear_matches_numpy():
+    import random
+
+    import numpy as np
+
+    from repro.serving.metrics import percentile_linear
+    rng = random.Random(7)
+    for _ in range(2000):
+        n = rng.randint(1, 50)
+        vals = [rng.uniform(0.0, 1.0) * 10 ** rng.randint(-4, 4)
+                for _ in range(n)]
+        for q in (50, 95, 99):
+            assert percentile_linear(vals, q) == \
+                float(np.percentile(vals, q))

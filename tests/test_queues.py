@@ -1,0 +1,113 @@
+"""IndexedQueue (core/queues.py): ordering, O(1) ops, aggregates."""
+import pytest
+
+from repro.core.queues import IndexedQueue
+from repro.core.request import Request
+from repro.kvcache import kv_pages_for
+
+
+def _r(rid, prompt=100, done=0, generated=0):
+    r = Request(rid=rid, arrival=0.0, prompt_len=prompt, max_new_tokens=8)
+    r.prefill_tokens_done = done
+    r.tokens_generated = generated
+    return r
+
+
+def _assert_aggregates(q):
+    members = list(q)
+    assert q.prompt_tokens == sum(r.prompt_len for r in members)
+    assert q.kv_pages == sum(kv_pages_for(r.prompt_len, q.page_size)
+                             for r in members)
+
+
+def test_fifo_order_and_appendleft():
+    q = IndexedQueue(page_size=16)
+    a, b, c = _r(1), _r(2), _r(3)
+    q.append(a)
+    q.append(b)
+    q.appendleft(c)
+    assert list(q) == [c, a, b]
+    assert q[0] is c and q[-1] is b
+    assert q.popleft() is c
+    assert q.pop() is b
+    assert list(q) == [a]
+
+
+def test_remove_preserves_order_and_aggregates():
+    q = IndexedQueue(page_size=16)
+    reqs = [_r(i, prompt=10 * (i + 1)) for i in range(5)]
+    for r in reqs:
+        q.append(r)
+    q.remove(reqs[2])
+    assert list(q) == [reqs[0], reqs[1], reqs[3], reqs[4]]
+    assert reqs[2] not in q and reqs[0] in q
+    _assert_aggregates(q)
+    assert len(q) == 4 and bool(q)
+
+
+def test_duplicate_rid_rejected():
+    q = IndexedQueue()
+    q.append(_r(7))
+    with pytest.raises(ValueError):
+        q.append(_r(7))
+
+
+def test_remove_absent_raises():
+    q = IndexedQueue()
+    q.append(_r(1))
+    with pytest.raises(ValueError):
+        q.remove(_r(2))
+    # same rid, different object: must not silently remove the member
+    with pytest.raises(ValueError):
+        q.remove(_r(1))
+    assert len(q) == 1
+
+
+def test_pending_tokens_follow_chunk_progress():
+    q = IndexedQueue(page_size=16)
+    r = _r(1, prompt=1000)
+    q.append(r)
+    assert q.pending_prefill_tokens == 1000
+    r.prefill_tokens_done += 300
+    q.note_chunk_progress(r, 300)
+    assert q.pending_prefill_tokens == 700
+    # removal subtracts the *tracked* contribution, not a stale one
+    q.remove(r)
+    assert q.pending_prefill_tokens == 0
+    assert q.prompt_tokens == 0 and q.kv_pages == 0
+
+
+def test_ctx_tokens_follow_note_token():
+    q = IndexedQueue()
+    r = _r(1, prompt=50, generated=2)
+    q.append(r)
+    assert q.ctx_tokens == 52
+    r.tokens_generated += 1
+    q.note_token(r)
+    assert q.ctx_tokens == 53
+    q.remove(r)
+    assert q.ctx_tokens == 0
+
+
+def test_contribution_snapshot_survives_unnoted_mutation():
+    """A field mutated while queued WITHOUT a note hook (e.g. a chunking
+    request emitting its first token just before leaving the queue) must
+    not corrupt the aggregate on removal."""
+    q = IndexedQueue()
+    r = _r(1, prompt=50)
+    q.append(r)
+    r.tokens_generated += 4          # no note_token on purpose
+    q.remove(r)
+    assert q.ctx_tokens == 0
+
+
+def test_peek_empty_and_middle_index():
+    q = IndexedQueue()
+    with pytest.raises(IndexError):
+        q[0]
+    reqs = [_r(i) for i in range(4)]
+    for r in reqs:
+        q.append(r)
+    assert q[1] is reqs[1] and q[-2] is reqs[2]
+    with pytest.raises(IndexError):
+        q[9]

@@ -55,3 +55,41 @@ def test_events_scheduled_during_run_respect_horizon():
     assert fired == [0.0, 1.0, 2.0]
     loop.run(until=4.5)
     assert fired == [0.0, 1.0, 2.0, 3.0, 4.0]
+
+
+def test_stats_count_dispatched_and_peak_heap():
+    loop = EventLoop()
+    for t in (1.0, 2.0, 3.0):
+        loop.at(t, lambda: None)
+    assert loop.stats.peak_heap == 3
+    assert loop.stats.dispatched == 0
+    loop.run()
+    assert loop.stats.dispatched == 3
+    assert loop.stats.clamped == 0
+
+
+def test_stats_count_past_due_clamps():
+    """Regression: at() used to silently snap past-due times to now;
+    the clamp is still applied (no reordering) but now it is counted."""
+    loop = EventLoop()
+    fired = []
+    loop.at(5.0, lambda: loop.at(1.0, lambda: fired.append(loop.now)))
+    loop.run()
+    assert fired == [5.0]          # clamped to now, not delivered at 1.0
+    assert loop.stats.clamped == 1
+    assert loop.stats.dispatched == 2
+
+
+def test_stats_float_jitter_not_counted_as_clamp():
+    loop = EventLoop()
+    loop.at(1.0, lambda: loop.at(loop.now - 1e-15, lambda: None))
+    loop.run()
+    assert loop.stats.clamped == 0
+
+
+def test_stats_as_dict():
+    loop = EventLoop()
+    loop.at(0.5, lambda: None)
+    loop.run()
+    assert loop.stats.as_dict() == \
+        {"dispatched": 1, "clamped": 0, "peak_heap": 1}
