@@ -4,8 +4,9 @@
 #   make test       tier-1 suite (what the driver runs) + junit report
 #   make smoke      tier-1 + quick benchmark smokes (single-engine
 #                   fig8/9/10/11, cluster fig12, admission/preemption
-#                   fig13, projection-driven scaling fig14, hot-path
-#                   simulator-throughput bench)
+#                   fig13, projection-driven scaling fig14, multi-tenant
+#                   workload classes fig15, hot-path simulator-
+#                   throughput bench)
 #   make bench-hotpath  full hot-path macro-benchmark; writes
 #                   BENCH_hotpath.json (simulated req/wall-s, per-event
 #                   cost, speedup vs the pinned pre-PR-5 baseline)
@@ -32,6 +33,7 @@ smoke: test
 	$(PY) -m benchmarks.fig12_cluster_goodput --smoke
 	$(PY) -m benchmarks.fig13_admission_preemption --smoke
 	$(PY) -m benchmarks.fig14_projection_scaling --smoke
+	$(PY) -m benchmarks.fig15_workload_classes --smoke
 	$(PY) -m benchmarks.bench_hotpath --smoke
 
 bench-hotpath:

@@ -341,6 +341,11 @@ class ServeConfig:
     # disagg split (prefill chips, decode chips)
     disagg_split: tuple = (4, 4)
     kv_transfer_gbps: float = 50.0  # ICI link for intra-node KV transfer
+    # session prefix cache: fraction of the decode pool a finished
+    # session's KV may keep occupying so the next turn skips re-prefill
+    # of the shared prefix.  Inert (no blocks retained) unless requests
+    # carry session ids, so the default single-class path is unchanged.
+    session_cache_frac: float = 0.25
     # adaptive resource manager
     overalloc_decode_bs_limit: int = 16  # Fig 7 crossover (profiled)
     scheduler_overhead_ms: float = 2.0   # CPU work per step (sync path)

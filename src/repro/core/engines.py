@@ -96,6 +96,9 @@ class LoadSnapshot:
     queued_prefill_kv_pages: int = 0
     chips_prefill: int = 0
     chips_decode: int = 0
+    # decode-pool blocks parked for finished sessions (prefix cache) —
+    # allocated but reclaimable, so admission adds them to free headroom
+    kv_session_blocks: int = 0
 
     @property
     def prefill_kv_utilization(self) -> float:
@@ -124,7 +127,14 @@ class Engine:
         self.preempt_policy = preempt_policy
         sched = self.scheduler
         pools = sched.pool_blocks(cfg, serve, hw)
-        self.kv = KVCacheManager(pools["decode"], serve.page_size)
+        # session prefix cache budget: inert unless requests carry
+        # session ids AND the topology keeps KV resident across turns
+        # (colocated join-route engines; disagg decode KV is freed on
+        # finish like before)
+        session_blocks = int(serve.session_cache_frac * pools["decode"]) \
+            if sched.prefill_route == "join" else 0
+        self.kv = KVCacheManager(pools["decode"], serve.page_size,
+                                 session_cache_blocks=session_blocks)
         self.kv_p = KVCacheManager(pools["prefill"], serve.page_size) \
             if "prefill" in pools else None
         lane_chips = sched.lane_chips(serve)
@@ -231,6 +241,7 @@ class Engine:
 
     def _apply(self, plan: StepPlan, view: SchedView) -> None:
         now = self.loop.now
+        failed_admits: set = set()
         for r, qname in plan.rejects:
             if qname is None:                     # in-flight transfer
                 self.inflight_transfers -= 1
@@ -245,7 +256,35 @@ class Engine:
                 self.inflight_transfer_tokens -= r.prompt_len
             else:
                 self.queues[adm.from_queue].remove(r)
-            r.blocks = self.kv.allocate_prompt(r.rid, r.prompt_len)
+            # clamp the trace-optimistic shared prefix to what is
+            # actually parked HERE (sessions may land on a replica
+            # without their prefix, or the cache may have evicted it);
+            # transfer-route (disagg) engines never park and sessionless
+            # requests have no cache entry, so the clamp zeroes the
+            # field there — prefill never skips tokens without KV
+            r.cached_prefix_len = self.kv.session_hit_tokens(
+                r.session_id, r.prompt_len, r.cached_prefix_len)
+            try:
+                r.blocks = self.kv.allocate_prompt(
+                    r.rid, r.prompt_len, session_id=r.session_id,
+                    max_prefix=r.cached_prefix_len)
+            except OutOfBlocks:
+                # defensive: scheduler projections and pool state can
+                # only drift on sessionful traces (adoption races);
+                # requeue instead of crashing the loop.  Unreachable on
+                # the default single-class path.
+                r.cached_prefix_len = 0
+                if adm.from_queue is None:
+                    self.inflight_transfers += 1
+                    self.inflight_transfer_tokens += r.prompt_len
+                    self.loop.after(
+                        self.serve.slo.itl_ms / 1e3,
+                        lambda r=r: self._wake(
+                            Wake("admit_retry", request=r)))
+                else:
+                    self.queues[adm.from_queue].appendleft(r)
+                failed_admits.add(r.rid)
+                continue
             if adm.stamp_t_blocks:
                 r.t_blocks = now
             r.state = adm.state
@@ -253,6 +292,23 @@ class Engine:
                 r.t_prefill_start = now
             self.queues[adm.to_queue].append(r)
             self.stream.emit(PhaseEvent(r.rid, now, "kv_allocated"))
+        if failed_admits:
+            # a failed admit never reached its target queue, so it must
+            # not appear in a launch planned on the assumption it would
+            # (only reachable on sessionful traces — adoption races)
+            if plan.prefill is not None:
+                plan.prefill.batch = [r for r in plan.prefill.batch
+                                      if r.rid not in failed_admits]
+                if not plan.prefill.batch:
+                    plan.prefill = None
+            if plan.hybrid is not None:
+                plan.hybrid.chunks = [(r, t) for r, t in plan.hybrid.chunks
+                                      if r.rid not in failed_admits]
+                if not plan.hybrid.chunks and not self.running:
+                    plan.hybrid = None
+            if plan.decode is not None:
+                plan.decode.joins = [r for r in plan.decode.joins
+                                     if r.rid not in failed_admits]
         outs = self.executor.execute(plan, view)
         if plan.prefill is not None:
             batch = plan.prefill.batch
@@ -260,13 +316,18 @@ class Engine:
             for r in batch:
                 q.remove(r)
                 if plan.prefill.pool == "prefill":
+                    # split pools never park session KV, and the decode-
+                    # side clamp runs only after transfer: drop the
+                    # optimistic prefix claim before pricing the prefill
+                    r.cached_prefix_len = 0
                     self.kv_p.allocate_prompt(r.rid, r.prompt_len)
                 r.state = State.PREFILLING
                 r.t_prefill_start = now
                 self.stream.emit(PhaseEvent(r.rid, now, "prefill"))
             self._lane_busy["prefill"] = True
             self._lane_cost["prefill"] = outs.prefill.cost
-            self.inflight_prefill_tokens = sum(r.prompt_len for r in batch)
+            self.inflight_prefill_tokens = sum(r.prefill_tokens_needed
+                                               for r in batch)
             self.loop.after(outs.prefill.duration_s,
                             lambda b=batch: self._prefill_done(b))
         if plan.decode is not None:
@@ -301,6 +362,10 @@ class Engine:
         freed = False
         for r in batch:
             r.t_prefill_end = now
+            # whole-prompt prefill covered every non-cached token;
+            # recording it keeps the conservation invariant
+            # prefill_tokens_done + cached_prefix_len == prompt_len
+            r.prefill_tokens_done = r.prefill_tokens_needed
             if sched.prefill_route == "transfer":
                 # KV transfer on the critical path (ICI), then decode-side
                 # admission + first-token recompute (vLLM v1, §3.2.1)
@@ -315,7 +380,7 @@ class Engine:
                                             r.tokens_generated - 1))
                 r.state = State.PREFILL_FINISHED
                 if r.done:                    # single-token request
-                    self.kv.free(r.rid)
+                    self._release_kv(r)
                     self._finish(r)
                     freed = True
                 else:
@@ -346,7 +411,7 @@ class Engine:
             self.running.note_token(r)
             self.stream.emit(TokenEvent(r.rid, now, r.tokens_generated - 1))
             if r.done:
-                self.kv.free(r.rid)
+                self._release_kv(r)
                 self.running.remove(r)
                 self._finish(r)
                 freed = True
@@ -362,14 +427,14 @@ class Engine:
         for r, take in chunks:
             r.prefill_tokens_done += take
             chunking.note_chunk_progress(r, take)
-            if r.prefill_tokens_done >= r.prompt_len:
+            if r.prefill_tokens_done >= r.prefill_tokens_needed:
                 r.t_prefill_end = now
                 r.emit_token(now)     # last chunk produces first token
                 self.stream.emit(TokenEvent(r.rid, now,
                                             r.tokens_generated - 1))
                 chunking.remove(r)
                 if r.done:
-                    self.kv.free(r.rid)
+                    self._release_kv(r)
                     self._finish(r)
                 else:
                     r.state = State.DECODING
@@ -389,7 +454,7 @@ class Engine:
             self.running.note_token(r)
             self.stream.emit(TokenEvent(r.rid, now, r.tokens_generated - 1))
             if r.done:
-                self.kv.free(r.rid)
+                self._release_kv(r)
                 self.running.remove(r)
                 self._finish(r)
         self._lane_busy["step"] = False
@@ -398,25 +463,36 @@ class Engine:
         self._wake(Wake("step_done"))
 
     # -- terminal transitions ------------------------------------------------
+    def _release_kv(self, r: Request) -> None:
+        """Release a finishing request's decode-pool KV: park it for the
+        session's next turn when the request is sessionful (colocated
+        engines), else free it exactly as before."""
+        if r.session_id is not None and \
+                self.kv.session_cache_blocks > 0:
+            self.kv.release_to_session(r.rid, r.session_id)
+        else:
+            self.kv.free(r.rid)
+
     def _finish(self, r: Request) -> None:
         r.state = State.FINISHED
         r.t_finish = self.loop.now
         self.finished.append(r)
         self.stream.emit(FinishedEvent(
             r.rid, self.loop.now, r.arrival, r.prompt_len,
-            r.tokens_generated, r.preemptions))
+            r.tokens_generated, r.preemptions, r.slo_class))
 
-    def _reject(self, r: Request, reason: str = "kv_infeasible") -> None:
+    def _reject(self, r: Request, reason: str = "never_fits") -> None:
         """A request whose prompt can never fit the pool is turned away
         instead of deadlocking the queue head (or, for disagg, retrying
         forever) — the caller sees ``state == REJECTED``, never an
         ``OutOfBlocks`` escaping the event loop."""
         r.state = State.REJECTED
         r.blocks = None
+        r.reject_reason = reason
         self.rejected.append(r)
         self.stream.emit(RejectedEvent(
             r.rid, self.loop.now, r.arrival, r.prompt_len, reason,
-            r.tokens_generated, r.preemptions))
+            r.tokens_generated, r.preemptions, r.slo_class))
 
     # -- local preemption (recompute on resume) ------------------------------
     def _preempt_victim(self) -> Optional[Request]:
@@ -437,6 +513,9 @@ class Engine:
         victim.preemptions += 1
         victim.blocks = None
         victim.prefill_tokens_done = 0
+        # recompute-on-resume re-prefills the WHOLE context: the cached
+        # prefix's pages were just freed with the rest of the victim's KV
+        victim.cached_prefix_len = 0
         self.stream.emit(PhaseEvent(victim.rid, self.loop.now, "preempted"))
         return victim
 
@@ -526,7 +605,11 @@ class Engine:
         ps = self.serve.page_size
         queues = self.queues
         queued = sum(len(queues[q]) for q in sched.count_queues)
-        tokens = sum(queues[q].prompt_tokens for q in sched.token_queues)
+        # pending_prefill_tokens nets out session-cached prefixes (and
+        # chunked progress); equal to prompt_tokens for whole queues of
+        # sessionless requests, so the legacy accounting is unchanged
+        tokens = sum(queues[q].pending_prefill_tokens
+                     for q in sched.token_queues)
         tokens += sum(queues[q].pending_prefill_tokens
                       for q in sched.partial_token_queues)
         tokens += self.inflight_prefill_tokens
@@ -563,7 +646,8 @@ class Engine:
             prefill_kv_total_blocks=prefill_total,
             queued_prefill_kv_pages=prefill_pages,
             chips_prefill=getattr(self, "chips_p", self.serve.chips),
-            chips_decode=getattr(self, "chips_d", self.serve.chips))
+            chips_decode=getattr(self, "chips_d", self.serve.chips),
+            kv_session_blocks=self.kv.session_blocks)
 
     def load_snapshot_recompute(self) -> LoadSnapshot:
         """Recompute the load view from scratch by walking every queue —
@@ -575,9 +659,11 @@ class Engine:
         sched = self.scheduler
         ps = self.serve.page_size
         queued = sum(len(self.queues[q]) for q in sched.count_queues)
-        tokens = sum(r.prompt_len for q in sched.token_queues
-                     for r in self.queues[q])
-        tokens += sum(r.prompt_len - r.prefill_tokens_done
+        tokens = sum(r.prompt_len - r.cached_prefix_len
+                     - r.prefill_tokens_done
+                     for q in sched.token_queues for r in self.queues[q])
+        tokens += sum(r.prompt_len - r.cached_prefix_len
+                      - r.prefill_tokens_done
                       for q in sched.partial_token_queues
                       for r in self.queues[q])
         tokens += self.inflight_prefill_tokens
@@ -610,7 +696,8 @@ class Engine:
             prefill_kv_total_blocks=prefill_total,
             queued_prefill_kv_pages=prefill_pages,
             chips_prefill=getattr(self, "chips_p", self.serve.chips),
-            chips_decode=getattr(self, "chips_d", self.serve.chips))
+            chips_decode=getattr(self, "chips_d", self.serve.chips),
+            kv_session_blocks=self.kv.session_blocks)
 
 
 # legacy name: PR-1/PR-2 callers subclassed/annotated against BaseEngine
@@ -627,31 +714,34 @@ class RapidEngine(Engine):
 
     def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E,
                  avg_ctx_hint: int = 4096,
-                 loop: Optional[EventLoop] = None):
+                 loop: Optional[EventLoop] = None,
+                 preempt_policy: PreemptionPolicy = DEFAULT_PREEMPTION):
         super().__init__(
             cfg, serve, hw,
             scheduler=RapidScheduler(cfg, serve, hw, avg_ctx_hint),
-            loop=loop)
+            loop=loop, preempt_policy=preempt_policy)
 
 
 class HybridEngine(Engine):
     """Sarathi/vLLM-v1 chunked-prefill baseline."""
 
     def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E,
-                 loop: Optional[EventLoop] = None):
+                 loop: Optional[EventLoop] = None,
+                 preempt_policy: PreemptionPolicy = DEFAULT_PREEMPTION):
         super().__init__(cfg, serve, hw,
                          scheduler=HybridScheduler(cfg, serve, hw),
-                         loop=loop)
+                         loop=loop, preempt_policy=preempt_policy)
 
 
 class DisaggEngine(Engine):
     """DistServe-style split-pool baseline."""
 
     def __init__(self, cfg, serve: ServeConfig, hw: HardwareSpec = TPU_V5E,
-                 loop: Optional[EventLoop] = None):
+                 loop: Optional[EventLoop] = None,
+                 preempt_policy: PreemptionPolicy = DEFAULT_PREEMPTION):
         super().__init__(cfg, serve, hw,
                          scheduler=DisaggScheduler(cfg, serve, hw),
-                         loop=loop)
+                         loop=loop, preempt_policy=preempt_policy)
 
 
 ENGINES = {
@@ -663,8 +753,11 @@ ENGINES = {
 
 def make_engine(mode: str, cfg, serve: ServeConfig,
                 hw: HardwareSpec = TPU_V5E,
-                loop: Optional[EventLoop] = None) -> Engine:
+                loop: Optional[EventLoop] = None,
+                preempt_policy: PreemptionPolicy = DEFAULT_PREEMPTION
+                ) -> Engine:
     if mode not in ENGINES:
         raise KeyError(
             f"unknown engine mode {mode!r}; known: {sorted(ENGINES)}")
-    return ENGINES[mode](cfg, serve, hw, loop=loop)
+    return ENGINES[mode](cfg, serve, hw, loop=loop,
+                         preempt_policy=preempt_policy)

@@ -60,17 +60,28 @@ class FinishedEvent:
     prompt_len: int
     output_len: int
     preemptions: int = 0
+    slo_class: str = "interactive"
 
 
 @dataclasses.dataclass(frozen=True, slots=True)
 class RejectedEvent:
+    """Terminal admission failure.  ``reason`` is one of
+
+      * ``never_fits``  — prompt (+ worst-case output, disagg) can never
+        fit the pool, no amount of waiting helps;
+      * ``kv_headroom`` — pools are full now and the cluster-side wait
+        deadline expired;
+      * ``class_shed``  — class-aware admission shed a lower-importance
+        class to protect interactive headroom.
+    """
     rid: int
     t: float
     arrival: float
     prompt_len: int
-    reason: str = "kv_infeasible"
+    reason: str = "never_fits"
     output_len: int = 0
     preemptions: int = 0
+    slo_class: str = "interactive"
 
 
 Event = Union[TokenEvent, PhaseEvent, FinishedEvent, RejectedEvent]

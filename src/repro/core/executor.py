@@ -88,8 +88,18 @@ class PerfModelExecutor(Executor):
         p_out = d_out = h_out = None
         if plan.prefill is not None:
             chips = self._chips("prefill", serve)
-            cost = C.prefill_cost(
-                self.cfg, [r.prompt_len for r in plan.prefill.batch], chips)
+            batch = plan.prefill.batch
+            if any(r.cached_prefix_len for r in batch):
+                # session prefix skip: each request only prefills its new
+                # suffix, attending over the cached prefix as context
+                cost = C.ZERO_COST
+                for r in batch:
+                    cost = cost + C.chunk_prefill_cost(
+                        self.cfg, r.prefill_tokens_needed,
+                        r.cached_prefix_len, chips)
+            else:
+                cost = C.prefill_cost(
+                    self.cfg, [r.prompt_len for r in batch], chips)
             dlane = view.lanes.get("decode", None)
             if self.colocated and dlane is not None and dlane.busy and \
                     dlane.cost is not None:
@@ -124,7 +134,8 @@ class PerfModelExecutor(Executor):
             cost = C.ZERO_COST
             for r, take in plan.hybrid.chunks:
                 cost = cost + C.chunk_prefill_cost(
-                    self.cfg, take, r.prefill_tokens_done, chips)
+                    self.cfg, take,
+                    r.cached_prefix_len + r.prefill_tokens_done, chips)
             bs = len(view.running)
             if bs:
                 ctx_total = float(view.running.ctx_tokens)

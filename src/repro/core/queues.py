@@ -18,7 +18,9 @@ tokens and KV-page claims on every router/admission/autoscaler call.
 
       ``len(q)``                   request count
       ``q.prompt_tokens``          sum of members' ``prompt_len``
-      ``q.pending_prefill_tokens`` sum of ``prompt_len - prefill_tokens_done``
+      ``q.pending_prefill_tokens`` sum of ``prefill_tokens_needed -
+                                   prefill_tokens_done`` (session-cached
+                                   prefix tokens never need compute)
       ``q.kv_pages``               sum of ``kv_pages_for(prompt_len, page)``
       ``q.ctx_tokens``             sum of members' ``context_len``
 
@@ -72,7 +74,7 @@ class IndexedQueue:
     def _add(self, r: Request) -> list:
         if r.rid in self._entries:
             raise ValueError(f"request {r.rid} already queued")
-        pend = r.prompt_len - r.prefill_tokens_done
+        pend = r.prompt_len - r.cached_prefix_len - r.prefill_tokens_done
         ctx = r.context_len
         self._entries[r.rid] = entry = [r, pend, ctx]
         self.prompt_tokens += r.prompt_len

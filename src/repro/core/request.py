@@ -15,6 +15,18 @@ import enum
 from typing import List, Optional
 
 
+# Multi-tenant SLO classes, ordered by importance.  Lower rank = more
+# important: admission sheds and preemption evicts the HIGHEST rank
+# first, so interactive traffic is the last to suffer.
+CLASS_RANK = {"interactive": 0, "batch": 1, "best_effort": 2}
+
+
+def class_rank(slo_class: str) -> int:
+    """Rank for victim/shedding order; unknown classes rank with
+    ``interactive`` (never shed by accident of a typo upstream)."""
+    return CLASS_RANK.get(slo_class, 0)
+
+
 class State(enum.Enum):
     ARRIVED = "arrived"
     WAITING_KV = "waiting_kv"          # decode: waiting for block alloc
@@ -34,6 +46,16 @@ class Request:
     prompt_len: int
     max_new_tokens: int
 
+    # multi-tenant workload model (defaults reproduce the single-class
+    # legacy behaviour bit-for-bit)
+    slo_class: str = "interactive"     # interactive | batch | best_effort
+    session_id: Optional[str] = None   # multi-turn conversation key
+    # tokens at the head of the prompt whose KV may already be resident
+    # from an earlier turn of the same session.  The value set by the
+    # trace generator is OPTIMISTIC; the engine clamps it at admission
+    # to what is actually cached and re-prefills the rest.
+    cached_prefix_len: int = 0
+
     state: State = State.ARRIVED
     blocks: Optional[list] = None
     # progress
@@ -46,6 +68,7 @@ class Request:
     t_prefill_end: Optional[float] = None
     t_finish: Optional[float] = None
     preemptions: int = 0
+    reject_reason: Optional[str] = None  # set iff state == REJECTED
 
     @property
     def ttft(self) -> Optional[float]:
@@ -59,6 +82,13 @@ class Request:
     @property
     def context_len(self) -> int:
         return self.prompt_len + self.tokens_generated
+
+    @property
+    def prefill_tokens_needed(self) -> int:
+        """Prompt tokens that actually need prefill compute — the prompt
+        minus the session-cached prefix (0 skipped for sessionless
+        requests, so this equals ``prompt_len`` on the legacy path)."""
+        return self.prompt_len - self.cached_prefix_len
 
     @property
     def done(self) -> bool:

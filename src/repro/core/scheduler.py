@@ -237,6 +237,22 @@ class Scheduler:
         """Can the prompt *ever* fit this pool?"""
         return kv_pages_for(prompt_len, page_size) <= kv.allocator.num_blocks
 
+    @staticmethod
+    def _pages_needed(r: Request, kv: KVCacheManager, page_size: int,
+                      claimed: set) -> int:
+        """Pages admitting ``r`` would newly claim, net of any parked
+        session prefix it can adopt.  ``claimed`` tracks sessions whose
+        prefix an earlier admission in the SAME plan already adopts —
+        two queued turns of one session must not both count the hit.
+        Reduces to ``kv_pages_for(prompt_len)`` for sessionless
+        requests."""
+        if r.session_id is None or r.session_id in claimed:
+            return kv_pages_for(r.prompt_len, page_size)
+        need = kv.pages_needed(r.prompt_len, r.session_id,
+                               r.cached_prefix_len)
+        claimed.add(r.session_id)
+        return need
+
 
 # ---------------------------------------------------------------------------
 # RAPID (the paper)
@@ -276,12 +292,15 @@ class RapidScheduler(Scheduler):
         # prefill_done) — the decode-owned protocol re-admits a preempted
         # victim only after a finish returns capacity
         if view.wake.kind == "arrival" or view.wake.kv_freed:
-            free = view.kv.allocator.free_count
-            for r in view.queues["waiting_kv"]:
+            # available_blocks = free + reclaimable session-parked pages;
+            # identical to free_count on sessionless traces
+            free = view.kv.available_blocks
+            claimed = set()     # sessions whose parked prefix this plan
+            for r in view.queues["waiting_kv"]:   # already hands out
                 if not self._fits_pool(r.prompt_len, view.kv, ps):
                     plan.rejects.append((r, "waiting_kv"))
                     continue
-                need = kv_pages_for(r.prompt_len, ps)
+                need = self._pages_needed(r, view.kv, ps, claimed)
                 if need > free:
                     break
                 free -= need
@@ -351,14 +370,15 @@ class HybridScheduler(Scheduler):
         serve = view.serve
         ps = serve.page_size
         # -- admission: blocks + batch slots, FCFS -----------------------
-        free = view.kv.allocator.free_count
+        free = view.kv.available_blocks
         slots = len(view.queues["chunking"]) + len(view.running)
         admitted: List[Request] = []
+        claimed = set()
         for r in view.queues["waiting"]:
             if not self._fits_pool(r.prompt_len, view.kv, ps):
                 plan.rejects.append((r, "waiting"))
                 continue
-            need = kv_pages_for(r.prompt_len, ps)
+            need = self._pages_needed(r, view.kv, ps, claimed)
             if need > free or slots >= serve.max_batch_slots:
                 break
             free -= need
@@ -375,7 +395,7 @@ class HybridScheduler(Scheduler):
             if budget <= 0:
                 break
             take = min(serve.chunk_size, budget,
-                       r.prompt_len - r.prefill_tokens_done)
+                       r.prefill_tokens_needed - r.prefill_tokens_done)
             if take <= 0:
                 continue
             chunks.append((r, take))
@@ -446,9 +466,12 @@ class DisaggScheduler(Scheduler):
         # -- decode-side admission for a completed KV transfer -----------
         if view.wake.kind in ("transfer_arrived", "admit_retry"):
             r = view.wake.request
-            if not self._fits_pool(r.prompt_len, view.kv, ps):
-                # can NEVER fit the decode pool: reject instead of
-                # spinning the retry loop forever
+            if not self._fits_pool(r.prompt_len + r.max_new_tokens,
+                                   view.kv, ps):
+                # prompt + worst-case output can NEVER fit the decode
+                # pool: reject instead of spinning the retry loop (or,
+                # once admitted, self-preempting on every decode step —
+                # the ROADMAP item 5 livelock) forever
                 plan.rejects.append((r, None))
             elif kv_pages_for(r.prompt_len, ps) > \
                     view.kv.allocator.free_count:
@@ -465,9 +488,13 @@ class DisaggScheduler(Scheduler):
             tokens = 0
             for r in view.queues["waiting_prefill"]:
                 if not self._fits_pool(r.prompt_len, view.kv_p, ps) or \
-                        not self._fits_pool(r.prompt_len, view.kv, ps):
+                        not self._fits_pool(
+                            r.prompt_len + r.max_new_tokens, view.kv, ps):
                     # oversized for the prefill pool (queue-head wedge) or
-                    # the decode pool (would retry forever post-transfer)
+                    # for the decode pool over its LIFETIME — a prompt
+                    # whose prompt+output can never fit would either
+                    # retry forever post-transfer or livelock decode by
+                    # self-preempting on every step (ROADMAP item 5)
                     plan.rejects.append((r, "waiting_prefill"))
                     continue
                 need = kv_pages_for(r.prompt_len, ps)

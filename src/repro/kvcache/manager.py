@@ -12,12 +12,25 @@ append-slot during decode, free on completion/preemption, plus occupancy
 accounting used by the §5.4 memory-utilization benchmark and by engine
 admission control.
 
+Session prefix cache (first step toward radix-style prefix caching):
+when a request carries a ``session_id``, its KV can be *parked* on
+completion (``release_to_session``) instead of freed — up to a
+``session_cache_blocks`` budget, LRU-evicted.  The session's next turn
+then *adopts* the parked pages for its shared prefix
+(``allocate_prompt(..., session_id=, max_prefix=)``) and only prefills
+the new suffix.  Parked pages are always reclaimable: admission counts
+them in ``available_blocks`` and allocation evicts LRU sessions before
+ever raising ``OutOfBlocks``, so caching can delay no request.  With the
+budget at 0 (or no session ids in the trace) every path below reduces
+exactly to the legacy free/alloc behaviour.
+
 Device-side layout (consumed by kernels/paged_attention.py):
     k_pages, v_pages : (num_blocks, page_size, kv_heads, head_dim)
     block_tables     : (max_requests, max_blocks_per_seq) int32
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, List, Optional
 
@@ -89,17 +102,123 @@ class KVCacheManager:
     """Decode-owned per-request block bookkeeping (single owner => no
     locks; the prefill side only ever *reads* block IDs it was handed)."""
 
-    def __init__(self, num_blocks: int, page_size: int):
+    def __init__(self, num_blocks: int, page_size: int,
+                 session_cache_blocks: int = 0):
         self.allocator = BlockAllocator(num_blocks)
         self.page_size = page_size
         self._seqs: Dict[int, _SeqAlloc] = {}
+        # parked per-session prefix KV, LRU-ordered (oldest first)
+        self.session_cache_blocks = session_cache_blocks
+        self._sessions: "collections.OrderedDict[str, _SeqAlloc]" = \
+            collections.OrderedDict()
+        self._session_block_count = 0
+
+    # -- session prefix cache ------------------------------------------------
+    @property
+    def session_blocks(self) -> int:
+        """Blocks parked for finished sessions — allocated, but
+        reclaimable at any time (LRU) by ``allocate_prompt``."""
+        return self._session_block_count
+
+    @property
+    def available_blocks(self) -> int:
+        """Free blocks plus reclaimable session-parked blocks — the
+        quantity admission must project against (identical to
+        ``allocator.free_count`` when no sessions are parked)."""
+        return self.allocator.free_count + self._session_block_count
+
+    def session_tokens(self, session_id: str) -> int:
+        entry = self._sessions.get(session_id)
+        return entry.num_tokens if entry is not None else 0
+
+    def session_hit_tokens(self, session_id: Optional[str],
+                           prompt_len: int, max_prefix: int) -> int:
+        """Prefix tokens the next turn may actually skip: bounded by what
+        is resident, by the caller's claimed shared prefix, and by
+        ``prompt_len - 1`` (at least one token must be prefilled so the
+        step produces the first output token)."""
+        if session_id is None or max_prefix <= 0:
+            return 0
+        return max(0, min(max_prefix, self.session_tokens(session_id),
+                          prompt_len - 1))
+
+    def drop_session(self, session_id: str) -> None:
+        """Invalidate a session's parked prefix (e.g. the cluster
+        migrated the session to another replica)."""
+        entry = self._sessions.pop(session_id, None)
+        if entry is not None:
+            self._session_block_count -= len(entry.blocks)
+            self.allocator.free(entry.blocks)
+
+    def release_to_session(self, rid: int, session_id: str) -> bool:
+        """Park a finishing request's KV for its session instead of
+        freeing it.  Returns True when parked; falls back to a plain
+        ``free`` (returns False) when the budget is 0 or the entry alone
+        exceeds it.  Evicts LRU sessions to stay within budget."""
+        seq = self._seqs.pop(rid)
+        if not 0 < len(seq.blocks) <= self.session_cache_blocks:
+            self.allocator.free(seq.blocks)
+            return False
+        old = self._sessions.pop(session_id, None)
+        if old is not None:
+            self._session_block_count -= len(old.blocks)
+            self.allocator.free(old.blocks)
+        self._sessions[session_id] = seq
+        self._session_block_count += len(seq.blocks)
+        while self._session_block_count > self.session_cache_blocks:
+            _, evicted = self._sessions.popitem(last=False)
+            self._session_block_count -= len(evicted.blocks)
+            self.allocator.free(evicted.blocks)
+        return True
+
+    def _alloc_evicting(self, n: int) -> List[int]:
+        """Allocate ``n`` blocks, reclaiming LRU session prefixes as
+        needed — parked KV can never starve live work."""
+        if n <= 0:
+            return []
+        while n > self.allocator.free_count and self._sessions:
+            _, evicted = self._sessions.popitem(last=False)
+            self._session_block_count -= len(evicted.blocks)
+            self.allocator.free(evicted.blocks)
+        return self.allocator.alloc(n)
 
     # -- Fig 4 step 2: decode allocates the prompt's blocks ----------------
-    def allocate_prompt(self, rid: int, prompt_len: int) -> List[int]:
+    def pages_needed(self, prompt_len: int,
+                     session_id: Optional[str] = None,
+                     max_prefix: int = 0) -> int:
+        """Pages ``allocate_prompt`` would newly claim, net of pages
+        adopted from the session's parked prefix (pure projection)."""
+        total = kv_pages_for(prompt_len, self.page_size)
+        hit = self.session_hit_tokens(session_id, prompt_len, max_prefix)
+        if hit <= 0:
+            return total
+        entry = self._sessions[session_id]
+        adopted = min(kv_pages_for(hit, self.page_size),
+                      len(entry.blocks), total)
+        return total - adopted
+
+    def allocate_prompt(self, rid: int, prompt_len: int,
+                        session_id: Optional[str] = None,
+                        max_prefix: int = 0) -> List[int]:
         if rid in self._seqs:
             raise ValueError(f"request {rid} already allocated")
-        n = kv_pages_for(prompt_len, self.page_size)
-        blocks = self.allocator.alloc(n)
+        total = kv_pages_for(prompt_len, self.page_size)
+        adopted: List[int] = []
+        hit = self.session_hit_tokens(session_id, prompt_len, max_prefix)
+        if hit > 0:
+            entry = self._sessions.pop(session_id)
+            self._session_block_count -= len(entry.blocks)
+            keep = min(kv_pages_for(hit, self.page_size),
+                       len(entry.blocks), total)
+            adopted = entry.blocks[:keep]
+            if entry.blocks[keep:]:
+                self.allocator.free(entry.blocks[keep:])
+        try:
+            blocks = adopted + self._alloc_evicting(total - len(adopted))
+        except OutOfBlocks:
+            if adopted:
+                self.allocator.free(adopted)
+            raise
         self._seqs[rid] = _SeqAlloc(blocks, prompt_len, self.page_size)
         return blocks
 

@@ -47,8 +47,9 @@ from repro.config import SLOConfig, ServeConfig, get_config, list_archs
 from repro.core import make_engine
 from repro.serving import (ROUTERS, TRACES, AdmissionPolicy,
                            ProjectionPolicy, RebalancePolicy, ScalePolicy,
-                           StreamMetrics, generate_trace, parse_mix,
-                           run_fleet)
+                           StreamMetrics, diurnal_rate, flash_crowd_rate,
+                           generate_multiclass_trace, generate_trace,
+                           parse_mix, run_fleet)
 
 
 def _serve_config(mode: str, chips: int, slo: SLOConfig, chunk: int,
@@ -77,22 +78,41 @@ def run_one(arch: str, mode: str, trace: str, qps: float, duration: float,
     return metrics.summarize(slo, span)
 
 
+def _workload_requests(workload: str, trace: str, qps: float,
+                       duration: float, seed: int, arrival: str):
+    """Single-class trace, or the multi-tenant mix (SLO classes +
+    multi-turn sessions from serving/workloads.py), under a flat /
+    diurnal / flash-crowd arrival process."""
+    if workload == "trace":
+        return generate_trace(TRACES[trace], qps=qps, duration_s=duration,
+                              seed=seed)
+    rate_fn = None
+    if arrival == "diurnal":
+        rate_fn = diurnal_rate(qps, amplitude=0.5, period_s=duration / 2)
+    elif arrival == "flash":
+        rate_fn = flash_crowd_rate(qps, 3.0 * qps, duration * 0.4,
+                                   duration * 0.6)
+    return generate_multiclass_trace(qps=qps, duration_s=duration,
+                                     seed=seed, rate_fn=rate_fn)
+
+
 def run_cluster(arch: str, modes, router: str, trace: str, qps: float,
                 duration: float, chips: int, slo_itl_ms: float,
                 chunk: int = 512, seed: int = 0, max_slots: int = 128,
                 admission: AdmissionPolicy = None,
-                rebalance: RebalancePolicy = None, scale=None):
+                rebalance: RebalancePolicy = None, scale=None,
+                workload: str = "trace", arrival: str = "flat",
+                session_affinity: bool = False):
     """Run a trace against an N-replica cluster; returns the fleet/per-
     replica summary dict from ``fleet_summarize`` plus the fleet span."""
     cfg = get_config(arch)
     slo = SLOConfig(itl_ms=slo_itl_ms)
     mode0 = modes[0] if isinstance(modes[0], str) else modes[0].mode
     serve = _serve_config(mode0, chips, slo, chunk, max_slots)
-    reqs = generate_trace(TRACES[trace], qps=qps, duration_s=duration,
-                          seed=seed)
+    reqs = _workload_requests(workload, trace, qps, duration, seed, arrival)
     out, cluster = run_fleet(cfg, serve, modes, router, reqs,
                              admission=admission, rebalance=rebalance,
-                             scale=scale)
+                             scale=scale, session_affinity=session_affinity)
     out["router"] = router
     if scale is not None:
         out["scale_events"] = list(cluster._scale_events)
@@ -119,8 +139,23 @@ def main(argv=None):
                         "'rapid,rapid,hybrid', or heterogeneous "
                         "'mode:COUNTxCHIPS' groups like 'rapid:2x16,"
                         "hybrid:1x32' (overrides --mode/--replicas)")
+    p.add_argument("--workload", default="trace",
+                   choices=["trace", "multiclass"],
+                   help="'multiclass' replaces the single-class --trace "
+                        "with the multi-tenant mix (interactive sessions "
+                        "+ batch + best_effort, serving/workloads.py)")
+    p.add_argument("--arrival", default="flat",
+                   choices=["flat", "diurnal", "flash"],
+                   help="arrival process for --workload multiclass")
+    p.add_argument("--session-affinity", action="store_true",
+                   help="route a session's turns to the replica parking "
+                        "its prefix KV (prefix-cache hits)")
     p.add_argument("--admission", action="store_true",
                    help="KV-aware admission control at the cluster")
+    p.add_argument("--class-aware-admission", action="store_true",
+                   help="class-ordered admission headroom: sheds "
+                        "best_effort first, never interactive (implies "
+                        "--admission)")
     p.add_argument("--kv-headroom", type=float, default=0.9,
                    help="admission: max projected pool occupancy")
     p.add_argument("--admission-max-wait", type=float, default=60.0,
@@ -140,15 +175,19 @@ def main(argv=None):
 
     out = {}
     if args.mix or args.replicas > 1 or args.admission or \
-            args.rebalance or args.scale_policy:
+            args.class_aware_admission or args.rebalance or \
+            args.scale_policy or args.workload != "trace" or \
+            args.session_affinity:
         if args.mode == "all" and not args.mix:
             p.error("--mode all cannot combine with --replicas; use "
                     "--mix rapid,hybrid,disagg to build a mixed fleet")
         mix = parse_mix(args.mix) if args.mix \
             else [args.mode] * args.replicas
-        admission = AdmissionPolicy(kv_headroom=args.kv_headroom,
-                                    max_wait_s=args.admission_max_wait) \
-            if args.admission else None
+        admission = AdmissionPolicy(
+            kv_headroom=args.kv_headroom,
+            max_wait_s=args.admission_max_wait,
+            class_aware=args.class_aware_admission) \
+            if args.admission or args.class_aware_admission else None
         rebalance = RebalancePolicy() if args.rebalance else None
         scale = None
         if args.scale_policy == "reactive":
@@ -161,7 +200,9 @@ def main(argv=None):
                           args.qps, args.duration, args.chips,
                           args.slo_itl_ms, args.chunk,
                           admission=admission, rebalance=rebalance,
-                          scale=scale)
+                          scale=scale, workload=args.workload,
+                          arrival=args.arrival,
+                          session_affinity=args.session_affinity)
         out["cluster"] = res
         f = res["fleet"]
         names = [m if isinstance(m, str)
@@ -185,6 +226,12 @@ def main(argv=None):
             print(f"  {name:10s} n={s['requests']:4d}  "
                   f"thpt={s['throughput_tok_s']:9.1f} tok/s  "
                   f"ttft_p95={s['ttft_p95_s']:7.2f}s")
+        if args.workload == "multiclass":
+            for name, s in res["per_class"].items():
+                print(f"  class {name:12s} n={s['requests']:4d}  "
+                      f"goodput={s['goodput_req_s']:6.2f} req/s  "
+                      f"slo_ok={s['slo_attainment'] * 100:5.1f}%  "
+                      f"rej={s['rejected']}")
     else:
         modes = (["rapid", "hybrid", "disagg"] if args.mode == "all"
                  else [args.mode])

@@ -31,10 +31,19 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.request import Request
 from repro.kvcache import kv_pages_for
+
+# class-ordered headroom multipliers: lower-importance classes see a
+# tighter effective pool, so under pressure best_effort is shed first,
+# batch queues, and interactive admits up to the full headroom
+DEFAULT_CLASS_HEADROOM: Mapping[str, float] = {
+    "interactive": 1.0,
+    "batch": 0.95,
+    "best_effort": 0.80,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +60,14 @@ class AdmissionPolicy:
     footprint against split-pool (disagg) replicas' *prefill* pools;
     ``prefill_headroom`` is that pool's occupancy ceiling (transient
     pages churn faster than decode KV, so it defaults looser).
+
+    ``class_aware`` multiplies ``kv_headroom`` by the request's SLO
+    class's entry in ``class_headroom`` (serving/workloads.py defines
+    the classes).  Best-effort requests that miss their tighter ceiling
+    are *shed* (rejected immediately, reason ``class_shed``) rather than
+    queued — interactive requests are never shed and always see the full
+    headroom.  Off by default: the class-blind controller treats every
+    class identically (golden parity).
     """
     kv_headroom: float = 0.90
     projected_output_frac: float = 0.5
@@ -58,6 +75,14 @@ class AdmissionPolicy:
     max_wait_s: float = 60.0        # queued longer than this => reject
     prefill_pool_aware: bool = True
     prefill_headroom: float = 0.95
+    class_aware: bool = False
+    class_headroom: Mapping[str, float] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_CLASS_HEADROOM))
+
+    def headroom_for(self, slo_class: str) -> float:
+        if not self.class_aware:
+            return self.kv_headroom
+        return self.kv_headroom * self.class_headroom.get(slo_class, 1.0)
 
 
 class AdmissionController:
@@ -92,16 +117,20 @@ class AdmissionController:
 
     def fits(self, replica, r: Request, snap=None) -> bool:
         """Would admitting ``r`` keep the replica's projected pool
-        occupancy (live + queued claims + this request) under headroom?
-        Disagg replicas must fit BOTH the decode pool (prompt + projected
-        output) and the transient prefill pool (prompt)."""
+        occupancy (live + queued claims + this request) under the
+        request's class headroom?  Disagg replicas must fit BOTH the
+        decode pool (prompt + projected output) and the transient
+        prefill pool (prompt).  Parked session-prefix blocks are
+        reclaimable on demand, so they count as free in the projection.
+        """
         s = snap if snap is not None else replica.snapshot()
         if s.kv_total_blocks <= 0:
             return True        # engine without a paged pool: no signal
         pages = self.projected_pages(r, replica.serve.page_size)
-        used = s.kv_total_blocks - s.kv_free_blocks
+        used = s.kv_total_blocks - s.kv_free_blocks - \
+            getattr(s, "kv_session_blocks", 0)
         if used + s.queued_kv_pages + pages > \
-                self.policy.kv_headroom * s.kv_total_blocks:
+                self.policy.headroom_for(r.slo_class) * s.kv_total_blocks:
             return False
         return self.prefill_pool_fits(replica, r, snap=s)
 
@@ -120,9 +149,11 @@ class AdmissionController:
 
     # -- the decision -------------------------------------------------------
     def decide(self, r: Request, replicas: Sequence, now: float
-               ) -> Tuple[str, Optional[List]]:
-        """Returns ``("admit", fit_replicas)``, ``("wait", None)`` or
-        ``("reject", None)``."""
+               ) -> Tuple[str, Optional[List], Optional[str]]:
+        """Returns ``("admit", fit_replicas, None)``, ``("wait", None,
+        None)`` or ``("reject", None, reason)`` with ``reason`` one of
+        ``never_fits`` / ``kv_headroom`` / ``class_shed`` (the
+        ``RejectedEvent.reason`` vocabulary)."""
         # one snapshot per replica per decision: snapshots walk whole
         # queues, and decide() re-runs every retry tick under overload
         snaps = [(rep, rep.snapshot()) for rep in replicas]
@@ -131,18 +162,24 @@ class AdmissionController:
         if not feasible:
             self.stats["rejected_infeasible"] += 1
             self._first_seen.pop(r.rid, None)
-            return "reject", None
+            return "reject", None, "never_fits"
         fit = [rep for rep, s in feasible if self.fits(rep, r, snap=s)]
         if fit:
             self.stats["admitted"] += 1
             if len(fit) < len(replicas):
                 self.stats["redirected"] += 1
             self._first_seen.pop(r.rid, None)
-            return "admit", fit
+            return "admit", fit, None
+        if self.policy.class_aware and r.slo_class == "best_effort":
+            # shed: queueing best-effort work behind its tight ceiling
+            # only delays the reclaim the higher classes need
+            self.stats["shed"] += 1
+            self._first_seen.pop(r.rid, None)
+            return "reject", None, "class_shed"
         first = self._first_seen.setdefault(r.rid, now)
         if now - first >= self.policy.max_wait_s:
             self.stats["rejected_timeout"] += 1
             self._first_seen.pop(r.rid, None)
-            return "reject", None
+            return "reject", None, "kv_headroom"
         self.stats["delayed"] += 1
-        return "wait", None
+        return "wait", None, None

@@ -73,6 +73,7 @@ from typing import (TYPE_CHECKING, Callable, Dict, List, Optional,
 
 from repro.config import ServeConfig
 from repro.core.events import EventStream, RejectedEvent
+from repro.core.preemption import PreemptionPolicy
 from repro.core.queues import IndexedQueue
 from repro.core.request import Request, State
 from repro.perfmodel import costs as C
@@ -425,13 +426,20 @@ class Cluster:
                                        ProjectionPolicy]] = None,
                  admission: Optional[AdmissionPolicy] = None,
                  rebalance: Optional[RebalancePolicy] = None,
-                 loop: Optional[EventLoop] = None):
+                 loop: Optional[EventLoop] = None,
+                 session_affinity: bool = False,
+                 preempt_policy: Optional[PreemptionPolicy] = None):
         if not modes:
             raise ValueError("cluster needs at least one replica mode")
         self.cfg = cfg
         self.serve = serve
         self.hw = hw
         self.loop = loop if loop is not None else EventLoop()
+        # session -> replica idx holding the session's parked prefix KV;
+        # affinity routing sends the next turn there so the prefix hits
+        self.session_affinity = session_affinity
+        self._session_home: Dict[str, int] = {}
+        self._preempt_policy = preempt_policy
         self._base_specs: Dict[str, ReplicaSpec] = {}
         # fleet event stream: replica streams forward here, plus cluster-
         # side rejections; the autoscaler window and run_fleet consume it
@@ -487,8 +495,13 @@ class Cluster:
                 serve, chips=spec.chips,
                 disagg_split=(max(1, spec.chips // 2),
                               max(1, spec.chips - spec.chips // 2)))
-        engine = make_engine(spec.mode, self.cfg, serve, self.hw,
-                             loop=self.loop)
+        if self._preempt_policy is not None:
+            engine = make_engine(spec.mode, self.cfg, serve, self.hw,
+                                 loop=self.loop,
+                                 preempt_policy=self._preempt_policy)
+        else:
+            engine = make_engine(spec.mode, self.cfg, serve, self.hw,
+                                 loop=self.loop)
         if spec.chips_p is not None and \
                 getattr(engine.scheduler, "colocated", True):
             raise ValueError(
@@ -532,20 +545,33 @@ class Cluster:
         # rather than crashing the router on an empty list
         live = self.routable or self.replicas
         if self.admission is not None:
-            verdict, fit = self.admission.decide(r, live, self.loop.now)
+            verdict, fit, reason = self.admission.decide(r, live,
+                                                         self.loop.now)
             if verdict == "reject":
                 r.state = State.REJECTED
+                r.reject_reason = reason
                 self.rejected.append(r)
                 self.stream.emit(RejectedEvent(
                     r.rid, self.loop.now, r.arrival, r.prompt_len,
-                    "admission"))
+                    reason, 0, 0, r.slo_class))
                 return
             if verdict == "wait":
                 self.loop.after(self.admission.policy.retry_s,
                                 lambda r=r: self.submit(r))
                 return
             live = fit
-        rep = live[self.router.choose(r, live)]
+        rep = None
+        if self.session_affinity and r.session_id is not None:
+            # route the session's next turn to the replica parking its
+            # prefix KV — but only if admission still allows it there
+            home = self._session_home.get(r.session_id)
+            if home is not None:
+                rep = next((cand for cand in live if cand.idx == home),
+                           None)
+        if rep is None:
+            rep = live[self.router.choose(r, live)]
+        if r.session_id is not None:
+            self._session_home[r.session_id] = rep.idx
         rep.assigned.append(r)
         rep.engine.submit(r)
 
@@ -914,6 +940,15 @@ class Cluster:
             "migration candidate changed under eviction"
         victim, had_kv = evicted
         del expected_kv
+        if victim.session_id is not None:
+            # the session's parked prefix (if any) stays on src where the
+            # next turn will no longer land: invalidate it and re-home
+            # the session — the victim re-prefills from scratch on tgt
+            drop = getattr(src.engine.kv, "drop_session", None)
+            if drop is not None:
+                drop(victim.session_id)
+            victim.cached_prefix_len = 0
+            self._session_home[victim.session_id] = tgt.idx
         src.assigned.remove(victim)
         tgt.assigned.append(victim)
         self._migration_counts[victim.rid] = \
@@ -938,12 +973,16 @@ def run_fleet(cfg, serve: ServeConfig,
               requests: Sequence[Request], hw: HardwareSpec = TPU_V5E,
               scale: Optional[Union[ScalePolicy, ProjectionPolicy]] = None,
               admission: Optional[AdmissionPolicy] = None,
-              rebalance: Optional[RebalancePolicy] = None):
+              rebalance: Optional[RebalancePolicy] = None,
+              session_affinity: bool = False,
+              preempt_policy: Optional[PreemptionPolicy] = None):
     """Build a cluster, serve a trace, and return
     ``(fleet_summarize(...) dict, cluster)``.  Requests are deep-copied so
     the caller's trace can be replayed against other configurations."""
     cluster = Cluster(cfg, serve, modes, router=router, hw=hw, scale=scale,
-                      admission=admission, rebalance=rebalance)
+                      admission=admission, rebalance=rebalance,
+                      session_affinity=session_affinity,
+                      preempt_policy=preempt_policy)
     _, span = cluster.run([copy.deepcopy(r) for r in requests])
     # the fleet-wide summary is built from the cluster's event stream
     # (StreamMetrics), which already carries cluster-side rejections

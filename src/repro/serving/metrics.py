@@ -61,6 +61,8 @@ class RequestRecord:
     finish: Optional[float]
     preemptions: int = 0
     rejected: bool = False
+    slo_class: str = "interactive"
+    reject_reason: Optional[str] = None
 
     @classmethod
     def from_request(cls, r: Request) -> "RequestRecord":
@@ -70,7 +72,8 @@ class RequestRecord:
             output_len=r.tokens_generated, ttft=r.ttft,
             itl_p95=percentile_linear(itls, 95) if itls else None,
             finish=r.t_finish, preemptions=r.preemptions,
-            rejected=r.state is State.REJECTED)
+            rejected=r.state is State.REJECTED,
+            slo_class=r.slo_class, reject_reason=r.reject_reason)
 
 
 class StreamMetrics:
@@ -106,7 +109,8 @@ class StreamMetrics:
                 output_len=ev.output_len,
                 ttft=ts[0] - ev.arrival if ts else None,
                 itl_p95=percentile_linear(itls, 95) if itls else None,
-                finish=ev.t, preemptions=ev.preemptions, rejected=False)
+                finish=ev.t, preemptions=ev.preemptions, rejected=False,
+                slo_class=ev.slo_class)
             self.records.append(rec)
             self.finished.append(rec)
         elif isinstance(ev, RejectedEvent):
@@ -114,7 +118,8 @@ class StreamMetrics:
             self.records.append(RequestRecord(
                 rid=ev.rid, arrival=ev.arrival, prompt_len=ev.prompt_len,
                 output_len=ev.output_len, ttft=None, itl_p95=None,
-                finish=None, preemptions=ev.preemptions, rejected=True))
+                finish=None, preemptions=ev.preemptions, rejected=True,
+                slo_class=ev.slo_class, reject_reason=ev.reason))
 
     def finished_since(self, t_lo: float) -> List[RequestRecord]:
         """Records that finished at or after ``t_lo`` (windowed view)."""
@@ -186,9 +191,38 @@ def summarize(records: List[RequestRecord], slo: SLOConfig,
     }
 
 
+def per_class_summaries(records: List[RequestRecord], slo: SLOConfig,
+                        span_s: float,
+                        class_slos: Optional[Dict[str, SLOConfig]] = None
+                        ) -> Dict[str, Dict[str, float]]:
+    """One summary per SLO class present in ``records``, each evaluated
+    against that class's OWN SLO (``class_slos`` defaults to
+    ``serving.workloads.class_slos()``; the cluster-wide ``slo`` covers
+    classes without an entry).  A single-class trace yields one entry."""
+    if class_slos is None:
+        from repro.serving.workloads import class_slos as _defaults
+        class_slos = _defaults()
+    by_class: Dict[str, List[RequestRecord]] = {}
+    for rec in records:
+        by_class.setdefault(rec.slo_class, []).append(rec)
+    return {name: summarize(recs, class_slos.get(name, slo), span_s)
+            for name, recs in sorted(by_class.items())}
+
+
+def rejections_by_reason(records: List[RequestRecord]) -> Dict[str, int]:
+    """Rejection counts keyed by ``RejectedEvent.reason`` vocabulary."""
+    out: Dict[str, int] = {}
+    for rec in records:
+        if rec.rejected:
+            reason = rec.reject_reason or "never_fits"
+            out[reason] = out.get(reason, 0) + 1
+    return out
+
+
 def fleet_summarize(per_replica: Dict[str, List[RequestRecord]],
                     slo: SLOConfig, span_s: float,
-                    fleet_records: Optional[List[RequestRecord]] = None
+                    fleet_records: Optional[List[RequestRecord]] = None,
+                    class_slos: Optional[Dict[str, SLOConfig]] = None
                     ) -> Dict[str, object]:
     """Cluster-level aggregation: one fleet-wide summary over the union of
     all replicas' records, plus the per-replica summaries (every replica
@@ -197,17 +231,25 @@ def fleet_summarize(per_replica: Dict[str, List[RequestRecord]],
     ``fleet_records`` overrides the fleet-wide record set — the stream-
     consuming cluster passes its ``StreamMetrics.records``, which also
     carry cluster-side admission rejections that never reached a
-    replica."""
+    replica.
+
+    The result additionally carries ``per_class`` (one summary per SLO
+    class present, each judged against its own SLO from ``class_slos`` /
+    ``serving.workloads``) and, inside ``fleet``,
+    ``rejections_by_reason`` (never_fits / kv_headroom / class_shed)."""
     union: List[RequestRecord] = [r for recs in per_replica.values()
                                   for r in recs]
-    fleet = summarize(union if fleet_records is None else fleet_records,
-                      slo, span_s)
+    fleet_recs = union if fleet_records is None else fleet_records
+    fleet = summarize(fleet_recs, slo, span_s)
     fleet["replicas"] = len(per_replica)
     counts = {name: len(recs) for name, recs in per_replica.items()}
     fleet["min_replica_share"] = (min(counts.values()) / max(1, len(union))
                                   if counts and union else 0.0)
+    fleet["rejections_by_reason"] = rejections_by_reason(fleet_recs)
     return {
         "fleet": fleet,
         "per_replica": {name: summarize(recs, slo, span_s)
                         for name, recs in per_replica.items()},
+        "per_class": per_class_summaries(fleet_recs, slo, span_s,
+                                         class_slos=class_slos),
     }

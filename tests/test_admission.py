@@ -70,17 +70,42 @@ def test_rapid_oversized_head_does_not_starve_queue():
 def test_disagg_backpressure_retry_does_not_double_free():
     """Regression: a *transiently* full decode pool schedules a retry;
     the retry used to re-enter _kv_arrived and free the prefill-side KV
-    sequence a second time (KeyError out of the event loop)."""
+    sequence a second time (KeyError out of the event loop).
+
+    Both lifetimes (prompt + max_new_tokens) fit the 640-token pool
+    individually — requests whose lifetime can NEVER fit are now
+    rejected up front (see test_disagg_rejects_lifetime_oversize)."""
     cfg = get_config(ARCH)
     eng = make_engine("disagg", cfg, _serve("disagg"))
     eng.kv = KVCacheManager(40, 16)     # fits one 500-prompt, not two
     first = Request(rid=0, arrival=0.0, prompt_len=500,
-                    max_new_tokens=200)
+                    max_new_tokens=100)
     second = Request(rid=1, arrival=0.0, prompt_len=500, max_new_tokens=8)
     recs, _ = eng.run([first, second])  # KeyError before the fix
     assert first.state is State.FINISHED
     assert second.state is State.FINISHED
     assert not eng.rejected
+    assert eng.kv.allocator.free_count == eng.kv.allocator.num_blocks
+
+
+def test_disagg_rejects_lifetime_oversize():
+    """Livelock regression (ROADMAP item 5): a prompt that fits the
+    decode pool but whose prompt + worst-case output does not used to
+    either spin the decode-admission retry loop or — once admitted and
+    running alone — self-preempt on every decode step without emitting a
+    token.  It is now rejected at admission, and co-arriving feasible
+    work is unaffected."""
+    cfg = get_config(ARCH)
+    eng = make_engine("disagg", cfg, _serve("disagg"))
+    eng.kv = KVCacheManager(100, 16)    # 1600-token decode pool
+    # prompt fits (1500 <= 1600) but lifetime never does (1700 > 1600)
+    doomed = Request(rid=0, arrival=0.0, prompt_len=1500,
+                     max_new_tokens=200)
+    ok = Request(rid=1, arrival=0.0, prompt_len=500, max_new_tokens=50)
+    recs, _ = eng.run([doomed, ok])
+    assert doomed.state is State.REJECTED
+    assert doomed.reject_reason == "never_fits"
+    assert ok.state is State.FINISHED
     assert eng.kv.allocator.free_count == eng.kv.allocator.num_blocks
 
 

@@ -31,10 +31,10 @@ POOL_TOKENS = TINY_BLOCKS * PAGE
 # Prompt lengths come from two bands: "servable" prompts whose prompt +
 # full output fits the pool (12-token output cap below), and "oversized"
 # prompts the admission path must reject.  The band in between — fits
-# the pool but prompt+output does not — is deliberately excluded: such a
-# request livelocks the (pre-PR-5 and current) disagg engine by
-# self-preempting on every decode step, a latent seed behavior this
-# cost-only PR must not change (see ROADMAP open items).
+# the pool but prompt+output does not — is excluded because the
+# COLOCATED modes still stall such a request at zero progress when it
+# runs alone (disagg now rejects it at admission, ``never_fits``; see
+# test_liveness_properties.py for the band's liveness coverage).
 MAX_OUT = 12
 _prompt = st.one_of(st.integers(16, POOL_TOKENS - MAX_OUT),
                     st.integers(POOL_TOKENS + 1, 1200))

@@ -1,0 +1,96 @@
+"""Property-based liveness: every submitted request terminates.
+
+Hypothesis throws arbitrary multi-class, sessionful traces — servable
+prompts, pool-oversized prompts, and (disagg only) prompts in the
+"prompt fits but prompt+output never will" band — at each engine mode
+and asserts the loop drains with every request in a terminal state:
+FINISHED with exactly ``max_new_tokens`` tokens, or REJECTED with
+``reject_reason == "never_fits"``.  This is the regression net for the
+disagg self-preemption livelock (ROADMAP item 5): before the
+admission-time lifetime check, a band request running alone would
+self-preempt on every decode step forever.  The band stays excluded for
+the colocated modes, whose single-request decode stall is unchanged
+seed behavior.
+
+This module needs ``hypothesis`` (dev-only dep) and is skipped at
+collection when absent (see conftest.py).
+"""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core import make_engine
+from repro.core.request import Request, State
+from repro.kvcache import KVCacheManager
+
+CFG = get_config("llama3-70b")
+
+TINY_BLOCKS = 64
+PAGE = 16
+POOL_TOKENS = TINY_BLOCKS * PAGE
+MAX_OUT = 12
+
+# servable (prompt + worst-case output fits) and oversized (prompt alone
+# never fits) bands are safe everywhere; the in-between band — prompt
+# fits, prompt + output does not — is only safe on disagg, where the
+# lifetime admission check turns the former livelock into a
+# ``never_fits`` rejection
+_safe = st.one_of(st.integers(16, POOL_TOKENS - MAX_OUT),
+                  st.integers(POOL_TOKENS + 1, 1200))
+_band = st.integers(POOL_TOKENS - MAX_OUT + 1, POOL_TOKENS)
+
+_klass = st.sampled_from(["interactive", "batch", "best_effort"])
+_session = st.one_of(st.none(), st.sampled_from(["sa", "sb"]))
+
+
+def _serve(mode):
+    return ServeConfig(mode=mode, chips=32, slo=SLOConfig(itl_ms=100.0),
+                       disagg_split=(16, 16), max_batch_slots=4,
+                       max_seq_len=32768)
+
+
+def _engine(mode):
+    eng = make_engine(mode, CFG, _serve(mode))
+    # give colocated engines a session budget so parked-prefix adoption
+    # and LRU eviction run under real pool pressure; disagg keeps its
+    # sessionless split pools
+    budget = 0 if eng.kv_p is not None else 16
+    eng.kv = KVCacheManager(num_blocks=TINY_BLOCKS, page_size=PAGE,
+                            session_cache_blocks=budget)
+    if eng.kv_p is not None:
+        eng.kv_p = KVCacheManager(num_blocks=TINY_BLOCKS, page_size=PAGE)
+    return eng
+
+
+def _req(mode, rid, draw):
+    prompt_st = st.one_of(_safe, _band) if mode == "disagg" else _safe
+    return Request(rid=rid, arrival=0.0,
+                   prompt_len=draw(prompt_st),
+                   max_new_tokens=draw(st.integers(1, MAX_OUT)),
+                   slo_class=draw(_klass),
+                   session_id=draw(_session),
+                   cached_prefix_len=draw(st.integers(0, 64)))
+
+
+@pytest.mark.parametrize("mode", ["rapid", "hybrid", "disagg"])
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_every_request_terminates(mode, data):
+    eng = _engine(mode)
+    n = data.draw(st.integers(1, 10))
+    reqs = [_req(mode, i, data.draw) for i in range(n)]
+    for r in reqs:
+        eng.submit(r)
+    eng.loop.run()
+    for r in reqs:
+        assert r.state in (State.FINISHED, State.REJECTED), \
+            (mode, r.rid, r.state)
+        if r.state is State.REJECTED:
+            assert r.reject_reason == "never_fits"
+        else:
+            assert r.tokens_generated == r.max_new_tokens
+            # prefix-skip conservation holds even under preemption and
+            # re-prefill (preempt zeroes the prefix claim with the KV)
+            assert r.prefill_tokens_done + r.cached_prefix_len == \
+                r.prompt_len

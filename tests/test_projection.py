@@ -311,8 +311,9 @@ def test_admission_infeasible_for_prefill_pool():
                  prefill_kv_total_blocks=100, prefill_kv_free_blocks=100)
     rep = _FakeReplica(snap, serve)
     assert not ctl.feasible(rep, r)
-    verdict, fit = ctl.decide(r, [rep], now=0.0)
+    verdict, fit, reason = ctl.decide(r, [rep], now=0.0)
     assert verdict == "reject" and fit is None
+    assert reason == "never_fits"
 
 
 def test_forecast_phase_times_split_vs_colocated():

@@ -1,0 +1,230 @@
+"""Session prefix cache: KV manager park/adopt/evict mechanics,
+prefix-skip token conservation through the engines, and session-affinity
+routing vs migration invalidation at the cluster."""
+import collections
+import copy
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core import make_engine
+from repro.core.request import Request, State
+from repro.kvcache import KVCacheManager, OutOfBlocks, kv_pages_for
+from repro.serving import Cluster, RebalancePolicy, StreamMetrics
+
+ARCH = "llama3-70b"
+PAGE = 16
+
+
+def _serve(mode="rapid", chips=32, session_cache_frac=0.25):
+    return ServeConfig(mode=mode, chips=chips, slo=SLOConfig(itl_ms=100.0),
+                       disagg_split=(chips // 2, chips // 2),
+                       max_batch_slots=128,
+                       session_cache_frac=session_cache_frac)
+
+
+# ---------------------------------------------------------------------------
+# KV manager session mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_release_adopt_roundtrip():
+    kv = KVCacheManager(64, PAGE, session_cache_blocks=16)
+    blocks = kv.allocate_prompt(0, 100)           # 7 pages
+    assert kv.release_to_session(0, "s1")
+    assert kv.session_blocks == len(blocks)
+    assert kv.session_tokens("s1") == 100
+    assert kv.available_blocks == 64              # parked == reclaimable
+    # the next turn adopts the parked pages and only claims the suffix
+    need = kv.pages_needed(160, session_id="s1", max_prefix=100)
+    assert need == kv_pages_for(160, PAGE) - kv_pages_for(100, PAGE)
+    got = kv.allocate_prompt(1, 160, session_id="s1", max_prefix=100)
+    assert got[:len(blocks)] == blocks            # same physical pages
+    assert len(got) == kv_pages_for(160, PAGE)
+    assert kv.session_blocks == 0                 # adopted, no longer parked
+
+
+def test_session_hit_clamped_to_resident_and_prompt():
+    kv = KVCacheManager(64, PAGE, session_cache_blocks=16)
+    kv.allocate_prompt(0, 100)
+    kv.release_to_session(0, "s1")
+    assert kv.session_hit_tokens("s1", 160, 100) == 100
+    assert kv.session_hit_tokens("s1", 160, 999) == 100   # claim > resident
+    assert kv.session_hit_tokens("s1", 50, 100) == 49     # prompt-1 floor
+    assert kv.session_hit_tokens("s1", 160, 0) == 0
+    assert kv.session_hit_tokens(None, 160, 100) == 0
+    assert kv.session_hit_tokens("nope", 160, 100) == 0
+
+
+def test_budget_zero_is_plain_free():
+    kv = KVCacheManager(64, PAGE)                 # no session budget
+    kv.allocate_prompt(0, 100)
+    assert not kv.release_to_session(0, "s1")
+    assert kv.session_blocks == 0
+    assert kv.allocator.free_count == 64
+
+
+def test_lru_eviction_within_budget():
+    kv = KVCacheManager(64, PAGE, session_cache_blocks=8)
+    kv.allocate_prompt(0, 5 * PAGE)
+    kv.release_to_session(0, "old")
+    kv.allocate_prompt(1, 5 * PAGE)
+    kv.release_to_session(1, "new")               # 10 > 8: evicts "old"
+    assert kv.session_tokens("old") == 0
+    assert kv.session_tokens("new") == 5 * PAGE
+    assert kv.session_blocks == 5
+
+
+def test_parked_blocks_never_starve_live_work():
+    kv = KVCacheManager(16, PAGE, session_cache_blocks=16)
+    kv.allocate_prompt(0, 10 * PAGE)
+    kv.release_to_session(0, "s1")
+    assert kv.allocator.free_count == 6
+    # a sessionless prompt needing 12 pages must reclaim the parked KV
+    blocks = kv.allocate_prompt(1, 12 * PAGE)
+    assert len(blocks) == 12
+    assert kv.session_tokens("s1") == 0           # evicted, not OutOfBlocks
+    try:
+        kv.allocate_prompt(2, 8 * PAGE)
+    except OutOfBlocks:
+        pass
+    else:
+        raise AssertionError("pool is genuinely full; expected OutOfBlocks")
+
+
+def test_drop_session_frees_blocks():
+    kv = KVCacheManager(64, PAGE, session_cache_blocks=16)
+    kv.allocate_prompt(0, 100)
+    kv.release_to_session(0, "s1")
+    kv.drop_session("s1")
+    assert kv.session_blocks == 0
+    assert kv.allocator.free_count == 64
+    kv.drop_session("s1")                         # idempotent
+
+
+# ---------------------------------------------------------------------------
+# prefix-skip conservation through the engines
+# ---------------------------------------------------------------------------
+
+
+def _session_trace(n_sessions=6, turns=3):
+    reqs, rid = [], 0
+    for s in range(n_sessions):
+        ctx, t = 0, 0.3 * s
+        for _ in range(turns):
+            prompt = ctx + 600
+            reqs.append(Request(rid=rid, arrival=t, prompt_len=prompt,
+                                max_new_tokens=64, slo_class="interactive",
+                                session_id=f"s{s}", cached_prefix_len=ctx))
+            ctx = prompt + 64
+            t += 2.0
+            rid += 1
+    reqs.sort(key=lambda r: r.arrival)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+def test_prefill_token_conservation_rapid_and_hybrid():
+    """After prefill, skipped + prefilled tokens must equal the prompt —
+    and later turns must actually hit the parked prefix."""
+    cfg = get_config(ARCH)
+    for mode in ("rapid", "hybrid"):
+        eng = make_engine(mode, cfg, _serve(mode))
+        reqs = [copy.deepcopy(r) for r in _session_trace()]
+        metrics = StreamMetrics()
+        eng.subscribe(metrics)
+        eng.enqueue(reqs)
+        eng.loop.run()
+        assert all(r.state is State.FINISHED for r in reqs), mode
+        hits = [r for r in reqs if r.cached_prefix_len > 0]
+        assert hits, f"{mode}: no prefix hits on a pure session trace"
+        for r in reqs:
+            assert r.prefill_tokens_done + r.cached_prefix_len == \
+                r.prompt_len, (mode, r.rid)
+        # every request still emits exactly max_new_tokens tokens
+        for rec in metrics.records:
+            assert rec.output_len == reqs[rec.rid].max_new_tokens
+
+
+def test_disagg_ignores_sessions():
+    """Split-pool engines transfer KV between pools; the session cache is
+    colocated-only (budget 0) and requests must behave as sessionless."""
+    cfg = get_config(ARCH)
+    eng = make_engine("disagg", cfg, _serve("disagg"))
+    assert eng.kv.session_cache_blocks == 0
+    reqs = [copy.deepcopy(r) for r in _session_trace(n_sessions=2)]
+    eng.enqueue(reqs)
+    eng.loop.run()
+    assert all(r.state is State.FINISHED for r in reqs)
+    assert all(r.cached_prefix_len == 0 for r in reqs)  # clamped to miss
+
+
+def test_session_cache_frac_sizes_budget():
+    cfg = get_config(ARCH)
+    on = make_engine("rapid", cfg, _serve("rapid"))
+    off = make_engine("rapid", cfg, _serve("rapid", session_cache_frac=0.0))
+    assert on.kv.session_cache_blocks > 0
+    assert off.kv.session_cache_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# cluster: session affinity vs migration
+# ---------------------------------------------------------------------------
+
+
+def test_session_affinity_routes_turns_to_home_replica():
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(), ["rapid"] * 3,
+                      router="round_robin", session_affinity=True)
+    reqs = [copy.deepcopy(r) for r in _session_trace(n_sessions=4)]
+    cluster.run(reqs)
+    owner = {}
+    for rep in cluster.replicas:
+        for r in rep.assigned:
+            owner.setdefault(r.session_id, set()).add(rep.idx)
+    # every session's turns landed on ONE replica (round_robin would
+    # scatter them), so later turns hit the parked prefix
+    assert all(len(reps) == 1 for reps in owner.values())
+    hits = sum(1 for rep in cluster.replicas for r in rep.assigned
+               if r.cached_prefix_len > 0)
+    assert hits > 0
+
+
+def test_no_affinity_scatters_sessions():
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(), ["rapid"] * 3, router="round_robin")
+    reqs = [copy.deepcopy(r) for r in _session_trace(n_sessions=4)]
+    cluster.run(reqs)
+    owner = collections.defaultdict(set)
+    for rep in cluster.replicas:
+        for r in rep.assigned:
+            owner[r.session_id].add(rep.idx)
+    assert any(len(reps) > 1 for reps in owner.values())
+
+
+def test_migration_invalidates_session_prefix():
+    """A migrated session's parked prefix on the source is dropped and
+    the session re-homed: the next turn must not claim a stale prefix."""
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(), ["rapid"] * 2,
+                      router="least_loaded", session_affinity=True,
+                      rebalance=RebalancePolicy())
+    src, tgt = cluster.replicas
+    src.engine.kv = KVCacheManager(80, PAGE, session_cache_blocks=40)
+    # a hog fills the pool so the session's next turn queues KV-less
+    hog = Request(rid=9, arrival=0.0, prompt_len=1000, max_new_tokens=500)
+    src.engine.submit(hog)
+    victim = Request(rid=0, arrival=0.0, prompt_len=640, max_new_tokens=8,
+                     session_id="sess", cached_prefix_len=576)
+    src.assigned.append(victim)
+    src.engine.submit(victim)
+    cand = src.engine.migration_candidate()
+    assert cand is not None and cand[0] is victim and not cand[1]
+    # now park a prefix for the session on src and home it there
+    src.engine.kv.allocate_prompt(999, 256)
+    assert src.engine.kv.release_to_session(999, "sess")
+    cluster._session_home["sess"] = src.idx
+    cluster._migrate(src, tgt, victim, False)
+    assert victim.cached_prefix_len == 0
+    assert src.engine.kv.session_tokens("sess") == 0
+    assert cluster._session_home["sess"] == tgt.idx
+    assert any(r.rid == victim.rid for r in tgt.assigned)

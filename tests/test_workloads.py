@@ -1,0 +1,203 @@
+"""Multi-tenant workloads: trace generator determinism and session
+shape, class-ordered admission (best_effort shed first, interactive
+never), class-ranked preemption, and per-class metrics."""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core.preemption import PreemptionPolicy
+from repro.core.request import Request, State, class_rank
+from repro.serving import (WORKLOAD_CLASSES, AdmissionPolicy, Cluster,
+                           diurnal_rate, flash_crowd_rate,
+                           generate_multiclass_trace, nhpp_arrivals,
+                           run_fleet)
+from repro.serving.metrics import (RequestRecord, per_class_summaries,
+                                   rejections_by_reason)
+
+ARCH = "llama3-70b"
+
+
+def _serve(chips=32):
+    return ServeConfig(mode="rapid", chips=chips,
+                       slo=SLOConfig(itl_ms=100.0),
+                       disagg_split=(chips // 2, chips // 2),
+                       max_batch_slots=128)
+
+
+# ---------------------------------------------------------------------------
+# trace generation
+# ---------------------------------------------------------------------------
+
+
+def test_multiclass_trace_deterministic_and_sorted():
+    a = generate_multiclass_trace(qps=4.0, duration_s=20.0, seed=9)
+    b = generate_multiclass_trace(qps=4.0, duration_s=20.0, seed=9)
+    key = lambda r: (r.rid, r.arrival, r.prompt_len, r.max_new_tokens,  # noqa: E731
+                     r.slo_class, r.session_id, r.cached_prefix_len)
+    assert [key(r) for r in a] == [key(r) for r in b]
+    assert [r.rid for r in a] == list(range(len(a)))
+    assert all(x.arrival <= y.arrival for x, y in zip(a, a[1:]))
+    classes = {r.slo_class for r in a}
+    assert classes <= set(WORKLOAD_CLASSES)
+    assert len(classes) > 1, "default mix should produce several classes"
+
+
+def test_session_turns_share_growing_prefix():
+    reqs = generate_multiclass_trace(qps=4.0, duration_s=30.0, seed=3)
+    by_sid = collections.defaultdict(list)
+    for r in reqs:
+        if r.session_id is not None:
+            by_sid[r.session_id].append(r)
+    assert by_sid, "interactive sessions expected in the default mix"
+    multi = [t for t in by_sid.values() if len(t) > 1]
+    assert multi, "some sessions should span multiple turns"
+    for turns in by_sid.values():
+        ctx = 0
+        prev = -1.0
+        for t in turns:
+            assert t.arrival > prev
+            # turn k's prompt extends the conversation so far; the
+            # shared prefix is exactly that prior context
+            assert t.cached_prefix_len == ctx
+            assert t.prompt_len > t.cached_prefix_len
+            ctx = t.prompt_len + t.max_new_tokens
+            prev = t.arrival
+
+
+def test_nhpp_thinning_tracks_rate():
+    rng = np.random.default_rng(0)
+    rate = flash_crowd_rate(2.0, 20.0, 100.0, 200.0)
+    ts = nhpp_arrivals(rate, 300.0, rng)
+    burst = sum(1 for t in ts if 100.0 <= t < 200.0)
+    calm = len(ts) - burst
+    # 100s at 20/s vs 200s at 2/s: the burst should dominate ~5x
+    assert burst > 3 * calm
+    d = diurnal_rate(4.0, amplitude=0.5, period_s=100.0)
+    assert d.rate_max == pytest.approx(6.0)
+    with pytest.raises(ValueError):
+        diurnal_rate(1.0, amplitude=1.5)
+
+
+# ---------------------------------------------------------------------------
+# class-ordered admission
+# ---------------------------------------------------------------------------
+
+
+def _pressured_cluster(policy):
+    cfg = get_config(ARCH)
+    cluster = Cluster(cfg, _serve(), ["rapid"], router="least_loaded",
+                      admission=policy)
+    from repro.kvcache import KVCacheManager
+    cluster.replicas[0].engine.kv = KVCacheManager(200, 16)  # 3200 tokens
+    return cluster
+
+
+def test_class_aware_admission_sheds_best_effort_first():
+    """Under identical pressure the class-aware controller sheds the
+    best_effort arrival (reason class_shed) and still serves the
+    interactive one — the class-blind controller treats them alike."""
+    policy = AdmissionPolicy(kv_headroom=0.9, projected_output_frac=1.0,
+                             retry_s=0.1, max_wait_s=60.0,
+                             class_aware=True)
+    cluster = _pressured_cluster(policy)
+    hog = Request(rid=0, arrival=0.0, prompt_len=2000, max_new_tokens=400,
+                  slo_class="batch")
+    be = Request(rid=1, arrival=0.05, prompt_len=1500, max_new_tokens=64,
+                 slo_class="best_effort")
+    inter = Request(rid=2, arrival=0.1, prompt_len=1500, max_new_tokens=64,
+                    slo_class="interactive")
+    cluster.run([hog, be, inter])
+    assert be.state is State.REJECTED
+    assert be.reject_reason == "class_shed"
+    assert cluster.admission.stats["shed"] == 1
+    assert inter.state is State.FINISHED
+    assert hog.state is State.FINISHED
+
+
+def test_class_blind_admission_treats_classes_alike():
+    policy = AdmissionPolicy(kv_headroom=0.9, projected_output_frac=1.0,
+                             retry_s=0.1, max_wait_s=60.0)
+    cluster = _pressured_cluster(policy)
+    hog = Request(rid=0, arrival=0.0, prompt_len=2000, max_new_tokens=400,
+                  slo_class="batch")
+    be = Request(rid=1, arrival=0.05, prompt_len=1500, max_new_tokens=64,
+                 slo_class="best_effort")
+    cluster.run([hog, be])
+    # no shedding: the best_effort arrival queues and is served once the
+    # hog's decode frees pool headroom
+    assert be.state is State.FINISHED
+    assert cluster.admission.stats.get("shed", 0) == 0
+
+
+def test_headroom_for_ordering():
+    p = AdmissionPolicy(kv_headroom=0.9, class_aware=True)
+    assert p.headroom_for("interactive") == pytest.approx(0.9)
+    assert p.headroom_for("interactive") > p.headroom_for("batch") > \
+        p.headroom_for("best_effort")
+    blind = AdmissionPolicy(kv_headroom=0.9)
+    assert blind.headroom_for("best_effort") == pytest.approx(0.9)
+
+
+# ---------------------------------------------------------------------------
+# class-ranked preemption
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_ranks_class_before_order():
+    inter = Request(rid=0, arrival=2.0, prompt_len=64, max_new_tokens=8,
+                    slo_class="interactive")
+    batch = Request(rid=1, arrival=1.0, prompt_len=64, max_new_tokens=8,
+                    slo_class="batch")
+    be = Request(rid=2, arrival=0.0, prompt_len=64, max_new_tokens=8,
+                 slo_class="best_effort")
+    pol = PreemptionPolicy(order="newest", class_aware=True)
+    # best_effort loses despite being the OLDEST arrival
+    assert pol.choose([inter, batch, be]) is be
+    assert pol.choose([inter, batch]) is batch
+    blind = PreemptionPolicy(order="newest", class_aware=False)
+    # class-blind: newest arrival loses regardless of class
+    assert blind.choose([inter, batch, be]) is inter
+    # single-class batches tie on rank => identical to class-blind
+    solo = [Request(rid=i, arrival=float(i), prompt_len=64,
+                    max_new_tokens=8) for i in range(3)]
+    assert pol.choose(solo) is blind.choose(solo)
+    assert class_rank("best_effort") > class_rank("batch") > \
+        class_rank("interactive")
+
+
+# ---------------------------------------------------------------------------
+# per-class metrics
+# ---------------------------------------------------------------------------
+
+
+def test_per_class_summaries_use_own_slos():
+    slo = SLOConfig(itl_ms=100.0)
+    recs = [
+        RequestRecord(rid=0, arrival=0.0, prompt_len=100, output_len=10,
+                      ttft=0.5, itl_p95=0.15, finish=2.0,
+                      slo_class="interactive"),
+        RequestRecord(rid=1, arrival=0.0, prompt_len=100, output_len=10,
+                      ttft=0.5, itl_p95=0.15, finish=2.0,
+                      slo_class="batch"),
+        RequestRecord(rid=2, arrival=0.0, prompt_len=100, output_len=0,
+                      ttft=None, itl_p95=None, finish=None, rejected=True,
+                      slo_class="best_effort", reject_reason="class_shed"),
+    ]
+    per = per_class_summaries(recs, slo, span_s=10.0)
+    # 150ms p95 ITL misses interactive's 100ms SLO but meets batch's 250ms
+    assert per["interactive"]["slo_attainment"] == 0.0
+    assert per["batch"]["slo_attainment"] == 1.0
+    assert per["best_effort"]["rejected"] == 1
+    assert rejections_by_reason(recs) == {"class_shed": 1}
+
+
+def test_fleet_summary_carries_class_sections():
+    cfg = get_config(ARCH)
+    reqs = generate_multiclass_trace(qps=3.0, duration_s=10.0, seed=1)
+    summary, _ = run_fleet(cfg, _serve(), ["rapid"], "least_loaded", reqs)
+    assert set(summary["per_class"]) == {r.slo_class for r in reqs}
+    assert "rejections_by_reason" in summary["fleet"]
+    for s in summary["per_class"].values():
+        assert {"goodput_req_s", "slo_attainment"} <= set(s)
