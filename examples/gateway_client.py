@@ -1,0 +1,124 @@
+"""Gateway client demo: simulated churn walkthrough + real HTTP client.
+
+Default (no server needed) — drive the gateway on the simulated clock
+through a crash-and-failover scenario and print the per-request event
+streams:
+
+    PYTHONPATH=src python examples/gateway_client.py
+
+Against a live server (start one with
+``python -m repro.launch.serve --serve http --port 8080``):
+
+    PYTHONPATH=src python examples/gateway_client.py \
+        --url http://127.0.0.1:8080 --prompt-len 512 --max-new-tokens 32
+
+The HTTP path is a stdlib-only NDJSON streaming client: it prints each
+typed event line as it arrives (the same ``core.events`` records the
+simulator emits, via ``event_from_json``).
+"""
+import argparse
+import json
+import socket
+import sys
+import urllib.parse
+
+sys.path.insert(0, "src")
+
+from repro.core.events import (FinishedEvent, RejectedEvent,  # noqa: E402
+                               TokenEvent, event_from_json)
+
+
+def sim_demo() -> int:
+    from repro.config import SLOConfig, ServeConfig, get_config
+    from repro.core.request import Request
+    from repro.serving import Gateway
+
+    cfg = get_config("llama3-70b")
+    serve = ServeConfig(mode="rapid", chips=16, slo=SLOConfig(itl_ms=100.0),
+                        chunk_size=512, disagg_split=(8, 8),
+                        max_batch_slots=64)
+    gw = Gateway(cfg, serve, modes=["rapid", "rapid"], router="round_robin")
+    print("fleet:", gw.health()["workers"])
+
+    seen = {}
+    reqs = [Request(rid=i, arrival=0.01 * i, prompt_len=256,
+                    max_new_tokens=120) for i in range(6)]
+    gw._expected = len(reqs)
+    for r in reqs:
+        def go(r=r):
+            seen[r.rid] = []
+            gw.submit(r, consumer=seen[r.rid].append)
+        gw.clock.at(r.arrival, go)
+
+    print("t=0.20  killing worker rapid-0 mid-decode ...")
+    gw.clock.at(0.2, lambda: gw.kill_worker(0))
+    gw.clock.run()
+
+    for rid in sorted(seen):
+        evs = seen[rid]
+        toks = [e for e in evs if isinstance(e, TokenEvent)]
+        fin = evs[-1]
+        if isinstance(fin, FinishedEvent):
+            print(f"  r{rid}: {len(toks)} tokens, retries={fin.retries}, "
+                  f"finished t={fin.t:.2f}s")
+        elif isinstance(fin, RejectedEvent):
+            print(f"  r{rid}: REJECTED ({fin.reason}) after "
+                  f"{fin.output_len} tokens")
+    s = gw.metrics_summary()["fleet"]
+    print(f"fleet: completed={s['completed']} retries={s['retries']} "
+          f"rejected={s['rejected']} loop={s['loop']}")
+    print("workers now:", gw.health()["workers"])
+    return 0
+
+
+def http_demo(url: str, prompt_len: int, max_new_tokens: int,
+              session_id: str = None) -> int:
+    u = urllib.parse.urlparse(url)
+    host, port = u.hostname or "127.0.0.1", u.port or 8080
+    body = {"prompt_len": prompt_len, "max_new_tokens": max_new_tokens}
+    if session_id:
+        body["session_id"] = session_id
+    payload = json.dumps(body).encode()
+    with socket.create_connection((host, port), timeout=30) as sock:
+        sock.sendall((f"POST /v1/generate HTTP/1.1\r\nHost: {host}\r\n"
+                      f"Content-Length: {len(payload)}\r\n\r\n").encode()
+                     + payload)
+        f = sock.makefile("rb")
+        status = f.readline().decode().split()
+        if status[1] != "200":
+            print("HTTP", status[1], file=sys.stderr)
+            return 1
+        while f.readline() not in (b"\r\n", b"\n", b""):
+            pass                                 # skip headers
+        n = 0
+        for line in f:
+            ev = event_from_json(line.decode())
+            if isinstance(ev, TokenEvent):
+                n += 1
+                print(f"\rtokens: {n}", end="", flush=True)
+            elif isinstance(ev, FinishedEvent):
+                print(f"\nfinished: {ev.output_len} tokens, "
+                      f"retries={ev.retries}, truncated={ev.truncated}")
+            elif isinstance(ev, RejectedEvent):
+                print(f"\nrejected: {ev.reason}")
+            else:
+                print(f"[{ev.phase}]", end=" ", flush=True)
+    return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--url", default=None,
+                   help="gateway base URL; omit for the simulated demo")
+    p.add_argument("--prompt-len", type=int, default=512)
+    p.add_argument("--max-new-tokens", type=int, default=32)
+    p.add_argument("--session-id", default=None)
+    args = p.parse_args(argv)
+    if args.url:
+        return http_demo(args.url, args.prompt_len, args.max_new_tokens,
+                         args.session_id)
+    return sim_demo()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

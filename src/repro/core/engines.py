@@ -285,6 +285,10 @@ class Engine:
                     self.queues[adm.from_queue].appendleft(r)
                 failed_admits.add(r.rid)
                 continue
+            if adm.truncate_to is not None and \
+                    adm.truncate_to < r.max_new_tokens:
+                r.max_new_tokens = adm.truncate_to
+                r.truncated = True
             if adm.stamp_t_blocks:
                 r.t_blocks = now
             r.state = adm.state
@@ -479,7 +483,8 @@ class Engine:
         self.finished.append(r)
         self.stream.emit(FinishedEvent(
             r.rid, self.loop.now, r.arrival, r.prompt_len,
-            r.tokens_generated, r.preemptions, r.slo_class))
+            r.tokens_generated, r.preemptions, r.slo_class,
+            retries=r.retries, truncated=r.truncated))
 
     def _reject(self, r: Request, reason: str = "never_fits") -> None:
         """A request whose prompt can never fit the pool is turned away
@@ -492,7 +497,8 @@ class Engine:
         self.rejected.append(r)
         self.stream.emit(RejectedEvent(
             r.rid, self.loop.now, r.arrival, r.prompt_len, reason,
-            r.tokens_generated, r.preemptions, r.slo_class))
+            r.tokens_generated, r.preemptions, r.slo_class,
+            retries=r.retries))
 
     # -- local preemption (recompute on resume) ------------------------------
     def _preempt_victim(self) -> Optional[Request]:
@@ -524,6 +530,58 @@ class Engine:
         sched = self.scheduler
         victim.state = sched.requeue_state
         self.queues[sched.requeue_queue].appendleft(victim)
+
+    # -- targeted removal / crash halt (serving gateway) --------------------
+    def evict_request(self, r: Request) -> bool:
+        """Remove ONE specific request from this engine entirely.  Unlike
+        ``_preempt_victim`` the victim is chosen by the caller (gateway
+        backpressure pause, targeted recovery) and is NOT requeued here —
+        the caller re-``submit()``s it (possibly on another replica)
+        later; recompute-on-resume re-prefills the context and token
+        emission continues from ``tokens_generated``.  Returns False when
+        ``r`` is pinned inside an in-flight lane step (mid-prefill,
+        mid-transfer): callers retry after the step completes."""
+        if r in self.running:
+            self.running.remove(r)
+            self.kv.preempt(r.rid)
+            r.preemptions += 1
+            r.blocks = None
+            r.prefill_tokens_done = 0
+            r.cached_prefix_len = 0
+            r.state = State.PREEMPTED
+            self.stream.emit(PhaseEvent(r.rid, self.loop.now, "preempted"))
+            return True
+        for q in self.queues.values():
+            if r in q:
+                q.remove(r)
+                # only count a preemption when work is actually lost:
+                # a request still waiting for KV has nothing to recompute
+                if r.blocks is not None or r.prefill_tokens_done > 0:
+                    r.preemptions += 1
+                    self.stream.emit(PhaseEvent(r.rid, self.loop.now,
+                                                "preempted"))
+                if r.blocks is not None:
+                    self.kv.preempt(r.rid)
+                    r.blocks = None
+                    r.cached_prefix_len = 0
+                r.prefill_tokens_done = 0
+                r.state = State.PREEMPTED
+                return True
+        return False
+
+    def halt(self) -> None:
+        """Model this engine crashing: stop planning new work.  Pending
+        step-completion callbacks are already on the (shared) loop and
+        still fire — they emit into a stream nobody forwards anymore and
+        then find an inert scheduler, so the replica freezes instead of
+        leaking events forever.  Irreversible; the gateway replaces a
+        crashed worker with a fresh one."""
+        if not isinstance(self.scheduler, _HaltedScheduler):
+            self.scheduler = _HaltedScheduler(self.scheduler)
+
+    @property
+    def halted(self) -> bool:
+        return isinstance(self.scheduler, _HaltedScheduler)
 
     # -- cross-replica migration (cluster rebalance tick) -------------------
     def _peek_queued_for_migration(self) -> Optional[Request]:
@@ -698,6 +756,22 @@ class Engine:
             chips_prefill=getattr(self, "chips_p", self.serve.chips),
             chips_decode=getattr(self, "chips_d", self.serve.chips),
             kv_session_blocks=self.kv.session_blocks)
+
+
+class _HaltedScheduler:
+    """Scheduler stand-in installed by ``Engine.halt()``: keeps the
+    topology attributes (queue accounting, load snapshots still work)
+    but plans nothing, so in-flight completions drain without launching
+    new steps."""
+
+    def __init__(self, inner: Scheduler):
+        self._inner = inner
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def schedule(self, view: SchedView) -> StepPlan:
+        return StepPlan()
 
 
 # legacy name: PR-1/PR-2 callers subclassed/annotated against BaseEngine

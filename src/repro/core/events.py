@@ -19,6 +19,13 @@ Every request ends with exactly one ``FinishedEvent`` or
 ``RejectedEvent``; its ``TokenEvent`` times are monotone and count
 exactly ``max_new_tokens`` on success (asserted in tests/test_events.py).
 
+The stream is also the serving gateway's **wire format**: each event
+maps to one JSON line (``event_to_json`` / ``event_from_json``) with a
+``type`` discriminator, and the mapping round-trips bit-identically —
+``json`` serializes floats via ``repr``, which Python guarantees parses
+back to the same float (tests/test_event_wire.py pins this over
+engine-generated traces).
+
 ``EventStream`` is a synchronous pub/sub hub with a replay log: under
 the virtual clock "streaming" means subscribers run inline at emission
 time (same ``loop.now``), and ``events()`` returns everything emitted so
@@ -35,7 +42,8 @@ consumers stop paying a full copy per read.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple, Union
+import json
+from typing import Callable, Dict, List, Mapping, Optional, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True, slots=True)
@@ -54,6 +62,11 @@ class PhaseEvent:
 
 @dataclasses.dataclass(frozen=True, slots=True)
 class FinishedEvent:
+    """Terminal success.  ``retries`` counts gateway-level failovers
+    (the request was re-submitted to another worker after its replica
+    crashed); ``truncated`` means admission capped ``max_new_tokens`` so
+    prompt+output fits a colocated pool (``output_len`` is the capped
+    count)."""
     rid: int
     t: float
     arrival: float
@@ -61,6 +74,8 @@ class FinishedEvent:
     output_len: int
     preemptions: int = 0
     slo_class: str = "interactive"
+    retries: int = 0
+    truncated: bool = False
 
 
 @dataclasses.dataclass(frozen=True, slots=True)
@@ -72,7 +87,9 @@ class RejectedEvent:
       * ``kv_headroom`` — pools are full now and the cluster-side wait
         deadline expired;
       * ``class_shed``  — class-aware admission shed a lower-importance
-        class to protect interactive headroom.
+        class to protect interactive headroom;
+      * ``worker_lost`` — the gateway exhausted its failover retries (or
+        had no healthy worker left) after replica crashes.
     """
     rid: int
     t: float
@@ -82,11 +99,64 @@ class RejectedEvent:
     output_len: int = 0
     preemptions: int = 0
     slo_class: str = "interactive"
+    retries: int = 0
 
 
 Event = Union[TokenEvent, PhaseEvent, FinishedEvent, RejectedEvent]
 
 TERMINAL_EVENTS = (FinishedEvent, RejectedEvent)
+
+
+# ---------------------------------------------------------------------------
+# Wire format (serving gateway): one JSON line per event
+# ---------------------------------------------------------------------------
+
+WIRE_TYPES: Dict[str, type] = {
+    "token": TokenEvent,
+    "phase": PhaseEvent,
+    "finished": FinishedEvent,
+    "rejected": RejectedEvent,
+}
+_WIRE_TAGS: Dict[type, str] = {cls: tag for tag, cls in WIRE_TYPES.items()}
+
+
+def event_to_wire(ev: Event) -> Dict[str, object]:
+    """Event -> plain dict with a ``type`` discriminator."""
+    d: Dict[str, object] = {"type": _WIRE_TAGS[type(ev)]}
+    for f in dataclasses.fields(ev):
+        d[f.name] = getattr(ev, f.name)
+    return d
+
+
+def event_from_wire(d: Mapping[str, object]) -> Event:
+    """Inverse of ``event_to_wire``; raises ``ValueError`` on unknown or
+    missing ``type`` tags (a malformed wire line must not surface as a
+    ``KeyError`` deep in a stream consumer)."""
+    kw = dict(d)
+    tag = kw.pop("type", None)
+    cls = WIRE_TYPES.get(tag)
+    if cls is None:
+        raise ValueError(f"unknown wire event type {tag!r}")
+    try:
+        return cls(**kw)
+    except TypeError as e:
+        raise ValueError(f"bad wire fields for {tag!r}: {e}") from None
+
+
+def event_to_json(ev: Event) -> str:
+    """One JSON line (no trailing newline).  Floats serialize via
+    ``repr`` so decode returns the identical value."""
+    return json.dumps(event_to_wire(ev), separators=(",", ":"))
+
+
+def event_from_json(line: str) -> Event:
+    try:
+        d = json.loads(line)
+    except json.JSONDecodeError as e:
+        raise ValueError(f"bad wire line: {e}") from None
+    if not isinstance(d, dict):
+        raise ValueError(f"bad wire line: expected object, got {type(d)}")
+    return event_from_wire(d)
 
 
 class EventStream:

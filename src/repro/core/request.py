@@ -69,6 +69,12 @@ class Request:
     t_finish: Optional[float] = None
     preemptions: int = 0
     reject_reason: Optional[str] = None  # set iff state == REJECTED
+    # gateway-level failovers: times this request was re-submitted to a
+    # different worker after its replica crashed (serving/gateway.py)
+    retries: int = 0
+    # admission capped max_new_tokens so prompt+output fits a colocated
+    # pool (production-shaped truncation instead of a decode stall)
+    truncated: bool = False
 
     @property
     def ttft(self) -> Optional[float]:

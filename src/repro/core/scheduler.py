@@ -118,13 +118,17 @@ class SchedView:
 class Admission:
     """Allocate decode-pool blocks for ``request`` and move it between
     queues.  ``from_queue is None`` means the request is an in-flight
-    disagg transfer (held outside any queue)."""
+    disagg transfer (held outside any queue).  ``truncate_to`` asks the
+    engine to cap the request's ``max_new_tokens`` at admission (and
+    mark it ``truncated``) so prompt+output fits the pool — colocated
+    topologies truncate where disagg rejects (ROADMAP item 5)."""
     request: Request
     from_queue: Optional[str]
     to_queue: str
     state: State
     stamp_t_blocks: bool = True
     stamp_prefill_start: bool = False
+    truncate_to: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -238,6 +242,24 @@ class Scheduler:
         return kv_pages_for(prompt_len, page_size) <= kv.allocator.num_blocks
 
     @staticmethod
+    def _lifetime_cap(r: Request, kv: KVCacheManager,
+                      page_size: int) -> Optional[int]:
+        """Colocated pools: cap for the single-request decode stall
+        (ROADMAP item 5).  A prompt that fits but whose prompt+output
+        never will would, once running alone, self-preempt on every
+        decode step forever.  Production systems truncate instead: cap
+        ``max_new_tokens`` so the fully-grown context fits the pool.
+        Generating N tokens appends N-1 tokens of KV beyond the prompt
+        (the first token comes out of prefill; the last token's KV is
+        never appended), so the exact bound is
+        ``prompt + max_new - 1 <= pool_tokens``.  Returns the cap, or
+        None when the request already fits over its lifetime."""
+        pool_tokens = kv.allocator.num_blocks * page_size
+        if r.prompt_len + r.max_new_tokens - 1 <= pool_tokens:
+            return None
+        return pool_tokens - r.prompt_len + 1
+
+    @staticmethod
     def _pages_needed(r: Request, kv: KVCacheManager, page_size: int,
                       claimed: set) -> int:
         """Pages admitting ``r`` would newly claim, net of any parked
@@ -306,7 +328,8 @@ class RapidScheduler(Scheduler):
                 free -= need
                 plan.admits.append(Admission(
                     r, "waiting_kv", "waiting_prefill",
-                    State.WAITING_PREFILL))
+                    State.WAITING_PREFILL,
+                    truncate_to=self._lifetime_cap(r, view.kv, ps)))
                 admitted.append(r)
         # -- prefill actor: whole prompts up to the token cap ------------
         if not view.lanes["prefill"].busy:
@@ -385,7 +408,8 @@ class HybridScheduler(Scheduler):
             slots += 1
             plan.admits.append(Admission(
                 r, "waiting", "chunking", State.PREFILLING,
-                stamp_prefill_start=True))
+                stamp_prefill_start=True,
+                truncate_to=self._lifetime_cap(r, view.kv, ps)))
             admitted.append(r)
         # -- Sarathi: budget filled with decodes first, then chunks ------
         bs = len(view.running)

@@ -32,6 +32,16 @@ pools independently.  Per-pool fleet shapes use ``mode:COUNTxP+D``:
         --qps 16 --mix disagg:2x12+20 --scale-policy projection \
         --max-replicas 4
 
+``--serve http`` starts the online gateway instead of replaying a
+trace: an asyncio front-end with admission, routing, heartbeat health
+checks and crash failover, streaming each request's typed event stream
+as JSON lines (serving/gateway.py + serving/http.py):
+
+    python -m repro.launch.serve --arch llama3-70b --mode rapid \
+        --replicas 2 --serve http --port 8080
+    curl -N -X POST http://127.0.0.1:8080/v1/generate \
+        -d '{"prompt_len": 512, "max_new_tokens": 64}'
+
 Engine logic is real; step durations come from the calibrated TPU-v5e
 perfmodel (this container has no accelerator — DESIGN.md §6).  Use
 examples/serve_real.py for actual on-CPU token generation with a
@@ -170,8 +180,36 @@ def main(argv=None):
                         "scaling")
     p.add_argument("--min-replicas", type=int, default=1)
     p.add_argument("--max-replicas", type=int, default=4)
+    p.add_argument("--serve", default="offline",
+                   choices=["offline", "http"],
+                   help="'http' starts the online gateway (streaming "
+                        "NDJSON API, heartbeats, crash failover) instead "
+                        "of replaying a trace offline")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=8080)
     p.add_argument("--json", default=None)
     args = p.parse_args(argv)
+
+    if args.serve == "http":
+        from repro.serving import Gateway, RealTimeClock, run_http
+        if args.mode == "all" and not args.mix:
+            p.error("--serve http needs a concrete fleet; use --mode or "
+                    "--mix, not --mode all")
+        mix = parse_mix(args.mix) if args.mix \
+            else [args.mode] * args.replicas
+        modes = [m if isinstance(m, str) else m.mode for m in mix]
+        cfg = get_config(args.arch)
+        slo = SLOConfig(itl_ms=args.slo_itl_ms)
+        serve = _serve_config(modes[0], args.chips, slo, args.chunk, 128)
+        admission = AdmissionPolicy(
+            kv_headroom=args.kv_headroom,
+            max_wait_s=args.admission_max_wait,
+            class_aware=args.class_aware_admission)
+        gw = Gateway(cfg, serve, modes=modes, router=args.router,
+                     clock=RealTimeClock(), admission=admission,
+                     session_affinity=args.session_affinity)
+        run_http(gw, host=args.host, port=args.port)
+        return 0
 
     out = {}
     if args.mix or args.replicas > 1 or args.admission or \

@@ -1,16 +1,22 @@
 from repro.serving.admission import (  # noqa: F401
     AdmissionController, AdmissionPolicy,
 )
+from repro.serving.clock import RealTimeClock  # noqa: F401
 from repro.serving.cluster import (  # noqa: F401
     ROUTERS, BucketedRouter, Cluster, ProjectionPolicy, RebalancePolicy,
     Replica, ReplicaSpec, ScalePolicy, make_router, parse_mix, run_fleet,
 )
+from repro.serving.gateway import (  # noqa: F401
+    Gateway, GatewayPolicy, RequestChannel, WorkerRegistry,
+)
+from repro.serving.http import GatewayHTTPServer, run_http  # noqa: F401
 from repro.serving.metrics import (  # noqa: F401
     RequestRecord, StreamMetrics, fleet_summarize, per_class_summaries,
     records_from_events, rejections_by_reason, summarize,
 )
 from repro.serving.sim import EventLoop  # noqa: F401
 from repro.serving.traces import TRACES, TraceSpec, generate_trace  # noqa: F401
+from repro.serving.worker import ReplicaWorker, WorkerState  # noqa: F401
 from repro.serving.workloads import (  # noqa: F401
     DEFAULT_MIX, WORKLOAD_CLASSES, WorkloadClass, class_slos,
     diurnal_rate, flash_crowd_rate, generate_multiclass_trace,

@@ -987,7 +987,8 @@ def run_fleet(cfg, serve: ServeConfig,
     # the fleet-wide summary is built from the cluster's event stream
     # (StreamMetrics), which already carries cluster-side rejections
     summary = fleet_summarize(cluster.per_replica_records(), serve.slo,
-                              span, fleet_records=cluster.metrics.records)
+                              span, fleet_records=cluster.metrics.records,
+                              loop_stats=cluster.loop.stats)
     f = summary["fleet"]
     f["migrations"] = len(cluster._migrations)
     if cluster.admission is not None:

@@ -1,0 +1,196 @@
+"""Minimal dependency-free HTTP surface for the serving gateway.
+
+Stdlib ``asyncio.start_server`` only — the container has no aiohttp /
+fastapi, and the protocol needs are tiny:
+
+  * ``POST /v1/generate`` — JSON body ``{"prompt_len": int,
+    "max_new_tokens": int, "slo_class"?: str, "session_id"?: str,
+    "cached_prefix_len"?: int}``.  Streams the request's typed event
+    stream as newline-delimited JSON (``application/x-ndjson``, one
+    ``core.events`` event per line via ``event_to_json``) and closes
+    after the terminal ``finished`` / ``rejected`` line.
+  * ``GET /healthz``  — gateway + worker states.
+  * ``GET /metrics``  — ``fleet_summarize`` output (incl. event-loop
+    ``clamped`` / ``peak_heap`` counters).
+
+Streaming backpressure composes with the gateway's channel watermarks:
+the writer task only ``take()``s another event after
+``await writer.drain()`` returns, so a slow client stops draining its
+channel, the channel pauses, and the gateway evicts that one request
+from its engine until the client catches up — other streams unaffected.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+from typing import Optional, Tuple
+
+from repro.core.events import event_to_json
+from repro.core.request import Request
+
+
+class HTTPError(Exception):
+    def __init__(self, status: int, message: str):
+        super().__init__(message)
+        self.status = status
+        self.message = message
+
+
+_STATUS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+           405: "Method Not Allowed", 500: "Internal Server Error"}
+
+
+def _response_head(status: int, ctype: str,
+                   length: Optional[int] = None) -> bytes:
+    lines = [f"HTTP/1.1 {status} {_STATUS.get(status, 'Unknown')}",
+             f"Content-Type: {ctype}", "Connection: close"]
+    if length is not None:
+        lines.append(f"Content-Length: {length}")
+    return ("\r\n".join(lines) + "\r\n\r\n").encode()
+
+
+async def _read_request(reader) -> Tuple[str, str, bytes]:
+    """Parse method, path and body from one HTTP/1.1 request."""
+    line = await reader.readline()
+    if not line:
+        raise HTTPError(400, "empty request")
+    try:
+        method, path, _ = line.decode("latin-1").split(None, 2)
+    except ValueError:
+        raise HTTPError(400, "malformed request line") from None
+    length = 0
+    while True:
+        hdr = await reader.readline()
+        if hdr in (b"\r\n", b"\n", b""):
+            break
+        name, _, value = hdr.decode("latin-1").partition(":")
+        if name.strip().lower() == "content-length":
+            try:
+                length = int(value.strip())
+            except ValueError:
+                raise HTTPError(400, "bad Content-Length") from None
+    body = await reader.readexactly(length) if length else b""
+    return method.upper(), path, body
+
+
+class GatewayHTTPServer:
+    """Serves a ``Gateway`` built on a ``RealTimeClock`` over TCP."""
+
+    def __init__(self, gateway, host: str = "127.0.0.1", port: int = 8080):
+        self.gateway = gateway
+        self.host = host
+        self.port = port
+        self._server = None
+
+    async def start(self) -> None:
+        loop = asyncio.get_running_loop()
+        clock = self.gateway.clock
+        if hasattr(clock, "bind"):
+            clock.bind(loop)
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self.port)
+
+    async def serve_forever(self) -> None:
+        if self._server is None:
+            await self.start()
+        async with self._server:
+            await self._server.serve_forever()
+
+    async def close(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+
+    # -- request handling ---------------------------------------------------
+
+    async def _handle(self, reader, writer) -> None:
+        try:
+            try:
+                method, path, body = await _read_request(reader)
+                if method == "POST" and path == "/v1/generate":
+                    await self._generate(body, writer)
+                elif method == "GET" and path == "/healthz":
+                    self._send_json(writer, self.gateway.health())
+                elif method == "GET" and path == "/metrics":
+                    self._send_json(writer, self.gateway.metrics_summary())
+                elif path in ("/v1/generate", "/healthz", "/metrics"):
+                    raise HTTPError(405, f"{method} not allowed on {path}")
+                else:
+                    raise HTTPError(404, f"no route for {path}")
+            except HTTPError as e:
+                self._send_json(writer, {"error": e.message},
+                                status=e.status)
+            except (asyncio.IncompleteReadError, ConnectionError):
+                return
+            await writer.drain()
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except ConnectionError:
+                pass
+
+    @staticmethod
+    def _send_json(writer, obj, status: int = 200) -> None:
+        payload = json.dumps(obj).encode()
+        writer.write(_response_head(status, "application/json",
+                                    len(payload)))
+        writer.write(payload)
+
+    async def _generate(self, body: bytes, writer) -> None:
+        try:
+            spec = json.loads(body or b"{}")
+        except json.JSONDecodeError:
+            raise HTTPError(400, "body is not valid JSON") from None
+        if not isinstance(spec, dict):
+            raise HTTPError(400, "body must be a JSON object")
+        try:
+            prompt_len = int(spec["prompt_len"])
+            max_new = int(spec["max_new_tokens"])
+        except (KeyError, TypeError, ValueError):
+            raise HTTPError(
+                400, "prompt_len and max_new_tokens (ints) required"
+            ) from None
+        if prompt_len < 1 or max_new < 1:
+            raise HTTPError(400, "prompt_len and max_new_tokens must be >=1")
+        gw = self.gateway
+        r = Request(rid=gw.next_rid(), arrival=gw.clock.now,
+                    prompt_len=prompt_len, max_new_tokens=max_new,
+                    slo_class=str(spec.get("slo_class", "interactive")),
+                    session_id=spec.get("session_id"),
+                    cached_prefix_len=int(spec.get("cached_prefix_len", 0)))
+        wake = asyncio.Event()
+        channel = gw.submit(r, notify=wake.set)
+        writer.write(_response_head(200, "application/x-ndjson"))
+        await writer.drain()
+        while not channel.done:
+            ev = channel.take()
+            if ev is None:
+                wake.clear()
+                if channel.closed and not channel.buf:
+                    break
+                await wake.wait()
+                continue
+            writer.write((event_to_json(ev) + "\n").encode())
+            # drain before taking the next event: a slow client parks us
+            # here, the channel fills, and the gateway backpressures this
+            # one request out of its engine
+            await writer.drain()
+
+
+def run_http(gateway, host: str = "127.0.0.1", port: int = 8080) -> None:
+    """Blocking entry point for ``launch/serve.py --serve http``."""
+    server = GatewayHTTPServer(gateway, host, port)
+
+    async def main():
+        await server.start()
+        addrs = ", ".join(str(s.getsockname())
+                          for s in server._server.sockets)
+        print(f"gateway listening on {addrs}")
+        await server.serve_forever()
+
+    try:
+        asyncio.run(main())
+    except KeyboardInterrupt:
+        pass

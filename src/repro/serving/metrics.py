@@ -63,6 +63,8 @@ class RequestRecord:
     rejected: bool = False
     slo_class: str = "interactive"
     reject_reason: Optional[str] = None
+    retries: int = 0          # gateway failovers after worker crashes
+    truncated: bool = False   # admission capped max_new_tokens to fit
 
     @classmethod
     def from_request(cls, r: Request) -> "RequestRecord":
@@ -73,7 +75,8 @@ class RequestRecord:
             itl_p95=percentile_linear(itls, 95) if itls else None,
             finish=r.t_finish, preemptions=r.preemptions,
             rejected=r.state is State.REJECTED,
-            slo_class=r.slo_class, reject_reason=r.reject_reason)
+            slo_class=r.slo_class, reject_reason=r.reject_reason,
+            retries=r.retries, truncated=r.truncated)
 
 
 class StreamMetrics:
@@ -110,7 +113,8 @@ class StreamMetrics:
                 ttft=ts[0] - ev.arrival if ts else None,
                 itl_p95=percentile_linear(itls, 95) if itls else None,
                 finish=ev.t, preemptions=ev.preemptions, rejected=False,
-                slo_class=ev.slo_class)
+                slo_class=ev.slo_class, retries=ev.retries,
+                truncated=ev.truncated)
             self.records.append(rec)
             self.finished.append(rec)
         elif isinstance(ev, RejectedEvent):
@@ -119,7 +123,8 @@ class StreamMetrics:
                 rid=ev.rid, arrival=ev.arrival, prompt_len=ev.prompt_len,
                 output_len=ev.output_len, ttft=None, itl_p95=None,
                 finish=None, preemptions=ev.preemptions, rejected=True,
-                slo_class=ev.slo_class, reject_reason=ev.reason))
+                slo_class=ev.slo_class, reject_reason=ev.reason,
+                retries=ev.retries))
 
     def finished_since(self, t_lo: float) -> List[RequestRecord]:
         """Records that finished at or after ``t_lo`` (windowed view)."""
@@ -188,6 +193,8 @@ def summarize(records: List[RequestRecord], slo: SLOConfig,
         "itl_p50_s": _pct(itls, 50),
         "itl_p95_s": _pct(itls, 95),
         "preemptions": sum(r.preemptions for r in done),
+        "retries": sum(r.retries for r in records),
+        "truncated": sum(1 for r in done if r.truncated),
     }
 
 
@@ -222,8 +229,8 @@ def rejections_by_reason(records: List[RequestRecord]) -> Dict[str, int]:
 def fleet_summarize(per_replica: Dict[str, List[RequestRecord]],
                     slo: SLOConfig, span_s: float,
                     fleet_records: Optional[List[RequestRecord]] = None,
-                    class_slos: Optional[Dict[str, SLOConfig]] = None
-                    ) -> Dict[str, object]:
+                    class_slos: Optional[Dict[str, SLOConfig]] = None,
+                    loop_stats=None) -> Dict[str, object]:
     """Cluster-level aggregation: one fleet-wide summary over the union of
     all replicas' records, plus the per-replica summaries (every replica
     shares the cluster's virtual clock, so one span normalizes all).
@@ -236,7 +243,14 @@ def fleet_summarize(per_replica: Dict[str, List[RequestRecord]],
     The result additionally carries ``per_class`` (one summary per SLO
     class present, each judged against its own SLO from ``class_slos`` /
     ``serving.workloads``) and, inside ``fleet``,
-    ``rejections_by_reason`` (never_fits / kv_headroom / class_shed)."""
+    ``rejections_by_reason`` (never_fits / kv_headroom / class_shed /
+    worker_lost).
+
+    ``loop_stats`` (a ``serving.sim.LoopStats`` or plain dict) surfaces
+    event-loop health under ``fleet["loop"]`` — ``dispatched``,
+    ``clamped`` (past-due ``EventLoop.at()`` schedules snapped to
+    ``now``: a persistent non-zero rate means some component plans
+    against a stale clock) and ``peak_heap``."""
     union: List[RequestRecord] = [r for recs in per_replica.values()
                                   for r in recs]
     fleet_recs = union if fleet_records is None else fleet_records
@@ -246,6 +260,9 @@ def fleet_summarize(per_replica: Dict[str, List[RequestRecord]],
     fleet["min_replica_share"] = (min(counts.values()) / max(1, len(union))
                                   if counts and union else 0.0)
     fleet["rejections_by_reason"] = rejections_by_reason(fleet_recs)
+    if loop_stats is not None:
+        fleet["loop"] = loop_stats.as_dict() \
+            if hasattr(loop_stats, "as_dict") else dict(loop_stats)
     return {
         "fleet": fleet,
         "per_replica": {name: summarize(recs, slo, span_s)

@@ -36,6 +36,11 @@ class LoopStats:
 
 
 class EventLoop:
+    # Clock-protocol flag (see serving/clock.py): virtual clocks advance
+    # by draining the heap; gateway periodic ticks must stop re-arming
+    # when idle or run() would never return.
+    virtual = True
+
     def __init__(self):
         self._heap = []
         self._seq = itertools.count()

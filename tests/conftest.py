@@ -25,7 +25,8 @@ _HAS_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
 _HYPOTHESIS_MODULES = ["test_engines.py", "test_training.py",
                        "test_router_properties.py",
                        "test_engine_accounting_properties.py",
-                       "test_liveness_properties.py"]
+                       "test_liveness_properties.py",
+                       "test_wire_properties.py"]
 
 collect_ignore = [] if _HAS_HYPOTHESIS else list(_HYPOTHESIS_MODULES)
 

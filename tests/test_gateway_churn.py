@@ -1,0 +1,192 @@
+"""Gateway churn: crash failover, rolling-upgrade drain, slow consumers.
+
+All scenarios run on the simulated clock, so worker death detection,
+re-prefill recovery and backpressure eviction are fully deterministic.
+The invariant under every churn shape: **no accepted request is lost**
+— each one either finishes (after retries, with a contiguous deduped
+token stream) or ends with a typed ``RejectedEvent``.
+"""
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core.events import FinishedEvent, RejectedEvent, TokenEvent
+from repro.core.request import Request
+from repro.serving import Gateway
+from repro.serving.worker import WorkerState
+
+CFG = get_config("llama3-70b")
+
+
+def _serve(chips=16):
+    return ServeConfig(mode="rapid", chips=chips,
+                       slo=SLOConfig(itl_ms=100.0), chunk_size=512,
+                       disagg_split=(chips // 2, chips // 2),
+                       max_batch_slots=64)
+
+
+def _capture(gw, reqs, seen):
+    """Submit ``reqs`` at their arrival times with per-request capture
+    consumers (inline: no buffering, no backpressure)."""
+    gw._expected += len(reqs)
+    for r in reqs:
+        def go(r=r):
+            seen[r.rid] = []
+            gw.submit(r, consumer=seen[r.rid].append)
+        gw.clock.at(r.arrival, go)
+
+
+def _terminal(evs):
+    return evs[-1] if evs and isinstance(
+        evs[-1], (FinishedEvent, RejectedEvent)) else None
+
+
+def _token_indices(evs):
+    return [e.index for e in evs if isinstance(e, TokenEvent)]
+
+
+def test_crash_mid_decode_loses_no_request():
+    """Kill one of two workers mid-decode: every accepted request still
+    terminates — the victims re-prefill on the survivor with retries
+    counted, and each consumer sees one contiguous token stream."""
+    gw = Gateway(CFG, _serve(), modes=["rapid", "rapid"],
+                 router="round_robin")
+    seen = {}
+    reqs = [Request(rid=i, arrival=0.01 * i, prompt_len=256,
+                    max_new_tokens=300) for i in range(8)]
+    _capture(gw, reqs, seen)
+    gw.clock.at(0.2, lambda: gw.kill_worker(0))
+    gw.clock.run()
+
+    assert len(seen) == 8
+    retried = 0
+    for rid, evs in seen.items():
+        fin = _terminal(evs)
+        assert isinstance(fin, FinishedEvent), (rid, type(fin))
+        idxs = _token_indices(evs)
+        assert idxs == list(range(300)), (rid, len(idxs))
+        retried += fin.retries
+    # round_robin put half the trace on the dead worker
+    assert retried == 4
+    assert gw.registry.workers[0].state is WorkerState.DEAD
+    recs = {r.rid: r for r in gw.metrics.records}
+    assert sum(r.retries for r in recs.values()) == 4
+    assert all(not r.rejected for r in recs.values())
+
+
+def test_crash_with_no_survivor_rejects_worker_lost():
+    """Sole worker dies: accepted requests end with a typed
+    ``RejectedEvent(reason=worker_lost)`` carrying the partial output
+    count — never a silent hang."""
+    gw = Gateway(CFG, _serve(), modes=["rapid"], router="round_robin")
+    seen = {}
+    reqs = [Request(rid=i, arrival=0.01 * i, prompt_len=256,
+                    max_new_tokens=300) for i in range(4)]
+    _capture(gw, reqs, seen)
+    gw.clock.at(0.2, lambda: gw.kill_worker(0))
+    gw.clock.run()
+
+    for rid, evs in seen.items():
+        rej = _terminal(evs)
+        assert isinstance(rej, RejectedEvent), rid
+        assert rej.reason == "worker_lost"
+        assert rej.output_len == len(_token_indices(evs))
+    assert gw.health()["status"] == "degraded"
+
+
+def test_worker_restart_after_crash_restores_service():
+    gw = Gateway(CFG, _serve(), modes=["rapid"], router="round_robin")
+    seen = {}
+    first = [Request(rid=0, arrival=0.0, prompt_len=256,
+                     max_new_tokens=300)]
+    _capture(gw, first, seen)
+    gw.clock.at(0.2, lambda: gw.kill_worker(0))
+    gw.clock.run()
+    assert isinstance(_terminal(seen[0]), RejectedEvent)
+
+    gw.add_worker("rapid")                       # replacement comes up
+    second = [Request(rid=1, arrival=gw.clock.now + 0.1, prompt_len=256,
+                      max_new_tokens=32)]
+    _capture(gw, second, seen)
+    gw.clock.run()
+    fin = _terminal(seen[1])
+    assert isinstance(fin, FinishedEvent) and fin.output_len == 32
+    assert gw.health()["status"] == "ok"
+
+
+def test_drain_completes_in_flight_without_retries():
+    """A drained worker finishes its in-flight decodes in place (no
+    crash-style retries), hands queued work to peers, then retires and
+    leaves the registry."""
+    gw = Gateway(CFG, _serve(), modes=["rapid", "rapid"],
+                 router="round_robin")
+    seen = {}
+    reqs = [Request(rid=i, arrival=0.01 * i, prompt_len=256,
+                    max_new_tokens=200) for i in range(8)]
+    _capture(gw, reqs, seen)
+    retired_at = []
+    gw.clock.at(0.3, lambda: gw.drain_worker(
+        0, on_retired=lambda: retired_at.append(gw.clock.now)))
+    gw.clock.run()
+
+    for rid, evs in seen.items():
+        fin = _terminal(evs)
+        assert isinstance(fin, FinishedEvent), rid
+        assert fin.retries == 0, rid
+        assert _token_indices(evs) == list(range(200)), rid
+    assert retired_at and 0 not in gw.registry.workers
+    assert gw.health()["workers"] == {"rapid-1": "up"}
+
+
+def test_rolling_upgrade_replaces_fleet_without_loss():
+    gw = Gateway(CFG, _serve(), modes=["rapid", "rapid"],
+                 router="round_robin")
+    reqs = [Request(rid=i, arrival=0.01 * i, prompt_len=256,
+                    max_new_tokens=150) for i in range(10)]
+    done = []
+    gw.clock.at(0.3, lambda: gw.rolling_upgrade(
+        on_done=lambda: done.append(gw.clock.now)))
+    recs, _ = gw.serve_trace(reqs)
+
+    assert done, "upgrade never completed"
+    assert all(r.finish is not None for r in recs)
+    assert sum(r.retries for r in recs) == 0
+    # the original workers (wids 0,1) are gone; two replacements serve
+    assert sorted(gw.registry.workers) == [2, 3]
+    assert all(w.state is WorkerState.UP
+               for w in gw.registry.workers.values())
+
+
+def test_slow_consumer_backpressures_only_its_own_stream():
+    """One stalled consumer fills its channel: that request is evicted
+    from the engine (preemptions >= 1) while a concurrent fast stream
+    proceeds untouched; draining resumes and completes the slow one."""
+    gw = Gateway(CFG, _serve(), modes=["rapid"], router="round_robin")
+    fast_evs = []
+    r_slow = Request(rid=0, arrival=0.0, prompt_len=128,
+                     max_new_tokens=300)
+    r_fast = Request(rid=1, arrival=0.0, prompt_len=128,
+                     max_new_tokens=300)
+    gw._expected = 2
+    hold = {}
+    gw.clock.at(0.0, lambda: hold.setdefault("ch", gw.submit(r_slow)))
+    gw.clock.at(0.0, lambda: gw.submit(r_fast, consumer=fast_evs.append))
+
+    drained = []
+
+    def drain_loop():
+        drained.extend(hold["ch"].drain())
+        if not hold["ch"].done:
+            gw.clock.after(0.01, drain_loop)
+
+    gw.clock.at(3.0, drain_loop)                 # consumer wakes up late
+    gw.clock.run()
+
+    fast_fin = _terminal(fast_evs)
+    slow_fin = _terminal(drained)
+    assert isinstance(fast_fin, FinishedEvent)
+    assert isinstance(slow_fin, FinishedEvent)
+    assert fast_fin.preemptions == 0             # isolation
+    assert slow_fin.preemptions >= 1             # it WAS parked
+    assert _token_indices(fast_evs) == list(range(300))
+    assert _token_indices(drained) == list(range(300))
+    assert slow_fin.t > fast_fin.t
+    rec = {r.rid: r for r in gw.metrics.records}
+    assert not rec[0].rejected and not rec[1].rejected

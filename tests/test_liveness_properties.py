@@ -5,12 +5,14 @@ prompts, pool-oversized prompts, and (disagg only) prompts in the
 "prompt fits but prompt+output never will" band — at each engine mode
 and asserts the loop drains with every request in a terminal state:
 FINISHED with exactly ``max_new_tokens`` tokens, or REJECTED with
-``reject_reason == "never_fits"``.  This is the regression net for the
-disagg self-preemption livelock (ROADMAP item 5): before the
-admission-time lifetime check, a band request running alone would
-self-preempt on every decode step forever.  The band stays excluded for
-the colocated modes, whose single-request decode stall is unchanged
-seed behavior.
+``reject_reason == "never_fits"``.  This is the regression net for
+ROADMAP item 5's two failure shapes: on disagg, a band request running
+alone used to self-preempt on every decode step forever (fixed by the
+lifetime admission check — now a ``never_fits`` rejection); on the
+colocated modes it used to stall single-request decode (fixed by
+admission-time output truncation — ``max_new_tokens`` is capped so
+prompt+output fits the pool and the record carries ``truncated=True``),
+so the band now runs everywhere.
 
 This module needs ``hypothesis`` (dev-only dep) and is skipped at
 collection when absent (see conftest.py).
@@ -32,10 +34,11 @@ POOL_TOKENS = TINY_BLOCKS * PAGE
 MAX_OUT = 12
 
 # servable (prompt + worst-case output fits) and oversized (prompt alone
-# never fits) bands are safe everywhere; the in-between band — prompt
-# fits, prompt + output does not — is only safe on disagg, where the
-# lifetime admission check turns the former livelock into a
-# ``never_fits`` rejection
+# never fits) bands, plus the in-between band — prompt fits, prompt +
+# output does not.  The band used to livelock disagg (self-preemption)
+# and stall colocated single-request decode; lifetime admission now
+# rejects it on disagg and truncates it on rapid/hybrid, so every mode
+# draws from all three bands.
 _safe = st.one_of(st.integers(16, POOL_TOKENS - MAX_OUT),
                   st.integers(POOL_TOKENS + 1, 1200))
 _band = st.integers(POOL_TOKENS - MAX_OUT + 1, POOL_TOKENS)
@@ -64,7 +67,7 @@ def _engine(mode):
 
 
 def _req(mode, rid, draw):
-    prompt_st = st.one_of(_safe, _band) if mode == "disagg" else _safe
+    prompt_st = st.one_of(_safe, _band)
     return Request(rid=rid, arrival=0.0,
                    prompt_len=draw(prompt_st),
                    max_new_tokens=draw(st.integers(1, MAX_OUT)),

@@ -151,12 +151,16 @@ def test_counters_equal_recompute_over_trace(mode):
 @pytest.mark.parametrize("mode", ["rapid", "hybrid"])
 def test_counters_survive_preemption(mode):
     """Tiny pool => preemption churn; counters must track evictions and
-    re-queues exactly."""
+    re-queues exactly.  Uses the decode-heavy lmsys trace: lifetime
+    admission now truncates any single request that could never fit
+    (the old self-preemption source), so the churn must come from
+    *concurrent* decode growth overflowing the pool — and a few
+    requests still hit the truncation path, covering both."""
     serve = ServeConfig(mode=mode, chips=32, slo=SLOConfig(itl_ms=100.0),
                         max_batch_slots=8, max_seq_len=32768)
-    reqs = generate_trace(TRACES["loogle"], qps=3.0, duration_s=10, seed=7)
+    reqs = generate_trace(TRACES["lmsys"], qps=10.0, duration_s=10, seed=7)
     eng = make_engine(mode, CFG, serve)
-    eng.kv = KVCacheManager(num_blocks=1500, page_size=16)
+    eng.kv = KVCacheManager(num_blocks=200, page_size=16)
     eng.enqueue([copy.deepcopy(r) for r in reqs])
     t, preempted = 0.0, 0
     while eng.loop._heap:
@@ -167,6 +171,8 @@ def test_counters_survive_preemption(mode):
                         sum(r.preemptions for r in eng._all))
     _check(eng)
     assert preempted > 0, "trace did not exercise preemption"
+    assert any(r.truncated for r in eng._all), \
+        "trace did not exercise lifetime truncation"
 
 
 @pytest.mark.parametrize("mode", ["rapid", "hybrid", "disagg"])

@@ -1,0 +1,44 @@
+"""Property-based wire-format round-trips (hypothesis).
+
+Arbitrary events — including adversarial floats (subnormals, huge
+magnitudes, negative zero) and unicode reason/class strings — must
+survive ``event_to_json`` / ``event_from_json`` bit-identically, and
+the JSON encoding must be a fixed point.  Needs ``hypothesis``
+(dev-only dep); skipped at collection when absent (see conftest.py).
+"""
+import math
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.events import (FinishedEvent, PhaseEvent, RejectedEvent,
+                               TokenEvent, event_from_json, event_to_json)
+
+_t = st.floats(min_value=0.0, allow_nan=False, allow_infinity=False,
+               width=64)
+_rid = st.integers(min_value=0, max_value=2**53)
+_small = st.integers(min_value=0, max_value=10**9)
+_name = st.text(min_size=0, max_size=24)
+
+_events = st.one_of(
+    st.builds(TokenEvent, rid=_rid, t=_t, index=_small),
+    st.builds(PhaseEvent, rid=_rid, t=_t, phase=_name),
+    st.builds(FinishedEvent, rid=_rid, t=_t, arrival=_t,
+              prompt_len=_small, output_len=_small, preemptions=_small,
+              slo_class=_name, retries=_small, truncated=st.booleans()),
+    st.builds(RejectedEvent, rid=_rid, t=_t, arrival=_t,
+              prompt_len=_small, reason=_name, output_len=_small,
+              preemptions=_small, slo_class=_name, retries=_small),
+)
+
+
+@settings(max_examples=300, deadline=None)
+@given(ev=_events)
+def test_wire_roundtrip_bit_identical(ev):
+    line = event_to_json(ev)
+    back = event_from_json(line)
+    assert type(back) is type(ev)
+    assert back == ev
+    # float equality above is not enough for -0.0 vs 0.0; compare signs
+    assert math.copysign(1.0, back.t) == math.copysign(1.0, ev.t)
+    assert event_to_json(back) == line
