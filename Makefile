@@ -10,17 +10,21 @@
 #                   fig13, projection-driven scaling fig14, multi-tenant
 #                   workload classes fig15, gateway churn fault-
 #                   injection fig16, hot-path simulator-throughput
-#                   bench)
+#                   bench, and the 128-replica fleet-vectorized
+#                   pricing gate: batched vs scalar cluster ticks,
+#                   identical simulation outputs asserted)
 #   make bench-hotpath  full hot-path macro-benchmark; writes
 #                   BENCH_hotpath.json (simulated req/wall-s, per-event
 #                   cost, speedup vs the pinned pre-PR-5 baseline)
+#   make bench-fleet  full 128-replica fleet pricing benchmark;
+#                   updates the "fleet" section of BENCH_hotpath.json
 #   make ci         dev-deps + smoke  (the one command CI runs)
 #   make lint       ruff style gate (blocking CI job)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: dev-deps test smoke ci bench bench-hotpath lint
+.PHONY: dev-deps test smoke ci bench bench-hotpath bench-fleet lint
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt || \
@@ -44,9 +48,13 @@ smoke: test
 	$(PY) -m benchmarks.fig15_workload_classes --smoke
 	$(PY) -m benchmarks.fig16_gateway_churn --smoke
 	$(PY) -m benchmarks.bench_hotpath --smoke
+	$(PY) -m benchmarks.bench_hotpath --fleet --smoke
 
 bench-hotpath:
 	$(PY) -m benchmarks.bench_hotpath
+
+bench-fleet:
+	$(PY) -m benchmarks.bench_hotpath --fleet
 
 ci: dev-deps smoke
 

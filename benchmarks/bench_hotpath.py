@@ -22,27 +22,56 @@ improvements too, so the measured speedup **understates** the true
 PR-4 delta.  Both runs must produce *identical* simulation results
 (asserted); only the wall-clock differs.
 
-Results are written to ``BENCH_hotpath.json`` (schema below) so the perf
-trajectory is tracked run over run::
+``--fleet`` switches to the **fleet-vectorized pricing** benchmark: a
+128-replica pinned-size cluster behind the slo_aware router with the
+projection autoscaler's forecasts on every tick, run twice — once with
+``batch_pricing=False`` (the scalar per-replica reference path: every
+arrival and every tick walks the fleet through the N=1 cost views) and
+once with ``batch_pricing=True`` (the whole fleet priced through
+``perfmodel.batch`` in one array call per cost kind).  Both arms must
+simulate the identical virtual history (asserted); the speedup is the
+pure win of vectorizing the control plane.
+
+Results are written to ``BENCH_hotpath.json`` (read-modify-write: each
+mode updates its own section, v1 files are upgraded in place)::
 
     {
-      "schema": "bench_hotpath/v1",
-      "config":    {requests, trace, router, replicas, seed},
-      "optimized": {wall_s, span_s, completed, rejected, tokens,
-                    events_dispatched, req_per_wall_s, events_per_wall_s,
-                    event_cost_us: {p50, p95}, loop: {dispatched,
-                    clamped, peak_heap}},
-      "baseline":  {... same fields ...},
-      "speedup":   optimized.req_per_wall_s / baseline.req_per_wall_s
+      "schema": "bench_hotpath/v2",
+      "hotpath": {
+        "config":    {requests, trace, router, replicas, arch, seed},
+        "optimized": {wall_s, span_s, completed, rejected, tokens,
+                      migrations, events_dispatched, req_per_wall_s,
+                      events_per_wall_s, event_cost_us: {p50, p95},
+                      loop: {dispatched, clamped, peak_heap},
+                      cache_stats: {<fn>: {hits, misses, currsize,
+                      maxsize}, ...}},
+        "baseline":  {... same fields ...},
+        "speedup":   optimized.req_per_wall_s / baseline.req_per_wall_s
+      },
+      "fleet": {
+        "config":  {requests, replicas, modes, router, arch, trace,
+                    seed, smoke},
+        "batched": {... same per-run fields ...},
+        "scalar":  {... same per-run fields ...},
+        "speedup": batched.req_per_wall_s / scalar.req_per_wall_s
+      },
+      "fleet_smoke": { ... the CI reduced-trace run, same shape ... }
     }
 
-``--smoke`` (CI) asserts the speedup is at least ``SMOKE_MIN_SPEEDUP``
-and that the two runs' simulation outputs match exactly.
+``cache_stats`` reports the per-run hit/miss deltas of every memoized
+perfmodel entry point (``costs.cache_stats()``) — the caches are bounded
+now, so occupancy vs ``maxsize`` and the hit rate are part of the
+tracked perf surface.
+
+``--smoke`` (CI) asserts the speedup floor (``SMOKE_MIN_SPEEDUP`` for
+the hot path, ``FLEET_SMOKE_MIN_SPEEDUP`` for ``--fleet``) and that the
+two runs' simulation outputs match exactly.
 """
 from __future__ import annotations
 
 import argparse
 import copy
+import functools
 import heapq
 import json
 import time
@@ -307,10 +336,120 @@ def _legacy_disagg_schedule(self, view):
     return plan
 
 
-# uncached pricing entry points (bypass the PR-5 lru_cache layers)
-_RAW_PREFILL = C._prefill_cost.__wrapped__
-_RAW_DECODE = C.decode_cost.__wrapped__
-_RAW_CHUNK = C.chunk_prefill_cost.__wrapped__
+# Pinned pre-refactor scalar pricing (pure Python, uncached entry
+# points).  The live ``perfmodel.costs`` functions are now N=1 views
+# over the vectorized ``perfmodel.batch`` layer, so grabbing their
+# ``__wrapped__`` would time the NEW formula layer against itself; the
+# baseline must run the OLD pure-Python bodies verbatim.  They are
+# bit-identical to the batch layer by its contract (the identical-
+# output assertion below depends on that).  ``active_weight_bytes`` is
+# memoized exactly like the PR-5 original, so the baseline is not
+# artificially slowed.
+
+
+def _raw_attn_flops(cfg, q_tokens, ctx_tokens, causal_half):
+    if cfg.sliding_window:
+        ctx_tokens = min(ctx_tokens, cfg.sliding_window)
+    per_layer = 2 * 2 * q_tokens * ctx_tokens * cfg.num_heads * \
+        cfg.head_dim
+    if causal_half:
+        per_layer *= 0.5
+    return per_layer * cfg.attn_layer_count
+
+
+def _raw_ssm_flops(cfg, tokens):
+    if not any(m in ("mamba", "mlstm", "slstm")
+               for m in cfg.layer_pattern):
+        return 0.0
+    total = 0.0
+    for i in range(cfg.num_layers):
+        mx = cfg.mixer_at(i)
+        if mx == "mamba":
+            m = cfg.mamba
+            total += 9.0 * tokens * cfg.d_inner * m.d_state
+        elif mx == "mlstm":
+            x = cfg.xlstm
+            din = int(x.proj_factor * cfg.d_model)
+            dh = din // x.num_heads
+            total += 8.0 * tokens * din * dh
+        elif mx == "slstm":
+            total += 10.0 * tokens * cfg.d_model
+    return total
+
+
+def _raw_tp_collective_bytes(cfg, tokens, tp, dtype_bytes):
+    if tp <= 1:
+        return 0.0
+    payload = tokens * cfg.d_model * dtype_bytes
+    ring = 2.0 * (tp - 1) / tp
+    return 2.0 * cfg.num_layers * payload * ring
+
+
+@functools.lru_cache(maxsize=65536)
+def _raw_active_weight_bytes(cfg, tokens, dtype_bytes):
+    if cfg.moe is None:
+        return cfg.param_count() * dtype_bytes
+    total = cfg.param_count()
+    moe_layers = sum(1 for i in range(cfg.num_layers)
+                     if cfg.ffn_at(i) == "moe")
+    glu = 3
+    expert_params = moe_layers * cfg.moe.num_experts * glu * \
+        cfg.d_model * cfg.moe.d_ff_expert
+    rest = total - expert_params
+    p_touch = 1.0 - (1.0 - cfg.moe.top_k / cfg.moe.num_experts) ** tokens
+    return (rest + expert_params * min(1.0, p_touch)) * dtype_bytes
+
+
+def _raw_kv_read_bytes(cfg, context_tokens, dtype_bytes):
+    per_tok = cfg.kv_bytes_per_token(dtype_bytes)
+    if cfg.sliding_window:
+        context_tokens = min(context_tokens, cfg.sliding_window)
+    return per_tok * context_tokens
+
+
+def _RAW_PREFILL(cfg, seq_lens, tp, dtype_bytes):
+    T = float(sum(seq_lens))
+    if T == 0:
+        return C.ZERO_COST
+    n_active = cfg.active_param_count()
+    flops = 2.0 * n_active * T + \
+        (sum(_raw_attn_flops(cfg, s, s, True) for s in seq_lens)
+         if cfg.attn_layer_count else 0.0) + _raw_ssm_flops(cfg, T)
+    bytes_ = _raw_active_weight_bytes(cfg, int(T), dtype_bytes)
+    bytes_ += 2.0 * T * cfg.kv_bytes_per_token(dtype_bytes)
+    bytes_ += 4.0 * T * cfg.d_model * dtype_bytes
+    coll = _raw_tp_collective_bytes(cfg, T, tp, dtype_bytes) / max(tp, 1)
+    return C.StepCost(flops, bytes_, coll)
+
+
+def _RAW_CHUNK(cfg, chunk_tokens, ctx_so_far, tp, dtype_bytes):
+    T = float(chunk_tokens)
+    n_active = cfg.active_param_count()
+    flops = 2.0 * n_active * T + \
+        _raw_attn_flops(cfg, T, ctx_so_far + T / 2, False) + \
+        _raw_ssm_flops(cfg, T)
+    bytes_ = _raw_active_weight_bytes(cfg, int(T), dtype_bytes)
+    bytes_ += _raw_kv_read_bytes(cfg, ctx_so_far, dtype_bytes) * 1.0
+    bytes_ += 2.0 * T * cfg.kv_bytes_per_token(dtype_bytes)
+    bytes_ += 4.0 * T * cfg.d_model * dtype_bytes
+    coll = _raw_tp_collective_bytes(cfg, T, tp, dtype_bytes) / max(tp, 1)
+    return C.StepCost(flops, bytes_, coll)
+
+
+def _RAW_DECODE(cfg, batch, ctx_tokens_total, tp, dtype_bytes):
+    if batch == 0:
+        return C.ZERO_COST
+    B = float(batch)
+    n_active = cfg.active_param_count()
+    flops = 2.0 * n_active * B
+    flops += _raw_attn_flops(cfg, B, ctx_tokens_total / B, False)
+    flops += _raw_ssm_flops(cfg, B)
+    bytes_ = _raw_active_weight_bytes(cfg, batch, dtype_bytes)
+    bytes_ += _raw_kv_read_bytes(cfg, ctx_tokens_total / B, dtype_bytes) * B
+    bytes_ += B * cfg.state_bytes_per_seq(dtype_bytes)
+    bytes_ += 4.0 * B * cfg.d_model * dtype_bytes
+    coll = _raw_tp_collective_bytes(cfg, B, tp, dtype_bytes) / max(tp, 1)
+    return C.StepCost(flops, bytes_, coll)
 
 
 def _legacy_execute(self, plan, view):
@@ -428,17 +567,31 @@ class legacy_hot_path:
 # ---------------------------------------------------------------------------
 
 
-def run_once(requests, seed: int) -> Dict[str, object]:
-    cfg = get_config(ARCH)
-    serve = _serve()
-    loop = TimedLoop()
-    cluster = CL.Cluster(cfg, serve, REPLICAS, router=ROUTER,
-                         rebalance=CL.RebalancePolicy(), loop=loop)
+def _cache_deltas(before: dict, after: dict) -> dict:
+    """Per-run lru_cache hit/miss deltas for every memoized perfmodel
+    entry point (C.cache_stats()), plus the absolute occupancy — a miss
+    now pays the N=1 batch-layer view, so cache behavior is a first-
+    class perf signal."""
+    out = {}
+    for name, a in after.items():
+        b = before.get(name, {})
+        out[name] = {
+            "hits": a["hits"] - b.get("hits", 0),
+            "misses": a["misses"] - b.get("misses", 0),
+            "currsize": a["currsize"],
+            "maxsize": a["maxsize"],
+        }
+    return out
+
+
+def _measure(cluster, loop: TimedLoop, requests) -> Dict[str, object]:
+    """Drain one cluster run and collect the stats record."""
     reqs = [copy.deepcopy(r) for r in requests]   # copies outside the clock
+    caches0 = C.cache_stats()
     wall0 = time.perf_counter()
     _, span = cluster.run(reqs)
     wall = time.perf_counter() - wall0
-    summary = cluster.metrics.summarize(serve.slo, span)
+    summary = cluster.metrics.summarize(cluster.serve.slo, span)
     ev_us = np.asarray(loop.samples_ns, dtype=np.float64) / 1e3
     return {
         "wall_s": round(wall, 3),
@@ -455,20 +608,130 @@ def run_once(requests, seed: int) -> Dict[str, object]:
             "p95": round(float(np.percentile(ev_us, 95)), 2),
         },
         "loop": loop.stats.as_dict(),
+        "cache_stats": _cache_deltas(caches0, C.cache_stats()),
     }
 
 
-def main(argv=None) -> Dict[str, object]:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--requests", type=int, default=DEFAULT_REQUESTS)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default="BENCH_hotpath.json")
-    ap.add_argument("--smoke", action="store_true",
-                    help=f"assert >= {SMOKE_MIN_SPEEDUP}x speedup and "
-                         "identical simulation outputs")
-    args = ap.parse_args(argv)
+def run_once(requests, seed: int) -> Dict[str, object]:
+    cfg = get_config(ARCH)
+    serve = _serve()
+    loop = TimedLoop()
+    cluster = CL.Cluster(cfg, serve, REPLICAS, router=ROUTER,
+                         rebalance=CL.RebalancePolicy(), loop=loop)
+    return _measure(cluster, loop, requests)
 
-    trace = bimodal_trace(args.requests, args.seed)
+
+# -- fleet-scale configuration (the batched-pricing showcase) ---------------
+#
+# 128 replicas behind the slo_aware router with the projection
+# autoscaler's forecasts running every tick: every arrival prices all
+# replicas (router scores) and every tick prices the whole fleet twice
+# (sustained rates + backlog projections).  The scalar arm walks the
+# replicas one at a time through the N=1 cost views; the batched arm
+# prices the fleet through perfmodel.batch in one call per cost kind.
+# Both arms simulate the identical virtual history (asserted) — the
+# pool size is pinned (min_replicas == max_replicas) so the projections
+# run every tick without scaling the fleet.
+FLEET_ARCH = "qwen2.5-14b"
+FLEET_REPLICAS = 128
+FLEET_ROUTER = "slo_aware"
+FLEET_DEFAULT_REQUESTS = 200_000
+FLEET_SMOKE_REQUESTS = 2_000
+FLEET_SMOKE_REPLICAS = 128
+FLEET_MIN_SPEEDUP = 3.0          # full-run gate (acceptance criterion)
+FLEET_SMOKE_MIN_SPEEDUP = 2.0    # conservative CI floor (tiny trace)
+# ~1.3x fleet prefill capacity with widely dispersed prompt lengths:
+# replica queues stay deep and distinct, so the scalar arm's per-replica
+# score keys (queued tokens + prompt) actually vary — an idle fleet
+# would let its lru_cache absorb the scalar cost and hide the win
+FLEET_QPS = 1500.0
+FLEET_SPEC = TraceSpec("fleet-mixed", mean_prompt=4096, sigma_prompt=0.8,
+                       mean_output=8, sigma_output=0.4,
+                       max_prompt=16384, max_output=16)
+
+
+def fleet_trace(n_requests: int, seed: int):
+    reqs = generate_trace(FLEET_SPEC, qps=FLEET_QPS,
+                          duration_s=n_requests / FLEET_QPS, seed=seed)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+def _fleet_serve() -> ServeConfig:
+    return ServeConfig(mode="rapid", chips=8, slo=SLOConfig(itl_ms=100.0),
+                       disagg_split=(4, 4), max_batch_slots=64)
+
+
+def run_fleet_once(requests, n_replicas: int,
+                   batch_pricing: bool) -> Dict[str, object]:
+    cfg = get_config(FLEET_ARCH)
+    serve = _fleet_serve()
+    loop = TimedLoop()
+    modes = [REPLICAS[i % len(REPLICAS)] for i in range(n_replicas)]
+    pol = CL.ProjectionPolicy(min_replicas=n_replicas,
+                              max_replicas=n_replicas,
+                              check_interval_s=0.5, pool_scaling=False)
+    cluster = CL.Cluster(cfg, serve, modes, router=FLEET_ROUTER,
+                         scale=pol, rebalance=CL.RebalancePolicy(),
+                         loop=loop, batch_pricing=batch_pricing)
+    return _measure(cluster, loop, requests)
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+
+_IDENTITY_KEYS = ("span_s", "completed", "rejected", "tokens",
+                  "migrations", "events_dispatched")
+
+
+def _assert_identical(a: Dict, b: Dict, what: str) -> None:
+    # cost changed, behavior must not have: the two runs simulated the
+    # exact same virtual history
+    for k in _IDENTITY_KEYS:
+        assert a[k] == b[k], \
+            f"{what} runs diverged on {k}: {a[k]} vs {b[k]}"
+
+
+def _merge_out(path: str, section: str, payload: Dict) -> Dict:
+    """Read-modify-write ``BENCH_hotpath.json``: update one section,
+    preserve the other, upgrade any v1 record in place."""
+    try:
+        with open(path) as f:
+            prev = json.load(f)
+    except (OSError, ValueError):
+        prev = {}
+    if prev.get("schema") == "bench_hotpath/v1":
+        prev = {"hotpath": {k: prev[k]
+                            for k in ("config", "optimized", "baseline",
+                                      "speedup") if k in prev}}
+    result = {"schema": "bench_hotpath/v2"}
+    for k in ("hotpath", "fleet", "fleet_smoke"):
+        if k in prev:
+            result[k] = prev[k]
+    result[section] = payload
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    return result
+
+
+def _print_arm(tag: str, r: Dict) -> None:
+    cs = r["cache_stats"]
+    probes = sum(c["hits"] + c["misses"] for c in cs.values())
+    hits = sum(c["hits"] for c in cs.values())
+    print(f"{tag}: {r['wall_s']:8.2f}s wall  "
+          f"{r['req_per_wall_s']:9.1f} req/s  "
+          f"p50/p95 {r['event_cost_us']['p50']}/"
+          f"{r['event_cost_us']['p95']} us/event  "
+          f"cache {hits}/{probes} hits")
+
+
+def run_hotpath_bench(args) -> Dict[str, object]:
+    n_req = args.requests if args.requests else DEFAULT_REQUESTS
+    trace = bimodal_trace(n_req, args.seed)
     print(f"# bench_hotpath: {len(trace)} requests, "
           f"{sum(r.prompt_len for r in trace)} prompt tokens, "
           f"replicas={REPLICAS}, router={ROUTER}")
@@ -479,19 +742,12 @@ def main(argv=None) -> Dict[str, object]:
 
     with legacy_hot_path():
         base = run_once(trace, args.seed)
-    print(f"baseline : {base['wall_s']:8.2f}s wall  "
-          f"{base['req_per_wall_s']:9.1f} req/s  "
-          f"p50/p95 {base['event_cost_us']['p50']}/"
-          f"{base['event_cost_us']['p95']} us/event")
+    _print_arm("baseline ", base)
     opt = run_once(trace, args.seed)
-    print(f"optimized: {opt['wall_s']:8.2f}s wall  "
-          f"{opt['req_per_wall_s']:9.1f} req/s  "
-          f"p50/p95 {opt['event_cost_us']['p50']}/"
-          f"{opt['event_cost_us']['p95']} us/event")
+    _print_arm("optimized", opt)
 
     speedup = opt["req_per_wall_s"] / max(base["req_per_wall_s"], 1e-9)
-    result = {
-        "schema": "bench_hotpath/v1",
+    payload = {
         "config": {
             "requests": len(trace),
             "trace": f"bimodal {SHORT.mean_prompt}/{LONG.mean_prompt} "
@@ -505,23 +761,89 @@ def main(argv=None) -> Dict[str, object]:
         "baseline": base,
         "speedup": round(speedup, 2),
     }
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
-        f.write("\n")
+    result = _merge_out(args.out, "hotpath", payload)
     print(f"speedup: {speedup:.2f}x  -> {args.out}")
 
-    # cost changed, behavior must not have: the two runs simulated the
-    # exact same virtual history
-    for k in ("span_s", "completed", "rejected", "tokens", "migrations",
-              "events_dispatched"):
-        assert opt[k] == base[k], \
-            f"baseline/optimized diverged on {k}: {base[k]} vs {opt[k]}"
+    _assert_identical(opt, base, "baseline/optimized")
     if args.smoke:
         assert speedup >= SMOKE_MIN_SPEEDUP, (
             f"hot-path smoke: expected >= {SMOKE_MIN_SPEEDUP}x over the "
             f"pinned PR-4 baseline, measured {speedup:.2f}x")
         print(f"SMOKE OK: {speedup:.2f}x >= {SMOKE_MIN_SPEEDUP}x")
     return result
+
+
+def run_fleet_bench(args) -> Dict[str, object]:
+    n_req = args.requests or \
+        (FLEET_SMOKE_REQUESTS if args.smoke else FLEET_DEFAULT_REQUESTS)
+    n_rep = args.replicas or \
+        (FLEET_SMOKE_REPLICAS if args.smoke else FLEET_REPLICAS)
+    trace = fleet_trace(n_req, args.seed)
+    print(f"# bench_hotpath --fleet: {len(trace)} requests, "
+          f"{n_rep} replicas, router={FLEET_ROUTER}, arch={FLEET_ARCH}")
+
+    run_fleet_once(fleet_trace(200, args.seed + 17), n_rep, True)  # warmup
+
+    scalar = run_fleet_once(trace, n_rep, batch_pricing=False)
+    _print_arm("scalar   ", scalar)
+    batched = run_fleet_once(trace, n_rep, batch_pricing=True)
+    _print_arm("batched  ", batched)
+
+    speedup = batched["req_per_wall_s"] / \
+        max(scalar["req_per_wall_s"], 1e-9)
+    payload = {
+        "config": {
+            "requests": len(trace),
+            "replicas": n_rep,
+            "modes": REPLICAS,
+            "router": FLEET_ROUTER,
+            "arch": FLEET_ARCH,
+            "trace": f"{FLEET_SPEC.mean_prompt} prompt / "
+                     f"{FLEET_SPEC.mean_output} output @ {FLEET_QPS} qps",
+            "seed": args.seed,
+            "smoke": bool(args.smoke),
+        },
+        "batched": batched,
+        "scalar": scalar,
+        "speedup": round(speedup, 2),
+    }
+    # CI smoke runs a reduced trace: record it beside the full-run
+    # numbers, never over them
+    result = _merge_out(args.out,
+                        "fleet_smoke" if args.smoke else "fleet", payload)
+    print(f"fleet speedup: {speedup:.2f}x  -> {args.out}")
+
+    _assert_identical(batched, scalar, "batched/scalar")
+    floor = FLEET_SMOKE_MIN_SPEEDUP if args.smoke else FLEET_MIN_SPEEDUP
+    assert speedup >= floor, (
+        f"fleet bench: expected >= {floor}x batched-over-scalar at "
+        f"{n_rep} replicas, measured {speedup:.2f}x")
+    print(f"FLEET OK: {speedup:.2f}x >= {floor}x at {n_rep} replicas")
+    return result
+
+
+def main(argv=None) -> Dict[str, object]:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=None,
+                    help=f"trace size (default {DEFAULT_REQUESTS}; "
+                         f"--fleet: {FLEET_DEFAULT_REQUESTS}, or "
+                         f"{FLEET_SMOKE_REQUESTS} with --smoke)")
+    ap.add_argument("--replicas", type=int, default=None,
+                    help=f"--fleet replica count (default "
+                         f"{FLEET_REPLICAS})")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_hotpath.json")
+    ap.add_argument("--fleet", action="store_true",
+                    help="run the fleet-vectorized pricing bench "
+                         "(batched vs scalar cluster ticks) instead of "
+                         "the hot-path bench")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: assert the speedup floor and "
+                         "identical simulation outputs")
+    args = ap.parse_args(argv)
+    if args.fleet:
+        return run_fleet_bench(args)
+    return run_hotpath_bench(args)
 
 
 if __name__ == "__main__":

@@ -6,7 +6,7 @@ event loop and emits a typed request-lifecycle event stream.
 """
 from repro.core.engines import (  # noqa: F401
     BaseEngine, DisaggEngine, Engine, HybridEngine, RapidEngine,
-    kv_pool_blocks, make_engine,
+    drive, kv_pool_blocks, make_engine,
 )
 from repro.core.events import (  # noqa: F401
     EventStream, FinishedEvent, PhaseEvent, RejectedEvent, TokenEvent,

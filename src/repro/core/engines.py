@@ -17,9 +17,10 @@ core/events.py) splits the historical monolithic engines into
 
 ``RapidEngine`` / ``HybridEngine`` / ``DisaggEngine`` are thin
 constructors binding the matching scheduler; ``make_engine`` keeps the
-historical entry point.  ``run()`` survives as a deprecated blocking
-shim over ``enqueue()`` + the event loop — new callers submit work and
-consume the stream (see README "Serving API v2").
+historical entry point.  Callers submit work (``enqueue``/``submit``)
+and consume the stream (see README "Serving API v2"); the free function
+``drive(engine, requests)`` is the blocking convenience for standalone
+engines — the old ``Engine.run()`` shim is gone.
 
 Parity: the scheduler/executor engines reproduce the pre-split engines'
 per-request TTFT/ITL/finish metrics exactly (tests/test_parity.py golden
@@ -28,7 +29,6 @@ traces; tests/test_cluster.py single-replica equivalence).
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Dict, List, Optional
 
 from repro.config import ServeConfig
@@ -207,20 +207,6 @@ class Engine:
         self._all.extend(requests)
         for r in requests:
             self.loop.at(r.arrival, lambda r=r: self.submit(r))
-
-    def run(self, requests: List[Request], drain: bool = True):
-        """DEPRECATED blocking shim: ``enqueue()`` + drain the loop +
-        scrape records.  New callers submit work and consume
-        ``events()`` / a ``serving.metrics.StreamMetrics`` instead."""
-        warnings.warn(
-            "Engine.run() is deprecated; use enqueue()/submit() and "
-            "consume the event stream (engine.subscribe / "
-            "serving.metrics.StreamMetrics)", DeprecationWarning,
-            stacklevel=2)
-        self.enqueue(requests)
-        self.loop.run()
-        span = self.loop.now if self.loop.now > 0 else 1.0
-        return [RequestRecord.from_request(r) for r in self._all], span
 
     def records(self) -> List[RequestRecord]:
         return [RequestRecord.from_request(r) for r in self._all]
@@ -707,6 +693,31 @@ class Engine:
             chips_decode=getattr(self, "chips_d", self.serve.chips),
             kv_session_blocks=self.kv.session_blocks)
 
+    def router_load(self) -> "tuple[int, int, int]":
+        """The three ``LoadSnapshot`` fields routers price on —
+        ``(queued_prefill_tokens, running_decode, decode_ctx_tokens)`` —
+        read straight from the incremental counters, skipping the full
+        16-field snapshot build (KV occupancy, page claims, lane flags).
+
+        The batched slo_aware router gathers one of these per replica
+        per arrival; at fleet scale the full snapshot's construction
+        cost dominates the priced decision itself.  Must stay
+        value-identical to ``load_snapshot()`` — pinned by
+        ``test_load_accounting``."""
+        sched = self.scheduler
+        queues = self.queues
+        tokens = self.inflight_prefill_tokens
+        for q in sched.token_queues:
+            tokens += queues[q].pending_prefill_tokens
+        for q in sched.partial_token_queues:
+            tokens += queues[q].pending_prefill_tokens
+        running = len(self.running)
+        ctx = self.running.ctx_tokens
+        if sched.prefill_route == "transfer":
+            running += self.inflight_transfers
+            ctx += self.inflight_transfer_tokens
+        return tokens, running, ctx
+
     def load_snapshot_recompute(self) -> LoadSnapshot:
         """Recompute the load view from scratch by walking every queue —
         the PR-4 O(n) implementation, kept verbatim as (a) the oracle the
@@ -835,3 +846,20 @@ def make_engine(mode: str, cfg, serve: ServeConfig,
             f"unknown engine mode {mode!r}; known: {sorted(ENGINES)}")
     return ENGINES[mode](cfg, serve, hw, loop=loop,
                          preempt_policy=preempt_policy)
+
+
+def drive(engine: BaseEngine, requests: List[Request]
+          ) -> "tuple[List[RequestRecord], float]":
+    """Blocking convenience driver for a STANDALONE engine (tests,
+    examples, single-replica experiments): enqueue the trace, run its
+    loop dry, and return ``(records, span_s)``.
+
+    This replaces the old ``Engine.run()`` shim.  It is a free function
+    on purpose: cluster and gateway callers share one loop across many
+    engines and must drive it themselves, consuming the typed event
+    stream (``engine.subscribe`` / ``serving.metrics.StreamMetrics``)
+    rather than scraping records after the fact."""
+    engine.enqueue(list(requests))
+    engine.loop.run()
+    span = engine.loop.now if engine.loop.now > 0 else 1.0
+    return engine.records(), span

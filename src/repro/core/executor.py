@@ -16,9 +16,12 @@ stub for that door.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
+
+import numpy as np
 
 from repro.core.scheduler import SchedView, StepPlan
+from repro.perfmodel import batch as B
 from repro.perfmodel import costs as C
 from repro.perfmodel import interference as I
 from repro.perfmodel.hw import TPU_V5E, HardwareSpec
@@ -48,6 +51,14 @@ class Executor:
 
     def execute(self, plan: StepPlan, view: SchedView) -> StepOutputs:
         raise NotImplementedError
+
+    def price_batch(self, plans: Sequence[StepPlan],
+                    views: Sequence[SchedView]) -> "list[StepOutputs]":
+        """Price many (plan, view) pairs in one call.  The pairs must be
+        causally independent (different replicas, or speculative what-if
+        pricing) — implementations may reorder the underlying cost
+        evaluations.  Default: the sequential scalar path."""
+        return [self.execute(p, v) for p, v in zip(plans, views)]
 
     def transfer_seconds(self, r, serve) -> float:
         """Disagg KV-transfer time for one request (ICI on the critical
@@ -84,6 +95,77 @@ class PerfModelExecutor(Executor):
         return device_s + cpu
 
     def execute(self, plan: StepPlan, view: SchedView) -> StepOutputs:
+        return self._assemble(plan, view, C.prefill_cost,
+                              C.chunk_prefill_cost, C.decode_cost)
+
+    def price_batch(self, plans: Sequence[StepPlan],
+                    views: Sequence[SchedView]) -> "list[StepOutputs]":
+        """Batched pricing: every cost any plan needs is collected,
+        deduplicated by operating point, and priced through the
+        ``perfmodel.batch`` array layer in one call per cost kind — the
+        per-call ``lru_cache`` memoization of the scalar path becomes
+        vectorized key dedup here.  Control flow is ``_assemble`` both
+        times (a recording pass, then a lookup pass), so the batched and
+        scalar paths cannot drift; the costs themselves are bit-identical
+        by the batch layer's contract."""
+        pre_k: dict = {}
+        chk_k: dict = {}
+        dec_k: dict = {}
+
+        def rec_pre(cfg, seq_lens, tp):
+            pre_k[(tuple(seq_lens), tp)] = None
+            return C.ZERO_COST
+
+        def rec_chk(cfg, chunk_tokens, ctx_so_far, tp):
+            chk_k[(chunk_tokens, ctx_so_far, tp)] = None
+            return C.ZERO_COST
+
+        def rec_dec(cfg, bs, ctx_total, tp):
+            dec_k[(bs, ctx_total, tp)] = None
+            return C.ZERO_COST
+
+        for p, v in zip(plans, views):
+            self._assemble(p, v, rec_pre, rec_chk, rec_dec)
+
+        if pre_k:
+            ks = list(pre_k)
+            got = B.prefill_cost(self.cfg, [k[0] for k in ks],
+                                 np.array([k[1] for k in ks]))
+            for i, k in enumerate(ks):
+                pre_k[k] = got.item(i) if any(k[0]) else C.ZERO_COST
+        if chk_k:
+            ks = list(chk_k)
+            got = B.chunk_prefill_cost(
+                self.cfg, [k[0] for k in ks], [k[1] for k in ks],
+                np.array([k[2] for k in ks]))
+            for i, k in enumerate(ks):
+                chk_k[k] = got.item(i)
+        if dec_k:
+            ks = list(dec_k)
+            got = B.decode_cost(self.cfg, [k[0] for k in ks],
+                                [k[1] for k in ks],
+                                np.array([k[2] for k in ks]))
+            for i, k in enumerate(ks):
+                dec_k[k] = got.item(i) if k[0] else C.ZERO_COST
+
+        def use_pre(cfg, seq_lens, tp):
+            return pre_k[(tuple(seq_lens), tp)]
+
+        def use_chk(cfg, chunk_tokens, ctx_so_far, tp):
+            return chk_k[(chunk_tokens, ctx_so_far, tp)]
+
+        def use_dec(cfg, bs, ctx_total, tp):
+            return dec_k[(bs, ctx_total, tp)]
+
+        return [self._assemble(p, v, use_pre, use_chk, use_dec)
+                for p, v in zip(plans, views)]
+
+    def _assemble(self, plan: StepPlan, view: SchedView, prefill_cost,
+                  chunk_prefill_cost, decode_cost) -> StepOutputs:
+        """The one pricing control flow: which costs a plan needs and how
+        they couple through the interference model.  ``execute`` injects
+        the memoized scalar pricers; ``price_batch`` injects recorders,
+        then lookups into the batched results."""
         serve = view.serve
         p_out = d_out = h_out = None
         if plan.prefill is not None:
@@ -94,11 +176,11 @@ class PerfModelExecutor(Executor):
                 # suffix, attending over the cached prefix as context
                 cost = C.ZERO_COST
                 for r in batch:
-                    cost = cost + C.chunk_prefill_cost(
+                    cost = cost + chunk_prefill_cost(
                         self.cfg, r.prefill_tokens_needed,
                         r.cached_prefix_len, chips)
             else:
-                cost = C.prefill_cost(
+                cost = prefill_cost(
                     self.cfg, [r.prompt_len for r in batch], chips)
             dlane = view.lanes.get("decode", None)
             if self.colocated and dlane is not None and dlane.busy and \
@@ -115,7 +197,7 @@ class PerfModelExecutor(Executor):
             bs = len(view.running) + len(plan.decode.joins)
             ctx_total = float(view.running.ctx_tokens +
                               sum(r.context_len for r in plan.decode.joins))
-            cost = C.decode_cost(self.cfg, bs, ctx_total, chips)
+            cost = decode_cost(self.cfg, bs, ctx_total, chips)
             if p_out is not None:
                 p_cost = p_out.cost          # launched in this same plan
             else:
@@ -133,13 +215,13 @@ class PerfModelExecutor(Executor):
             chips = self._chips("step", serve)
             cost = C.ZERO_COST
             for r, take in plan.hybrid.chunks:
-                cost = cost + C.chunk_prefill_cost(
+                cost = cost + chunk_prefill_cost(
                     self.cfg, take,
                     r.cached_prefix_len + r.prefill_tokens_done, chips)
             bs = len(view.running)
             if bs:
                 ctx_total = float(view.running.ctx_tokens)
-                cost = cost + C.decode_cost(self.cfg, bs, ctx_total, chips)
+                cost = cost + decode_cost(self.cfg, bs, ctx_total, chips)
             dur = I.phase_time(cost, self.hw, chips)
             h_out = LaunchOutcome(self._step_time(dur, serve), cost)
         return StepOutputs(prefill=p_out, decode=d_out, hybrid=h_out)

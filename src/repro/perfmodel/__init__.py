@@ -1,6 +1,8 @@
+from repro.perfmodel import batch  # noqa: F401
+from repro.perfmodel.batch import StepCostBatch  # noqa: F401
 from repro.perfmodel.costs import (  # noqa: F401
-    StepCost, decode_cost, kv_read_bytes, model_flops_per_token,
-    prefill_cost, weight_bytes,
+    StepCost, cache_stats, decode_cost, kv_read_bytes,
+    model_flops_per_token, prefill_cost, weight_bytes,
 )
 from repro.perfmodel.hw import TPU_V5E, HardwareSpec  # noqa: F401
 from repro.perfmodel.interference import (  # noqa: F401

@@ -14,6 +14,15 @@ operating points: the projection autoscaler re-prices identical
 quantized (chunk, ctx) points — all of which now hit the cache instead
 of re-walking the layer pattern.  Cached values are the *same* objects,
 so memoization can never change simulator behavior, only its cost.
+All caches carry an explicit ``maxsize`` so a fleet-scale trace cannot
+grow them without bound; ``cache_stats()`` surfaces hit/miss counters
+(bench_hotpath reports them).
+
+The formula bodies live in ``perfmodel.batch`` (the structure-of-arrays
+layer the fleet paths price whole replica sets through); the cached
+entry points below are N=1 views over it, so there is one formula, not
+two, and the batched and scalar paths are bit-identical by
+construction.
 
 Conventions:
   * matmul FLOPs = 2*M*N*K;   causal attention scores halved.
@@ -27,6 +36,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 from typing import Sequence
+
+from repro.perfmodel import batch as _batch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,7 +65,10 @@ def model_flops_per_token(cfg) -> float:
     return 6.0 * cfg.active_param_count()
 
 
-@functools.lru_cache(maxsize=None)
+# bounded (was maxsize=None): a handful of (cfg, dtype) pairs exist per
+# process, but an unbounded cache is a fleet-scale liability on
+# principle — every perfmodel cache now carries an explicit ceiling
+@functools.lru_cache(maxsize=1024)
 def weight_bytes(cfg, dtype_bytes: int = 2) -> float:
     """Bytes of weights streamed per step (MoE: only routed experts are
     read in expectation when the batch is small; we charge min(full,
@@ -68,19 +82,9 @@ def active_weight_bytes(cfg, tokens: int, dtype_bytes: int = 2) -> float:
 
     Dense: all weights.  MoE: each token touches top_k experts; with E
     experts the expected fraction of expert weights touched is
-    1-(1-k/E)^tokens, capped at 1.
+    1-(1-k/E)^tokens, capped at 1.  (N=1 view of the batched formula.)
     """
-    if cfg.moe is None:
-        return cfg.param_count() * dtype_bytes
-    total = cfg.param_count()
-    moe_layers = sum(1 for i in range(cfg.num_layers)
-                     if cfg.ffn_at(i) == "moe")
-    glu = 3
-    expert_params = moe_layers * cfg.moe.num_experts * glu * \
-        cfg.d_model * cfg.moe.d_ff_expert
-    rest = total - expert_params
-    p_touch = 1.0 - (1.0 - cfg.moe.top_k / cfg.moe.num_experts) ** tokens
-    return (rest + expert_params * min(1.0, p_touch)) * dtype_bytes
+    return float(_batch.active_weight_bytes(cfg, (tokens,), dtype_bytes)[0])
 
 
 def kv_read_bytes(cfg, context_tokens: float, dtype_bytes: int = 2) -> float:
@@ -89,49 +93,6 @@ def kv_read_bytes(cfg, context_tokens: float, dtype_bytes: int = 2) -> float:
     if cfg.sliding_window:
         context_tokens = min(context_tokens, cfg.sliding_window)
     return per_tok * context_tokens
-
-
-def _attn_flops(cfg, q_tokens: float, ctx_tokens: float,
-                causal_half: bool) -> float:
-    """Score + AV FLOPs across attention layers for q_tokens queries
-    attending to ctx_tokens keys (per sequence averages are fine)."""
-    if cfg.sliding_window:
-        ctx_tokens = min(ctx_tokens, cfg.sliding_window)
-    per_layer = 2 * 2 * q_tokens * ctx_tokens * cfg.num_heads * cfg.head_dim
-    if causal_half:
-        per_layer *= 0.5
-    return per_layer * cfg.attn_layer_count
-
-
-def _ssm_flops(cfg, tokens: float) -> float:
-    """Selective-scan / xLSTM recurrence FLOPs (non-matmul part)."""
-    if not any(m in ("mamba", "mlstm", "slstm")
-               for m in cfg.layer_pattern):
-        return 0.0    # pure-attention arch: skip the per-layer walk
-    total = 0.0
-    for i in range(cfg.num_layers):
-        mx = cfg.mixer_at(i)
-        if mx == "mamba":
-            m = cfg.mamba
-            total += 9.0 * tokens * cfg.d_inner * m.d_state
-        elif mx == "mlstm":
-            x = cfg.xlstm
-            din = int(x.proj_factor * cfg.d_model)
-            dh = din // x.num_heads
-            total += 8.0 * tokens * din * dh
-        elif mx == "slstm":
-            total += 10.0 * tokens * cfg.d_model
-    return total
-
-
-def _tp_collective_bytes(cfg, tokens: float, tp: int,
-                         dtype_bytes: int = 2) -> float:
-    """2 all-reduces per block of the (tokens, d_model) slab."""
-    if tp <= 1:
-        return 0.0
-    payload = tokens * cfg.d_model * dtype_bytes
-    ring = 2.0 * (tp - 1) / tp
-    return 2.0 * cfg.num_layers * payload * ring
 
 
 def prefill_cost(cfg, seq_lens: Sequence[int], tp: int = 1,
@@ -143,18 +104,9 @@ def prefill_cost(cfg, seq_lens: Sequence[int], tp: int = 1,
 @functools.lru_cache(maxsize=65536)
 def _prefill_cost(cfg, seq_lens: tuple, tp: int,
                   dtype_bytes: int) -> StepCost:
-    T = float(sum(seq_lens))
-    if T == 0:
+    if not any(seq_lens):
         return ZERO_COST
-    n_active = cfg.active_param_count()
-    flops = 2.0 * n_active * T + \
-        (sum(_attn_flops(cfg, s, s, True) for s in seq_lens)
-         if cfg.attn_layer_count else 0.0) + _ssm_flops(cfg, T)
-    bytes_ = active_weight_bytes(cfg, int(T), dtype_bytes)
-    bytes_ += 2.0 * T * cfg.kv_bytes_per_token(dtype_bytes)  # KV write+read
-    bytes_ += 4.0 * T * cfg.d_model * dtype_bytes            # act traffic
-    coll = _tp_collective_bytes(cfg, T, tp, dtype_bytes) / max(tp, 1)
-    return StepCost(flops, bytes_, coll)
+    return _batch.prefill_cost(cfg, (seq_lens,), tp, dtype_bytes).item(0)
 
 
 @functools.lru_cache(maxsize=65536)
@@ -163,16 +115,8 @@ def chunk_prefill_cost(cfg, chunk_tokens: int, ctx_so_far: int,
     """One chunk of a chunked prefill: chunk_tokens queries attend to
     (ctx_so_far + chunk) keys — the repeated KV re-read is the chunking
     overhead the paper quantifies in §3.1."""
-    T = float(chunk_tokens)
-    n_active = cfg.active_param_count()
-    flops = 2.0 * n_active * T + \
-        _attn_flops(cfg, T, ctx_so_far + T / 2, False) + _ssm_flops(cfg, T)
-    bytes_ = active_weight_bytes(cfg, int(T), dtype_bytes)
-    bytes_ += kv_read_bytes(cfg, ctx_so_far, dtype_bytes) * 1.0
-    bytes_ += 2.0 * T * cfg.kv_bytes_per_token(dtype_bytes)
-    bytes_ += 4.0 * T * cfg.d_model * dtype_bytes
-    coll = _tp_collective_bytes(cfg, T, tp, dtype_bytes) / max(tp, 1)
-    return StepCost(flops, bytes_, coll)
+    return _batch.chunk_prefill_cost(cfg, (chunk_tokens,), (ctx_so_far,),
+                                     tp, dtype_bytes).item(0)
 
 
 @functools.lru_cache(maxsize=65536)
@@ -182,17 +126,8 @@ def decode_cost(cfg, batch: int, ctx_tokens_total: float, tp: int = 1,
     context of ctx_tokens_total across the batch."""
     if batch == 0:
         return ZERO_COST
-    B = float(batch)
-    n_active = cfg.active_param_count()
-    flops = 2.0 * n_active * B
-    flops += _attn_flops(cfg, B, ctx_tokens_total / B, False)
-    flops += _ssm_flops(cfg, B)
-    bytes_ = active_weight_bytes(cfg, batch, dtype_bytes)
-    bytes_ += kv_read_bytes(cfg, ctx_tokens_total / B, dtype_bytes) * B
-    bytes_ += B * cfg.state_bytes_per_seq(dtype_bytes)
-    bytes_ += 4.0 * B * cfg.d_model * dtype_bytes
-    coll = _tp_collective_bytes(cfg, B, tp, dtype_bytes) / max(tp, 1)
-    return StepCost(flops, bytes_, coll)
+    return _batch.decode_cost(cfg, (batch,), (ctx_tokens_total,),
+                              tp, dtype_bytes).item(0)
 
 
 def kv_transfer_bytes(cfg, prompt_len: int, dtype_bytes: int = 2) -> float:
@@ -208,3 +143,19 @@ def kv_migration_seconds(cfg, context_tokens: int, link_gbps: float,
     running request)."""
     return kv_transfer_bytes(cfg, context_tokens, dtype_bytes) / \
         max(link_gbps, 1e-9) / 1e9
+
+
+def cache_stats() -> dict:
+    """hits/misses/size for every memoized perfmodel entry point —
+    bench_hotpath surfaces the per-run deltas so cache behavior stays
+    visible at fleet scale (a miss now pays the N=1 batch-layer view)."""
+    from repro.perfmodel import interference as _interference
+    fns = {
+        "prefill_cost": _prefill_cost,
+        "chunk_prefill_cost": chunk_prefill_cost,
+        "decode_cost": decode_cost,
+        "active_weight_bytes": active_weight_bytes,
+        "weight_bytes": weight_bytes,
+        "forecast_phase_times": _interference.forecast_phase_times,
+    }
+    return {name: fn.cache_info()._asdict() for name, fn in fns.items()}

@@ -27,13 +27,15 @@ import dataclasses
 import functools
 from typing import Optional
 
+import numpy as np
+
+from repro.perfmodel import batch as _batch
+# §3.4 memory-subsystem interference constants live in the formula
+# layer (perfmodel.batch); re-exported here under their historical names
+from repro.perfmodel.batch import (MEM_INTERFERENCE_DECODE,
+                                   MEM_INTERFERENCE_PREFILL)
 from repro.perfmodel.costs import StepCost
 from repro.perfmodel.hw import HardwareSpec
-
-# §3.4 memory-subsystem interference (fractional slowdown of HBM term
-# when the other phase is co-resident).
-MEM_INTERFERENCE_PREFILL = 0.02
-MEM_INTERFERENCE_DECODE = 0.035   # paper: 2-5% avg
 
 
 def phase_time(cost: StepCost, hw: HardwareSpec, chips: int,
@@ -128,11 +130,15 @@ def forecast_phase_times(p_cost: Optional[StepCost],
     Memoized: the projection autoscaler and admission controller call
     this with the same (cost, chips) operating points tick after tick
     whenever the fleet state is unchanged; caching returns the identical
-    tuple without re-running the overlap model."""
-    if colocated:
-        r = overlapped_times(p_cost, d_cost, hw, chips_p,
-                             f_decode=f_decode)
-        return r.t_prefill, r.t_decode
-    t_p = phase_time(p_cost, hw, chips_p) if p_cost is not None else 0.0
-    t_d = phase_time(d_cost, hw, chips_d) if d_cost is not None else 0.0
-    return t_p, t_d
+    tuple without re-running the overlap model.
+
+    N=1 view of ``batch.forecast_phase_times`` — the fleet tick prices
+    all replicas through the batched overlap model in one call, and this
+    view guarantees the scalar path computes the exact same formula."""
+    pb, _ = _batch.pack_costs((p_cost,))
+    db, _ = _batch.pack_costs((d_cost,))
+    t_p, t_d = _batch.forecast_phase_times(
+        pb, db, hw, chips_p, chips_d, colocated=colocated,
+        p_mask=p_cost is not None, d_mask=d_cost is not None,
+        f_decode=np.nan if f_decode is None else f_decode)
+    return float(t_p[0]), float(t_d[0])

@@ -71,11 +71,14 @@ import math
 from typing import (TYPE_CHECKING, Callable, Dict, List, Optional,
                     Sequence, Union)
 
+import numpy as np
+
 from repro.config import ServeConfig
 from repro.core.events import EventStream, RejectedEvent
 from repro.core.preemption import PreemptionPolicy
 from repro.core.queues import IndexedQueue
 from repro.core.request import Request, State
+from repro.perfmodel import batch as B
 from repro.perfmodel import costs as C
 from repro.perfmodel import interference as I
 from repro.perfmodel.hw import TPU_V5E, HardwareSpec
@@ -166,6 +169,12 @@ class Router:
     """Picks a replica index for each arriving request."""
 
     name = "base"
+    # perfmodel-backed routers score the whole candidate list through
+    # perfmodel.batch in one call when this is set (the cluster copies
+    # its own batch_pricing flag here); the scalar per-replica path is
+    # kept as the reference/fallback and is bit-identical by the batch
+    # layer's contract
+    batch_pricing = True
 
     def choose(self, r: Request, replicas: List[Replica]) -> int:
         raise NotImplementedError
@@ -244,9 +253,39 @@ class SloAwareRouter(Router):
         return (proj_ttft / ttft_ceiling(r.prompt_len, slo)
                 + proj_itl / (slo.itl_ms / 1e3))
 
+    def _scores(self, r: Request, replicas: List[Replica]) -> np.ndarray:
+        """Vectorized ``_score`` over the whole candidate list: one
+        batched prefill pricing and one batched decode pricing for the
+        fleet instead of 2N scalar cost calls per arrival.  Loads come
+        from ``Engine.router_load()`` — the three priced counters read
+        directly, not the full 16-field snapshot the scalar reference
+        path builds per replica (value-identical either way)."""
+        loads = [rep.engine.router_load() for rep in replicas]
+        chips_p = np.asarray(
+            [getattr(rep.engine, "chips_p", rep.serve.chips)
+             for rep in replicas], dtype=np.int64)
+        chips_d = np.asarray(
+            [getattr(rep.engine, "chips_d", rep.serve.chips)
+             for rep in replicas], dtype=np.int64)
+        pl = r.prompt_len
+        pb = B.prefill_cost(
+            self.cfg, [[tok + pl] for tok, _, _ in loads], chips_p)
+        proj_ttft = B.phase_time(pb, self.hw, chips_p)
+        db = B.decode_cost(
+            self.cfg, [run + 1 for _, run, _ in loads],
+            [float(ctx + pl) for _, _, ctx in loads], chips_d)
+        proj_itl = B.phase_time(db, self.hw, chips_d)
+        slo = self.serve.slo
+        return (proj_ttft / ttft_ceiling(pl, slo)
+                + proj_itl / (slo.itl_ms / 1e3))
+
     def choose(self, r: Request, replicas: List[Replica]) -> int:
-        return min(range(len(replicas)),
-                   key=lambda i: (self._score(r, replicas[i]), i))
+        if not self.batch_pricing:
+            return min(range(len(replicas)),
+                       key=lambda i: (self._score(r, replicas[i]), i))
+        # scores are bit-identical to the scalar path and np.argmin
+        # returns the FIRST minimum, so the (score, i) tie-break holds
+        return int(np.argmin(self._scores(r, replicas)))
 
 
 class BucketedRouter(Router):
@@ -428,12 +467,18 @@ class Cluster:
                  rebalance: Optional[RebalancePolicy] = None,
                  loop: Optional[EventLoop] = None,
                  session_affinity: bool = False,
-                 preempt_policy: Optional[PreemptionPolicy] = None):
+                 preempt_policy: Optional[PreemptionPolicy] = None,
+                 batch_pricing: bool = True):
         if not modes:
             raise ValueError("cluster needs at least one replica mode")
         self.cfg = cfg
         self.serve = serve
         self.hw = hw
+        # fleet-vectorized pricing: projection/rebalance ticks and the
+        # slo_aware router price all replicas through perfmodel.batch in
+        # one call; False restores the scalar per-replica loops (same
+        # numbers bit-for-bit — the batch layer is a pure vectorization)
+        self.batch_pricing = batch_pricing
         self.loop = loop if loop is not None else EventLoop()
         # session -> replica idx holding the session's parked prefix KV;
         # affinity routing sends the next turn there so the prefix hits
@@ -450,6 +495,7 @@ class Cluster:
         for spec in modes:
             self._add_replica(spec)
         self.router = make_router(router, cfg, serve, hw)
+        self.router.batch_pricing = batch_pricing
         # the live list object: scale-ups appended later stay visible
         self.router.bind(self.replicas)
         self.scale = scale
@@ -761,6 +807,76 @@ class Cluster:
         itl_ratio = t_d / (self.serve.slo.itl_ms / 1e3)
         return ttft_ratio, itl_ratio
 
+    def _fleet_forecast(self, prefill_tokens, decode_bs, decode_ctx,
+                        chips_p, chips_d, colocated):
+        """THE batched forecast call site: price a fleet of replica load
+        points through ``perfmodel.batch`` in one call and return the
+        ``(t_prefill, t_decode)`` arrays.  Both projection passes (the
+        sustained-rate pass and the backlog pass) route through here —
+        this replaces the per-replica ``interference.
+        forecast_phase_times`` loops of the scalar path.
+
+        Entry ``i`` carries no prefill phase when
+        ``prefill_tokens[i] <= 0`` and no decode phase when
+        ``decode_bs[i] == 0`` (the scalar API's ``None`` costs)."""
+        tp_p = np.asarray(chips_p, dtype=np.int64)
+        tp_d = np.asarray(chips_d, dtype=np.int64)
+        pb = B.prefill_cost(self.cfg, [[t] for t in prefill_tokens], tp_p)
+        db = B.decode_cost(self.cfg, decode_bs, decode_ctx, tp_d)
+        return B.forecast_phase_times(
+            pb, db, self.hw, tp_p, tp_d,
+            colocated=np.asarray(colocated, dtype=bool),
+            p_mask=np.asarray([t > 0 for t in prefill_tokens]),
+            d_mask=np.asarray([b > 0 for b in decode_bs]),
+            f_decode=np.nan)
+
+    def _projection_forecasts(self, live: List[Replica],
+                              snaps: Dict[int, "LoadSnapshot"],
+                              share: float) -> "tuple[dict, dict]":
+        """Batched replacement for the per-replica
+        ``_prefill_token_rate`` / ``_project_replica`` loops: two
+        ``_fleet_forecast`` invocations per tick (the backlog pass
+        depends on the rates through the arrival surplus), each pricing
+        every live replica at once.  Returns the same ``rates`` and
+        ``(ttft_ratio, itl_ratio)`` maps as the scalar loops,
+        bit-for-bit."""
+        pol = self.scale
+        chips_p, chips_d, coloc = [], [], []
+        for rep in live:
+            s = snaps[rep.idx]
+            chips_p.append(s.chips_prefill or rep.serve.chips)
+            chips_d.append(s.chips_decode or rep.serve.chips)
+            coloc.append(getattr(rep.engine.scheduler, "colocated", True))
+        # sustained-rate pass: a saturating prompt batch, co-resident
+        # with the current decode batch on colocated replicas only
+        tokens = max(1, self.serve.prefill_max_tokens // 4)
+        rate_bs = [snaps[rep.idx].running_decode if c else 0
+                   for rep, c in zip(live, coloc)]
+        rate_ctx = [float(snaps[rep.idx].decode_ctx_tokens)
+                    for rep in live]
+        t_rate, _ = self._fleet_forecast([tokens] * len(live), rate_bs,
+                                         rate_ctx, chips_p, chips_d,
+                                         coloc)
+        rates = {rep.idx: tokens / max(float(t), 1e-9)
+                 for rep, t in zip(live, t_rate)}
+        # backlog pass: queued work plus the undrainable arrival surplus
+        backlogs, bss, ctxs = [], [], []
+        for rep in live:
+            s = snaps[rep.idx]
+            surplus = max(0.0, share - rates[rep.idx])
+            backlogs.append(s.queued_prefill_tokens +
+                            int(surplus * pol.horizon_s))
+            bss.append(s.running_decode + s.queued_requests)
+            ctxs.append(float(s.decode_ctx_tokens +
+                              s.queued_prefill_tokens))
+        t_p, t_d = self._fleet_forecast(backlogs, bss, ctxs,
+                                        chips_p, chips_d, coloc)
+        ceil = ttft_ceiling(1, self.serve.slo)
+        itl = self.serve.slo.itl_ms / 1e3
+        proj = {rep.idx: (float(tp) / ceil, float(td) / itl)
+                for rep, tp, td in zip(live, t_p, t_d)}
+        return rates, proj
+
     def _grow_pool(self, rep: Replica, lane: str) -> bool:
         """Independent P/D pool scaling: add ``pool_chip_step`` chips to
         ONE pool of a split-pool replica (the other pool's chips and
@@ -790,13 +906,21 @@ class Cluster:
             max(pol.horizon_s, pol.check_interval_s))
         share = inbound / max(1, len(live))
         # one perfmodel rate evaluation per replica per tick, shared by
-        # the per-replica projections and the fleet capacity forecast
-        rates = {rep.idx: self._prefill_token_rate(rep, snaps[rep.idx])
-                 for rep in live}
+        # the per-replica projections and the fleet capacity forecast;
+        # batch_pricing collapses both per-replica loops into two
+        # fleet-wide perfmodel.batch calls with identical numbers
+        if self.batch_pricing:
+            rates, proj = self._projection_forecasts(live, snaps, share)
+        else:
+            rates = {rep.idx: self._prefill_token_rate(rep,
+                                                       snaps[rep.idx])
+                     for rep in live}
+            proj = {rep.idx: self._project_replica(
+                rep, snaps[rep.idx], share, rates[rep.idx])
+                for rep in live}
         pressed: List[tuple] = []      # (ratio, lane, replica)
         for rep in live:
-            ttft_r, itl_r = self._project_replica(rep, snaps[rep.idx],
-                                                  share, rates[rep.idx])
+            ttft_r, itl_r = proj[rep.idx]
             if ttft_r > pol.ttft_margin:
                 pressed.append((ttft_r, "prefill", rep))
             if itl_r > pol.itl_margin:
@@ -877,6 +1001,32 @@ class Cluster:
             tgt, snaps[tgt.idx].queued_prefill_tokens + victim.context_len)
         return dst_wait < src_wait
 
+    def _benefit_filter(self, victim: Request, src: Replica,
+                        targets: List[Replica],
+                        snaps: Dict[int, "LoadSnapshot"]
+                        ) -> List[Replica]:
+        """Batched cost/benefit gate: the source's projected wait and
+        every candidate destination's price in ONE ``perfmodel.batch``
+        call instead of a scalar cost pair per target."""
+        if not self.rebalance.cost_benefit or not targets:
+            return targets
+        if not self.batch_pricing:
+            return [rep for rep in targets
+                    if self._benefit_ok(victim, src, rep, snaps)]
+        gbps = self.rebalance.link_gbps or self.serve.kv_transfer_gbps
+        xfer = C.kv_migration_seconds(self.cfg, victim.context_len, gbps)
+        reps = [src] + targets
+        tokens = [snaps[r.idx].queued_prefill_tokens + victim.context_len
+                  for r in reps]
+        chips = np.asarray([getattr(r.engine, "chips_p", r.serve.chips)
+                            for r in reps], dtype=np.int64)
+        waits = B.phase_time(
+            B.prefill_cost(self.cfg, [[t] for t in tokens], chips),
+            self.hw, chips)
+        src_wait = float(waits[0])
+        return [rep for rep, w in zip(targets, waits[1:])
+                if xfer + float(w) < src_wait]
+
     def _rebalance_tick(self) -> None:
         pol = self.rebalance
         live = self.routable or self.replicas
@@ -912,9 +1062,8 @@ class Cluster:
                     targets = [rep for rep in targets
                                if self._migration_ok(victim, rep, live)]
                     if has_kv:
-                        targets = [rep for rep in targets
-                                   if self._benefit_ok(victim, src, rep,
-                                                       snaps)]
+                        targets = self._benefit_filter(victim, src,
+                                                       targets, snaps)
                     if not targets:
                         break
                     tgt = min(targets, key=lambda rep: (
@@ -975,14 +1124,16 @@ def run_fleet(cfg, serve: ServeConfig,
               admission: Optional[AdmissionPolicy] = None,
               rebalance: Optional[RebalancePolicy] = None,
               session_affinity: bool = False,
-              preempt_policy: Optional[PreemptionPolicy] = None):
+              preempt_policy: Optional[PreemptionPolicy] = None,
+              batch_pricing: bool = True):
     """Build a cluster, serve a trace, and return
     ``(fleet_summarize(...) dict, cluster)``.  Requests are deep-copied so
     the caller's trace can be replayed against other configurations."""
     cluster = Cluster(cfg, serve, modes, router=router, hw=hw, scale=scale,
                       admission=admission, rebalance=rebalance,
                       session_affinity=session_affinity,
-                      preempt_policy=preempt_policy)
+                      preempt_policy=preempt_policy,
+                      batch_pricing=batch_pricing)
     _, span = cluster.run([copy.deepcopy(r) for r in requests])
     # the fleet-wide summary is built from the cluster's event stream
     # (StreamMetrics), which already carries cluster-side rejections

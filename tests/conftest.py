@@ -23,6 +23,7 @@ if _ROOT not in sys.path:
 
 _HAS_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
 _HYPOTHESIS_MODULES = ["test_engines.py", "test_training.py",
+                       "test_batch_properties.py",
                        "test_router_properties.py",
                        "test_engine_accounting_properties.py",
                        "test_liveness_properties.py",

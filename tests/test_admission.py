@@ -7,7 +7,7 @@ import copy
 import pytest
 
 from repro.config import SLOConfig, ServeConfig, get_config
-from repro.core import make_engine
+from repro.core import drive, make_engine
 from repro.core.request import Request, State
 from repro.kvcache import KVCacheManager
 from repro.serving import (TRACES, AdmissionPolicy, Cluster,
@@ -42,7 +42,7 @@ def test_engine_rejects_oversized_prompt_cleanly(mode):
     eng.kv = KVCacheManager(8, 16)      # 128-token decode pool
     big = Request(rid=0, arrival=0.0, prompt_len=1000, max_new_tokens=8)
     ok = Request(rid=1, arrival=0.0, prompt_len=64, max_new_tokens=4)
-    recs, _ = eng.run([big, ok])
+    recs, _ = drive(eng, [big, ok])
     assert big.state is State.REJECTED
     assert [r.rid for r in eng.rejected] == [0]
     assert ok.state is State.FINISHED and len(eng.finished) == 1
@@ -62,7 +62,7 @@ def test_rapid_oversized_head_does_not_starve_queue():
     reqs = [Request(rid=0, arrival=0.0, prompt_len=5000, max_new_tokens=4)]
     reqs += [Request(rid=i, arrival=0.01 * i, prompt_len=128,
                      max_new_tokens=4) for i in range(1, 6)]
-    eng.run(reqs)
+    drive(eng, reqs)
     assert len(eng.finished) == 5
     assert len(eng.rejected) == 1
 
@@ -81,7 +81,7 @@ def test_disagg_backpressure_retry_does_not_double_free():
     first = Request(rid=0, arrival=0.0, prompt_len=500,
                     max_new_tokens=100)
     second = Request(rid=1, arrival=0.0, prompt_len=500, max_new_tokens=8)
-    recs, _ = eng.run([first, second])  # KeyError before the fix
+    recs, _ = drive(eng, [first, second])  # KeyError before the fix
     assert first.state is State.FINISHED
     assert second.state is State.FINISHED
     assert not eng.rejected
@@ -102,7 +102,7 @@ def test_disagg_rejects_lifetime_oversize():
     doomed = Request(rid=0, arrival=0.0, prompt_len=1500,
                      max_new_tokens=200)
     ok = Request(rid=1, arrival=0.0, prompt_len=500, max_new_tokens=50)
-    recs, _ = eng.run([doomed, ok])
+    recs, _ = drive(eng, [doomed, ok])
     assert doomed.state is State.REJECTED
     assert doomed.reject_reason == "never_fits"
     assert ok.state is State.FINISHED

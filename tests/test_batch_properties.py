@@ -1,0 +1,247 @@
+"""Bit-identity property suite: ``perfmodel.batch`` == scalar formulas,
+elementwise (hypothesis, dev-only dep — skipped at collection when
+hypothesis is absent, see conftest.py).
+
+The scalar entry points in ``perfmodel.costs``/``interference`` are now
+N=1 views over the batch layer, so comparing against them would be
+circular.  The oracle here is independent: the PINNED pre-refactor
+pure-Python cost bodies from ``benchmarks/bench_hotpath.py`` (the same
+ones the hot-path benchmark's baseline runs) plus in-file copies of the
+pre-refactor phase-time/overlap/forecast bodies.
+
+Every assertion is ``==``, never approx: the batch layer's contract is
+bit-identity (router argmin tie-breaks and the golden parity suite
+depend on it), and float64 array arithmetic in the documented
+evaluation order is IEEE-identical to the CPython float chain.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from benchmarks.bench_hotpath import _RAW_CHUNK, _RAW_DECODE, _RAW_PREFILL
+from repro.config import get_config
+from repro.perfmodel import batch as B
+from repro.perfmodel.hw import TPU_V5E
+
+ARCHS = ["qwen2.5-14b", "llama3-70b", "mixtral-8x7b",
+         "jamba-1.5-large-398b", "xlstm-125m"]
+TPS = [1, 2, 4, 8, 16]
+
+
+# ---------------------------------------------------------------------------
+# pinned scalar phase/overlap/forecast reference (pre-refactor
+# interference.py bodies — do NOT "simplify" against the live module)
+# ---------------------------------------------------------------------------
+
+_MEM_P = 0.02
+_MEM_D = 0.035
+
+
+def _ref_phase_time(cost, hw, chips, f=1.0, mem_interference=0.0,
+                    bw_share=1.0):
+    if cost.flops == 0 and cost.hbm_bytes == 0:
+        return 0.0
+    t_compute = cost.flops / (chips * hw.peak_flops * max(f, 1e-3))
+    t_mem = cost.hbm_bytes * (1.0 + mem_interference) / \
+        (chips * hw.hbm_bw * bw_share)
+    t_coll = cost.coll_bytes / hw.ici_bw
+    return max(t_compute, t_mem) + t_coll + hw.launch_overhead_s
+
+
+def _ref_util(cost, hw, chips):
+    t_c = cost.flops / (chips * hw.peak_flops)
+    t_m = cost.hbm_bytes / (chips * hw.hbm_bw)
+    t_coll = cost.coll_bytes / hw.ici_bw
+    denom = max(t_m, t_c) + t_coll
+    if denom <= 0:
+        return 0.0
+    return min(1.0, t_c / denom)
+
+
+def _ref_forecast(p_cost, d_cost, hw, chips_p, chips_d, colocated,
+                  f_decode):
+    if colocated:
+        if d_cost is None and p_cost is None:
+            return 0.0, 0.0
+        if d_cost is None:
+            return _ref_phase_time(p_cost, hw, chips_p), 0.0
+        if p_cost is None:
+            return 0.0, _ref_phase_time(d_cost, hw, chips_p)
+        if f_decode is None:
+            u_d = _ref_util(d_cost, hw, chips_p)
+            u_p = _ref_util(p_cost, hw, chips_p)
+            share_d = u_d / max(u_d + u_p, 1e-9)
+            share_p = 1.0 - share_d
+            f_d, f_p = max(share_d, 1e-3), max(share_p, 1e-3)
+        else:
+            f_d = min(max(f_decode, 0.05), 0.95)
+            f_p = 1.0 - f_d
+        t_d = _ref_phase_time(d_cost, hw, chips_p, f=f_d,
+                              mem_interference=_MEM_D)
+        t_p = _ref_phase_time(p_cost, hw, chips_p, f=f_p,
+                              mem_interference=_MEM_P)
+        return t_p, t_d
+    t_p = _ref_phase_time(p_cost, hw, chips_p) \
+        if p_cost is not None else 0.0
+    t_d = _ref_phase_time(d_cost, hw, chips_d) \
+        if d_cost is not None else 0.0
+    return t_p, t_d
+
+
+# ---------------------------------------------------------------------------
+# plain check helpers (the properties; callable without hypothesis)
+# ---------------------------------------------------------------------------
+
+
+def _check_prefill(arch, seqs, tps):
+    cfg = get_config(arch)
+    pb = B.prefill_cost(cfg, seqs, np.asarray(tps, dtype=np.int64))
+    assert len(pb) == len(seqs)
+    for i, (row, tp) in enumerate(zip(seqs, tps)):
+        assert pb.item(i) == _RAW_PREFILL(cfg, tuple(row), tp, 2)
+
+
+def _check_chunk(arch, chunks, ctxs, tps):
+    cfg = get_config(arch)
+    cb = B.chunk_prefill_cost(cfg, chunks, ctxs,
+                              np.asarray(tps, dtype=np.int64))
+    for i, (ch, ctx, tp) in enumerate(zip(chunks, ctxs, tps)):
+        assert cb.item(i) == _RAW_CHUNK(cfg, ch, ctx, tp, 2)
+
+
+def _check_decode(arch, bss, ctxs, tps):
+    cfg = get_config(arch)
+    db = B.decode_cost(cfg, bss, ctxs, np.asarray(tps, dtype=np.int64))
+    for i, (bs, ctx, tp) in enumerate(zip(bss, ctxs, tps)):
+        assert db.item(i) == _RAW_DECODE(cfg, bs, ctx, tp, 2)
+
+
+def _check_phase_time(arch, bss, ctxs, tps, f, mem, bw_share):
+    cfg = get_config(arch)
+    chips = np.asarray(tps, dtype=np.int64)
+    db = B.decode_cost(cfg, bss, ctxs, chips)
+    got = B.phase_time(db, TPU_V5E, chips, f=f, mem_interference=mem,
+                       bw_share=bw_share)
+    util = B.compute_utilization(db, TPU_V5E, chips)
+    for i in range(len(db)):
+        c = db.item(i)
+        assert float(got[i]) == _ref_phase_time(
+            c, TPU_V5E, tps[i], f=f, mem_interference=mem,
+            bw_share=bw_share)
+        assert float(util[i]) == _ref_util(c, TPU_V5E, tps[i])
+
+
+def _check_forecast(arch, rows):
+    """rows: (p_seqs|None, (bs, ctx)|None, chips_p, chips_d, colocated,
+    f_decode|None) per replica — the full branch lattice of the scalar
+    forecast in one batched call."""
+    cfg = get_config(arch)
+    p_costs = [None if p is None else _RAW_PREFILL(cfg, tuple(p), cp, 2)
+               for p, _, cp, _, _, _ in rows]
+    d_costs = [None if d is None else _RAW_DECODE(cfg, d[0], d[1], cp
+                                                  if coloc else cd, 2)
+               for _, d, cp, cd, coloc, _ in rows]
+    pb, p_mask = B.pack_costs(p_costs)
+    db, d_mask = B.pack_costs(d_costs)
+    chips_p = np.asarray([r[2] for r in rows], dtype=np.int64)
+    chips_d = np.asarray([r[3] for r in rows], dtype=np.int64)
+    coloc = np.asarray([r[4] for r in rows], dtype=bool)
+    f_dec = np.asarray([np.nan if r[5] is None else r[5] for r in rows])
+    t_p, t_d = B.forecast_phase_times(
+        pb, db, TPU_V5E, chips_p, chips_d, colocated=coloc,
+        p_mask=p_mask, d_mask=d_mask, f_decode=f_dec)
+    for i, (_, _, cp, cd, co, fd) in enumerate(rows):
+        want = _ref_forecast(p_costs[i], d_costs[i], TPU_V5E, cp, cd,
+                             co, fd)
+        assert (float(t_p[i]), float(t_d[i])) == want
+
+
+def _check_pack_roundtrip(arch, seqs, tps):
+    cfg = get_config(arch)
+    costs = [_RAW_PREFILL(cfg, tuple(row), tp, 2) if row else None
+             for row, tp in zip(seqs, tps)]
+    batch, mask = B.pack_costs(costs)
+    for i, c in enumerate(costs):
+        assert mask[i] == (c is not None)
+        if c is not None:
+            assert batch.item(i) == c
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+arch_st = st.sampled_from(ARCHS)
+tp_st = st.sampled_from(TPS)
+seq_row_st = st.lists(st.integers(1, 16_384), min_size=0, max_size=4)
+ctx_st = st.floats(0.0, 2e6, allow_nan=False, allow_infinity=False)
+
+
+@st.composite
+def _rows(draw, row_st):
+    n = draw(st.integers(1, 8))
+    return ([draw(row_st) for _ in range(n)],
+            [draw(tp_st) for _ in range(n)])
+
+
+@st.composite
+def _forecast_rows(draw):
+    n = draw(st.integers(1, 8))
+    rows = []
+    for _ in range(n):
+        p = draw(st.none() | st.lists(st.integers(1, 16_384),
+                                      min_size=1, max_size=3))
+        d = draw(st.none() | st.tuples(st.integers(1, 256), ctx_st))
+        rows.append((p, d, draw(tp_st), draw(tp_st),
+                     draw(st.booleans()),
+                     draw(st.none() | st.floats(0.0, 1.0,
+                                                allow_nan=False))))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+
+
+@given(arch=arch_st, rows=_rows(seq_row_st))
+@settings(max_examples=60, deadline=None)
+def test_prefill_batch_matches_scalar(arch, rows):
+    _check_prefill(arch, *rows)
+
+
+@given(arch=arch_st, rows=_rows(st.tuples(st.integers(0, 4096),
+                                          st.integers(0, 16_384))))
+@settings(max_examples=60, deadline=None)
+def test_chunk_batch_matches_scalar(arch, rows):
+    pairs, tps = rows
+    _check_chunk(arch, [c for c, _ in pairs], [x for _, x in pairs], tps)
+
+
+@given(arch=arch_st, rows=_rows(st.tuples(st.integers(0, 256), ctx_st)))
+@settings(max_examples=60, deadline=None)
+def test_decode_batch_matches_scalar(arch, rows):
+    pairs, tps = rows
+    _check_decode(arch, [b for b, _ in pairs], [c for _, c in pairs], tps)
+
+
+@given(arch=arch_st, rows=_rows(st.tuples(st.integers(0, 256), ctx_st)),
+       f=st.floats(0.0, 1.0, allow_nan=False),
+       mem=st.sampled_from([0.0, 0.02, 0.035]),
+       bw=st.floats(0.1, 1.0, allow_nan=False))
+@settings(max_examples=60, deadline=None)
+def test_phase_time_matches_scalar(arch, rows, f, mem, bw):
+    pairs, tps = rows
+    _check_phase_time(arch, [b for b, _ in pairs],
+                      [c for _, c in pairs], tps, f, mem, bw)
+
+
+@given(arch=arch_st, rows=_forecast_rows())
+@settings(max_examples=60, deadline=None)
+def test_forecast_matches_scalar(arch, rows):
+    _check_forecast(arch, rows)
+
+
+@given(arch=arch_st, rows=_rows(seq_row_st))
+@settings(max_examples=40, deadline=None)
+def test_pack_costs_roundtrip(arch, rows):
+    _check_pack_roundtrip(arch, *rows)

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.config import SLOConfig, ServeConfig, get_config
-from repro.core import make_engine
+from repro.core import drive, make_engine
 from repro.core.engines import LoadSnapshot
 from repro.core.request import Request
 from repro.serving import (TRACES, Cluster, ScalePolicy, fleet_summarize,
@@ -88,7 +88,8 @@ def test_single_replica_cluster_matches_bare_engine_exactly():
     reqs = _trace()
     for mode in ("rapid", "hybrid", "disagg"):
         eng = make_engine(mode, cfg, _serve(mode))
-        recs_bare, span_bare = eng.run([copy.deepcopy(r) for r in reqs])
+        recs_bare, span_bare = drive(eng,
+                                     [copy.deepcopy(r) for r in reqs])
         cluster = Cluster(cfg, _serve(mode), [mode], router="round_robin")
         recs_cl, span_cl = cluster.run([copy.deepcopy(r) for r in reqs])
         assert recs_cl == recs_bare, f"{mode}: cluster != bare engine"

@@ -1,0 +1,72 @@
+"""Batched fleet pricing == scalar per-replica pricing, decision for
+decision.
+
+``Cluster(batch_pricing=True)`` routes slo_aware scores, the projection
+autoscaler's rate/backlog forecasts, and rebalance cost/benefit through
+``perfmodel.batch`` in one fleet-wide call per tick; ``False`` is the
+scalar reference walk.  The batch layer's bit-identity contract means
+the two must produce the *same virtual history* — same routing, same
+migrations, same scale events, same spans — not merely similar
+aggregate metrics.  This is the fast tier-1 pin of that end-to-end
+guarantee (the fleet benchmark asserts it again at 128 replicas).
+"""
+import random
+
+from repro.config import ServeConfig, get_config
+from repro.core.request import Request
+from repro.serving.cluster import (ProjectionPolicy, RebalancePolicy,
+                                   run_fleet)
+
+
+def _trace(n, seed=3):
+    """Loaded mixed trace: sessions, long-document tail, enough pressure
+    that projections scale the fleet and the rebalancer migrates."""
+    rng = random.Random(seed)
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += rng.expovariate(150.0)
+        pl = rng.randint(2000, 8000) if rng.random() < 0.25 \
+            else rng.randint(64, 900)
+        reqs.append(Request(rid=i, arrival=t, prompt_len=pl,
+                            max_new_tokens=rng.randint(32, 256),
+                            session_id=f"s{i % 37}" if i % 5 == 0
+                            else None))
+    return reqs
+
+
+def _run(reqs, batch_pricing):
+    cfg = get_config("qwen2.5-14b")
+    serve = ServeConfig(chips=8)
+    summary, cl = run_fleet(
+        cfg, serve, ["rapid", "hybrid", "disagg"], "slo_aware", reqs,
+        scale=ProjectionPolicy(min_replicas=3, max_replicas=6,
+                               check_interval_s=0.5, horizon_s=2.0),
+        rebalance=RebalancePolicy(check_interval_s=0.5, kv_high=0.3,
+                                  kv_low=0.25),
+        session_affinity=True, batch_pricing=batch_pricing)
+    return summary, cl
+
+
+def test_batched_and_scalar_pricing_same_history():
+    reqs = _trace(400)
+    summary_b, cl_b = _run(reqs, batch_pricing=True)
+    summary_s, cl_s = _run(reqs, batch_pricing=False)
+
+    # the trace must actually exercise the priced decision points,
+    # otherwise this test proves nothing
+    assert cl_b._migrations, "trace never triggered the rebalancer"
+    assert cl_b._scale_events, "trace never triggered the autoscaler"
+
+    assert summary_b == summary_s
+    assert cl_b._migrations == cl_s._migrations
+    assert cl_b._scale_events == cl_s._scale_events
+    assert cl_b.per_replica_counts() == cl_s.per_replica_counts()
+    assert cl_b.loop.now == cl_s.loop.now
+
+
+def test_batch_pricing_flag_reaches_router():
+    reqs = _trace(5)
+    _, cl_b = _run(reqs, batch_pricing=True)
+    _, cl_s = _run(reqs, batch_pricing=False)
+    assert cl_b.router.batch_pricing is True
+    assert cl_s.router.batch_pricing is False

@@ -17,7 +17,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.config import SLOConfig, ServeConfig, get_config
-from repro.core import RapidEngine, build_decode_profile, make_engine
+from repro.core import (RapidEngine, build_decode_profile, drive,
+                        make_engine)
 from repro.kvcache import BlockAllocator, KVCacheManager, OutOfBlocks
 from repro.perfmodel.hw import TPU_V5E
 from repro.serving import TRACES, generate_trace, summarize
@@ -30,7 +31,7 @@ SERVE = dict(chips=32, slo=SLOConfig(itl_ms=100.0),
 def _run(mode, reqs, **over):
     serve = ServeConfig(mode=mode, **{**SERVE, **over})
     eng = make_engine(mode, CFG, serve)
-    recs, span = eng.run([copy.deepcopy(r) for r in reqs])
+    recs, span = drive(eng, [copy.deepcopy(r) for r in reqs])
     return eng, recs, span
 
 
@@ -105,7 +106,7 @@ def test_rapid_token_times_monotone():
     reqs = generate_trace(TRACES["lmsys"], qps=6.0, duration_s=20, seed=2)
     serve = ServeConfig(mode="rapid", **SERVE)
     eng = RapidEngine(CFG, serve)
-    eng.run([copy.deepcopy(r) for r in reqs])
+    drive(eng, [copy.deepcopy(r) for r in reqs])
     for r in eng.finished:
         ts = r.token_times
         assert all(b >= a for a, b in zip(ts, ts[1:]))
@@ -117,7 +118,7 @@ def test_rapid_blocks_before_prefill():
     reqs = generate_trace(TRACES["lmsys"], qps=6.0, duration_s=20, seed=3)
     serve = ServeConfig(mode="rapid", **SERVE)
     eng = RapidEngine(CFG, serve)
-    eng.run([copy.deepcopy(r) for r in reqs])
+    drive(eng, [copy.deepcopy(r) for r in reqs])
     for r in eng.finished:
         assert r.t_blocks is not None
         assert r.t_prefill_start is not None
@@ -139,7 +140,7 @@ def test_rapid_overlaps_pd():
         orig(batch)
 
     eng._decode_done = spy
-    eng.run([copy.deepcopy(r) for r in reqs])
+    drive(eng, [copy.deepcopy(r) for r in reqs])
     assert any(overlaps), "no P/D overlap observed"
 
 
@@ -175,7 +176,7 @@ def test_preemption_recovers():
     eng = RapidEngine(CFG, serve)
     # shrink the pool to force pressure
     eng.kv = type(eng.kv)(num_blocks=4096, page_size=16)
-    eng.run([copy.deepcopy(r) for r in reqs])
+    drive(eng, [copy.deepcopy(r) for r in reqs])
     assert all(r.done for r in eng.finished)
     assert len(eng.finished) == len(reqs)
 

@@ -34,7 +34,13 @@ def _req(rid, prompt, out=4, arrival=0.0):
 
 
 def _check(eng):
-    assert eng.load_snapshot() == eng.load_snapshot_recompute()
+    snap = eng.load_snapshot()
+    assert snap == eng.load_snapshot_recompute()
+    # the router fast path reads the same counters without building the
+    # snapshot; it must agree field-for-field
+    assert eng.router_load() == (snap.queued_prefill_tokens,
+                                 snap.running_decode,
+                                 snap.decode_ctx_tokens)
 
 
 # ---------------------------------------------------------------------------

@@ -14,7 +14,7 @@ import pathlib
 import pytest
 
 from repro.config import SLOConfig, ServeConfig, get_config
-from repro.core import make_engine
+from repro.core import drive, make_engine
 from repro.kvcache import KVCacheManager
 from repro.serving import TRACES, generate_trace
 
@@ -34,8 +34,7 @@ def _standard_serve(mode):
 
 
 def _assert_parity(key, eng, reqs):
-    with pytest.deprecated_call():     # run() is the deprecation shim
-        recs, span = eng.run([copy.deepcopy(r) for r in reqs])
+    recs, span = drive(eng, [copy.deepcopy(r) for r in reqs])
     golden = GOLDEN[key]
     assert span == golden["span"], f"{key}: span diverged"
     assert len(recs) == len(golden["records"])

@@ -1,0 +1,136 @@
+"""Executor.price_batch == sequential execute, bit-for-bit.
+
+price_batch reroutes pricing through perfmodel.batch with vectorized
+key dedup instead of the scalar entry points' lru_cache.  Both paths
+share the _assemble control flow, and the batch layer is bit-identical
+to the scalar formulas, so every LaunchOutcome must compare equal —
+costs AND durations — not merely close.
+"""
+import dataclasses
+
+from repro.config import ServeConfig, get_config
+from repro.core.executor import PerfModelExecutor
+from repro.core.queues import IndexedQueue
+from repro.core.request import Request
+from repro.core.scheduler import (DecodeLaunch, HybridLaunch, LaneState,
+                                  PrefillLaunch, SchedView, StepPlan)
+from repro.perfmodel import costs as C
+
+
+def _req(rid, prompt_len, cached=0, done=0, generated=0):
+    r = Request(rid=rid, arrival=0.0, prompt_len=prompt_len,
+                max_new_tokens=64, cached_prefix_len=cached)
+    r.prefill_tokens_done = done
+    r.tokens_generated = generated
+    return r
+
+
+def _view(serve, running=(), lanes=None):
+    return SchedView(now=0.0, serve=serve, queues={},
+                     running=IndexedQueue(items=list(running)),
+                     kv=None, kv_p=None, lanes=lanes or {}, wake=None)
+
+
+def _cases():
+    """(executor, plan, view) triples covering every _assemble branch,
+    with deliberate operating-point duplicates to exercise the dedup."""
+    cfg = get_config("llama3-70b")
+    serve = ServeConfig(chips=8)
+    coloc = PerfModelExecutor(cfg, colocated=True)
+    split = PerfModelExecutor(cfg, colocated=False,
+                              lane_chips={"prefill": 6, "decode": 2})
+
+    running = [_req(100 + i, 512, generated=16 + i) for i in range(4)]
+    dlane = LaneState(busy=True,
+                      cost=C.decode_cost(cfg, 4, 2100.0, 8), f_decode=0.4)
+    plane = LaneState(busy=True, cost=C.prefill_cost(cfg, [768], 8))
+
+    cases = []
+    for ex in (coloc, split):
+        # prefill only, idle lanes
+        cases.append((ex, StepPlan(prefill=PrefillLaunch(
+            batch=[_req(1, 512), _req(2, 2048)], queue="prefill")),
+            _view(serve)))
+        # same prefill point again (dedup) but against a busy decode lane
+        cases.append((ex, StepPlan(prefill=PrefillLaunch(
+            batch=[_req(3, 512), _req(4, 2048)], queue="prefill")),
+            _view(serve, lanes={"decode": dlane})))
+        # session-prefix prefill: priced as per-request chunk costs
+        cases.append((ex, StepPlan(prefill=PrefillLaunch(
+            batch=[_req(5, 1024, cached=256), _req(6, 640)],
+            queue="prefill")), _view(serve)))
+        # prefill + decode in one plan: decode couples to the new prefill
+        cases.append((ex, StepPlan(
+            prefill=PrefillLaunch(batch=[_req(7, 900)], queue="prefill"),
+            decode=DecodeLaunch(joins=[_req(8, 300, generated=1)],
+                                f_decode=0.3)),
+            _view(serve, running=running)))
+        # decode only, prefill lane mid-flight
+        cases.append((ex, StepPlan(
+            decode=DecodeLaunch(joins=[], f_decode=None)),
+            _view(serve, running=running, lanes={"prefill": plane})))
+        # decode with empty batch -> ZERO_COST path
+        cases.append((ex, StepPlan(decode=DecodeLaunch(joins=[])),
+                      _view(serve)))
+        # hybrid lockstep: chunks + running decodes in one fused step
+        cases.append((ex, StepPlan(hybrid=HybridLaunch(
+            chunks=[(_req(9, 4096, done=1024), 512),
+                    (_req(10, 2048, cached=128), 256)])),
+            _view(serve, running=running)))
+        # hybrid chunks with no running decodes
+        cases.append((ex, StepPlan(hybrid=HybridLaunch(
+            chunks=[(_req(11, 4096, done=1024), 512)])), _view(serve)))
+        # empty plan
+        cases.append((ex, StepPlan(), _view(serve)))
+    return cases
+
+
+def test_price_batch_matches_execute():
+    by_ex = {}
+    for ex, plan, view in _cases():
+        by_ex.setdefault(id(ex), (ex, [], []))
+        by_ex[id(ex)][1].append(plan)
+        by_ex[id(ex)][2].append(view)
+    checked = 0
+    for ex, plans, views in by_ex.values():
+        want = [ex.execute(p, v) for p, v in zip(plans, views)]
+        got = ex.price_batch(plans, views)
+        assert len(got) == len(want)
+        for g, w in zip(got, want):
+            assert g == w          # frozen dataclasses: exact equality
+            checked += 1
+    assert checked == 18
+
+
+def test_price_batch_zero_cost_identity():
+    """Degenerate launches resolve to the ZERO_COST singleton, exactly
+    like the scalar path."""
+    cfg = get_config("llama3-70b")
+    ex = PerfModelExecutor(cfg)
+    serve = ServeConfig(chips=8)
+    plan = StepPlan(decode=DecodeLaunch(joins=[]))
+    out, = ex.price_batch([plan], [_view(serve)])
+    assert out.decode.cost is C.ZERO_COST
+
+
+def test_default_price_batch_is_sequential_execute():
+    """The Executor base class default must fall back to execute()."""
+    calls = []
+
+    class Probe(PerfModelExecutor):
+        def execute(self, plan, view):
+            calls.append(plan)
+            return super().execute(plan, view)
+
+    # bypass PerfModelExecutor's override to test the protocol default
+    cfg = get_config("llama3-70b")
+    ex = Probe(cfg)
+    serve = ServeConfig(chips=8)
+    plans = [StepPlan(), StepPlan(decode=DecodeLaunch(joins=[]))]
+    views = [_view(serve), _view(serve)]
+    from repro.core.executor import Executor
+    got = Executor.price_batch(ex, plans, views)
+    assert calls == plans
+    assert [dataclasses.asdict(g) for g in got] == \
+        [dataclasses.asdict(o) for o in (ex.execute(p, v)
+                                         for p, v in zip(plans, views))]

@@ -9,7 +9,7 @@ import copy
 import pytest
 
 from repro.config import SLOConfig, ServeConfig, get_config
-from repro.core import make_engine
+from repro.core import drive, make_engine
 from repro.core.request import Request
 from repro.kvcache import BlockAllocator, KVCacheManager, kv_pages_for
 from repro.perfmodel import forecast_phase_times, prefill_cost
@@ -243,9 +243,8 @@ def test_projection_disabled_cluster_matches_bare_engine():
                           seed=0)
     for mode in ("rapid", "disagg"):
         eng = make_engine(mode, cfg, _serve(mode))
-        with pytest.deprecated_call():
-            recs_bare, span_bare = eng.run([copy.deepcopy(r)
-                                            for r in reqs])
+        recs_bare, span_bare = drive(eng, [copy.deepcopy(r)
+                                           for r in reqs])
         pol = ProjectionPolicy(min_replicas=1, max_replicas=1,
                                pool_scaling=False)
         cluster = Cluster(cfg, _serve(mode), [mode],
