@@ -2,17 +2,21 @@
 #
 #   make dev-deps   install test-only dependencies (hypothesis etc.)
 #   make test       tier-1 suite (what the driver runs) + junit report
-#   make smoke      tier-1 + gateway churn suite (crash/drain/slow-
-#                   consumer under the simulated clock, hard wall-clock
-#                   timeout via coreutils since pytest-timeout is not a
-#                   dep) + quick benchmark smokes (single-engine
-#                   fig8/9/10/11, cluster fig12, admission/preemption
-#                   fig13, projection-driven scaling fig14, multi-tenant
-#                   workload classes fig15, gateway churn fault-
-#                   injection fig16, hot-path simulator-throughput
-#                   bench, and the 128-replica fleet-vectorized
-#                   pricing gate: batched vs scalar cluster ticks,
-#                   identical simulation outputs asserted)
+#   make smoke      tier-1 + gateway churn/fault suite (crash/drain/
+#                   slow-consumer/flap/wire-loss/checkpoint-resume under
+#                   the simulated clock, hard wall-clock timeout via
+#                   coreutils since pytest-timeout is not a dep; the
+#                   hypothesis chaos properties ride in tier-1 when
+#                   dev-deps are installed) + quick benchmark smokes
+#                   (single-engine fig8/9/10/11, cluster fig12,
+#                   admission/preemption fig13, projection-driven
+#                   scaling fig14, multi-tenant workload classes fig15,
+#                   gateway churn fault-injection fig16, checkpoint-
+#                   resume vs re-prefill crash recovery fig17, hot-path
+#                   simulator-throughput bench, and the 128-replica
+#                   fleet-vectorized pricing gate: batched vs scalar
+#                   cluster ticks, identical simulation outputs
+#                   asserted)
 #   make bench-hotpath  full hot-path macro-benchmark; writes
 #                   BENCH_hotpath.json (simulated req/wall-s, per-event
 #                   cost, speedup vs the pinned pre-PR-5 baseline)
@@ -34,10 +38,12 @@ test:
 	$(PY) -m pytest -x -q --junitxml=pytest-report.xml
 
 smoke: test
-	# churn suite re-run under a hard timeout: a liveness regression in
-	# the gateway's tick re-arming would otherwise hang CI forever
+	# churn + fault-injection suites re-run under a hard timeout: a
+	# liveness regression in the gateway's tick re-arming (or a fault
+	# schedule that leaks a request) would otherwise hang CI forever
 	timeout 300 $(PY) -m pytest -x -q tests/test_gateway.py \
-		tests/test_gateway_churn.py tests/test_event_wire.py
+		tests/test_gateway_churn.py tests/test_faults.py \
+		tests/test_event_wire.py
 	$(PY) -m benchmarks.fig8_throughput --smoke
 	$(PY) -m benchmarks.fig9_goodput --smoke
 	$(PY) -m benchmarks.fig10_itl_goodput --smoke
@@ -47,6 +53,7 @@ smoke: test
 	$(PY) -m benchmarks.fig14_projection_scaling --smoke
 	$(PY) -m benchmarks.fig15_workload_classes --smoke
 	$(PY) -m benchmarks.fig16_gateway_churn --smoke
+	$(PY) -m benchmarks.fig17_recovery --smoke --json BENCH_fig17.json
 	$(PY) -m benchmarks.bench_hotpath --smoke
 	$(PY) -m benchmarks.bench_hotpath --fleet --smoke
 

@@ -9,7 +9,8 @@ from repro.core.engines import (  # noqa: F401
     drive, kv_pool_blocks, make_engine,
 )
 from repro.core.events import (  # noqa: F401
-    EventStream, FinishedEvent, PhaseEvent, RejectedEvent, TokenEvent,
+    CancelledEvent, EventStream, FinishedEvent, PhaseEvent, RejectedEvent,
+    TokenEvent,
 )
 from repro.core.executor import (  # noqa: F401
     Executor, KernelExecutor, PerfModelExecutor, StepOutputs,

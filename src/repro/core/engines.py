@@ -247,9 +247,13 @@ class Engine:
             # without their prefix, or the cache may have evicted it);
             # transfer-route (disagg) engines never park and sessionless
             # requests have no cache entry, so the clamp zeroes the
-            # field there — prefill never skips tokens without KV
-            r.cached_prefix_len = self.kv.session_hit_tokens(
-                r.session_id, r.prompt_len, r.cached_prefix_len)
+            # field there — prefill never skips tokens without KV.
+            # A gateway-staged checkpoint restore (crash failover) is the
+            # second KV source that can make prefix compute skippable.
+            r.cached_prefix_len = max(
+                self.kv.session_hit_tokens(
+                    r.session_id, r.prompt_len, r.cached_prefix_len),
+                self.kv.restore_hit_tokens(r.rid, r.prompt_len))
             try:
                 r.blocks = self.kv.allocate_prompt(
                     r.rid, r.prompt_len, session_id=r.session_id,

@@ -18,6 +18,8 @@ through the system; callers *subscribe* instead of scraping
 Every request ends with exactly one ``FinishedEvent`` or
 ``RejectedEvent``; its ``TokenEvent`` times are monotone and count
 exactly ``max_new_tokens`` on success (asserted in tests/test_events.py).
+The gateway layer adds a third terminal, ``CancelledEvent``, for client
+cancellation/disconnect — engines themselves never emit it.
 
 The stream is also the serving gateway's **wire format**: each event
 maps to one JSON line (``event_to_json`` / ``event_from_json``) with a
@@ -102,9 +104,27 @@ class RejectedEvent:
     retries: int = 0
 
 
-Event = Union[TokenEvent, PhaseEvent, FinishedEvent, RejectedEvent]
+@dataclasses.dataclass(frozen=True, slots=True)
+class CancelledEvent:
+    """Terminal client-side cancellation (explicit ``cancel(rid)`` or a
+    mid-stream disconnect).  ``output_len`` is the number of tokens the
+    client actually received before cancelling; ``reason`` is
+    ``client_cancel`` or ``disconnect``."""
+    rid: int
+    t: float
+    arrival: float
+    prompt_len: int
+    output_len: int = 0
+    preemptions: int = 0
+    slo_class: str = "interactive"
+    retries: int = 0
+    reason: str = "client_cancel"
 
-TERMINAL_EVENTS = (FinishedEvent, RejectedEvent)
+
+Event = Union[TokenEvent, PhaseEvent, FinishedEvent, RejectedEvent,
+              CancelledEvent]
+
+TERMINAL_EVENTS = (FinishedEvent, RejectedEvent, CancelledEvent)
 
 
 # ---------------------------------------------------------------------------
@@ -116,6 +136,7 @@ WIRE_TYPES: Dict[str, type] = {
     "phase": PhaseEvent,
     "finished": FinishedEvent,
     "rejected": RejectedEvent,
+    "cancelled": CancelledEvent,
 }
 _WIRE_TAGS: Dict[type, str] = {cls: tag for tag, cls in WIRE_TYPES.items()}
 

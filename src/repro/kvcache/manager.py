@@ -40,6 +40,72 @@ class OutOfBlocks(Exception):
     engine-level preemption or admission back-pressure)."""
 
 
+@dataclasses.dataclass(frozen=True, slots=True)
+class KVCheckpoint:
+    """A durable snapshot of a running request's KV cache, parked off the
+    serving replica (gateway / peer worker).  ``generated`` is the number
+    of output tokens covered; ``kv_tokens`` the context tokens whose KV
+    the snapshot holds (= original prompt + generated - 1: the first
+    output token comes from prefill, each decode step appends one KV
+    entry before emitting)."""
+    rid: int
+    generated: int
+    kv_tokens: int
+    t: float                 # commit time (copy finished)
+
+
+class CheckpointStore:
+    """Gateway-side parking lot for request KV checkpoints.
+
+    Newest-wins per request; a ``budget_blocks`` cap (0 = unbounded)
+    models the host/peer memory actually reserved for recovery — when a
+    new snapshot would exceed it, *oldest-commit-first* entries of other
+    requests are evicted (their requests silently fall back to re-prefill
+    failover), and a snapshot too large for the whole budget is refused.
+    """
+
+    def __init__(self, page_size: int, budget_blocks: int = 0):
+        self.page_size = page_size
+        self.budget_blocks = budget_blocks
+        self._by_rid: "collections.OrderedDict[int, KVCheckpoint]" = \
+            collections.OrderedDict()
+        self.taken = 0           # snapshots committed
+        self.evicted = 0         # snapshots dropped for budget
+        self.refused = 0         # snapshots larger than the whole budget
+
+    def _pages(self, ckpt: KVCheckpoint) -> int:
+        return kv_pages_for(ckpt.kv_tokens, self.page_size)
+
+    @property
+    def blocks(self) -> int:
+        return sum(self._pages(c) for c in self._by_rid.values())
+
+    def __len__(self) -> int:
+        return len(self._by_rid)
+
+    def put(self, ckpt: KVCheckpoint) -> bool:
+        """Commit a snapshot (replaces any older one for the same rid).
+        Returns False when the snapshot alone exceeds the budget."""
+        need = self._pages(ckpt)
+        if self.budget_blocks and need > self.budget_blocks:
+            self.refused += 1
+            return False
+        self._by_rid.pop(ckpt.rid, None)
+        if self.budget_blocks:
+            while self._by_rid and self.blocks + need > self.budget_blocks:
+                self._by_rid.popitem(last=False)     # oldest commit first
+                self.evicted += 1
+        self._by_rid[ckpt.rid] = ckpt
+        self.taken += 1
+        return True
+
+    def get(self, rid: int) -> Optional[KVCheckpoint]:
+        return self._by_rid.get(rid)
+
+    def drop(self, rid: int) -> None:
+        self._by_rid.pop(rid, None)
+
+
 def kv_pages_for(num_tokens: int, page_size: int) -> int:
     return -(-num_tokens // page_size)
 
@@ -112,6 +178,10 @@ class KVCacheManager:
         self._sessions: "collections.OrderedDict[str, _SeqAlloc]" = \
             collections.OrderedDict()
         self._session_block_count = 0
+        # checkpoint restores staged by the gateway: rid -> context tokens
+        # whose KV is being copied in from a parked snapshot (consumed at
+        # allocate_prompt; compute for those tokens is skipped)
+        self._staged_restores: Dict[int, int] = {}
 
     # -- session prefix cache ------------------------------------------------
     @property
@@ -182,6 +252,28 @@ class KVCacheManager:
             self.allocator.free(evicted.blocks)
         return self.allocator.alloc(n)
 
+    # -- checkpoint restore staging (gateway failover) ----------------------
+    def stage_restore(self, rid: int, kv_tokens: int) -> None:
+        """Announce that ``kv_tokens`` context tokens of KV for ``rid``
+        are being restored from a parked checkpoint: the next
+        ``allocate_prompt(rid, ...)`` still claims the full page count
+        (restored KV occupies real pages) but the engine skips prefill
+        compute for the restored prefix (``restore_hit_tokens``)."""
+        if kv_tokens > 0:
+            self._staged_restores[rid] = kv_tokens
+
+    def restore_hit_tokens(self, rid: int, prompt_len: int) -> int:
+        """Prefix tokens a staged restore lets ``rid`` skip — same
+        ``prompt_len - 1`` bound as the session cache (one token must be
+        prefilled so the step emits the first output token)."""
+        staged = self._staged_restores.get(rid, 0)
+        if staged <= 0:
+            return 0
+        return max(0, min(staged, prompt_len - 1))
+
+    def clear_restore(self, rid: int) -> None:
+        self._staged_restores.pop(rid, None)
+
     # -- Fig 4 step 2: decode allocates the prompt's blocks ----------------
     def pages_needed(self, prompt_len: int,
                      session_id: Optional[str] = None,
@@ -220,6 +312,7 @@ class KVCacheManager:
                 self.allocator.free(adopted)
             raise
         self._seqs[rid] = _SeqAlloc(blocks, prompt_len, self.page_size)
+        self._staged_restores.pop(rid, None)     # restore consumed
         return blocks
 
     def can_allocate(self, prompt_len: int) -> bool:

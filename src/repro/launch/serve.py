@@ -185,13 +185,24 @@ def main(argv=None):
                    help="'http' starts the online gateway (streaming "
                         "NDJSON API, heartbeats, crash failover) instead "
                         "of replaying a trace offline")
+    p.add_argument("--checkpoint-interval", type=int, default=0,
+                   help="gateway KV snapshot period in generated tokens "
+                        "(0 disables; crash failover then re-prefills "
+                        "from scratch)")
+    p.add_argument("--max-retries", type=int, default=2,
+                   help="failover re-dispatches per request before the "
+                        "terminal worker_lost rejection")
+    p.add_argument("--retry-backoff", type=float, default=0.05,
+                   help="base seconds of the exponential failover "
+                        "backoff (doubles per retry, capped at 2 s)")
     p.add_argument("--host", default="127.0.0.1")
     p.add_argument("--port", type=int, default=8080)
     p.add_argument("--json", default=None)
     args = p.parse_args(argv)
 
     if args.serve == "http":
-        from repro.serving import Gateway, RealTimeClock, run_http
+        from repro.serving import (Gateway, GatewayPolicy, RealTimeClock,
+                                   RetryPolicy, run_http)
         if args.mode == "all" and not args.mix:
             p.error("--serve http needs a concrete fleet; use --mode or "
                     "--mix, not --mode all")
@@ -207,7 +218,13 @@ def main(argv=None):
             class_aware=args.class_aware_admission)
         gw = Gateway(cfg, serve, modes=modes, router=args.router,
                      clock=RealTimeClock(), admission=admission,
-                     session_affinity=args.session_affinity)
+                     session_affinity=args.session_affinity,
+                     policy=GatewayPolicy(
+                         checkpoint_interval=args.checkpoint_interval,
+                         max_retries=args.max_retries),
+                     retry=RetryPolicy(
+                         max_retries=args.max_retries,
+                         backoff_base_s=args.retry_backoff))
         run_http(gw, host=args.host, port=args.port)
         return 0
 

@@ -6,6 +6,9 @@ from repro.serving.cluster import (  # noqa: F401
     ROUTERS, BucketedRouter, Cluster, ProjectionPolicy, RebalancePolicy,
     Replica, ReplicaSpec, ScalePolicy, make_router, parse_mix, run_fleet,
 )
+from repro.serving.faults import (  # noqa: F401
+    Fault, FaultInjector, FaultPlan, RetryPolicy, line_corruptor,
+)
 from repro.serving.gateway import (  # noqa: F401
     Gateway, GatewayPolicy, RequestChannel, WorkerRegistry,
 )

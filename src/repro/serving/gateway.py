@@ -44,12 +44,16 @@ import collections
 import dataclasses
 from typing import Callable, Dict, List, Optional, Set
 
-from repro.core.events import (EventStream, RejectedEvent, TERMINAL_EVENTS,
+from repro.core.events import (CancelledEvent, EventStream, FinishedEvent,
+                               PhaseEvent, RejectedEvent, TERMINAL_EVENTS,
                                TokenEvent)
-from repro.core.request import Request
+from repro.core.request import Request, State
+from repro.kvcache import CheckpointStore, KVCheckpoint
+from repro.perfmodel.costs import kv_migration_seconds
 from repro.perfmodel.hw import TPU_V5E, HardwareSpec
 from repro.serving.admission import AdmissionController, AdmissionPolicy
 from repro.serving.cluster import make_router
+from repro.serving.faults import RetryPolicy
 from repro.serving.metrics import (RequestRecord, StreamMetrics,
                                    fleet_summarize)
 from repro.serving.sim import EventLoop
@@ -65,7 +69,16 @@ class GatewayPolicy:
     spurious failover.  ``stream_buffer`` bounds each request's channel;
     a consumer that falls that far behind gets its request evicted from
     the engine (backpressure) until it drains below
-    ``stream_buffer * resume_frac``."""
+    ``stream_buffer * resume_frac``.
+
+    ``checkpoint_interval`` > 0 enables crash-consistent KV recovery:
+    every that-many delivered tokens the gateway snapshots the request's
+    KV off the worker (the copy is costed with the perfmodel's
+    ``kv_migration_seconds`` at ``checkpoint_gbps``, defaulting to the
+    serve config's ``kv_transfer_gbps``), and crash failover resumes
+    from the newest snapshot instead of re-prefilling — re-computing at
+    most ``checkpoint_interval`` tokens.  ``checkpoint_store_blocks``
+    caps the parked-KV budget (0 = unbounded)."""
     heartbeat_s: float = 0.5
     heartbeat_timeout_s: float = 1.75
     health_check_s: float = 0.5
@@ -74,6 +87,9 @@ class GatewayPolicy:
     resume_frac: float = 0.5
     max_retries: int = 2
     evict_retry_s: float = 0.05     # re-try eviction pinned mid-step
+    checkpoint_interval: int = 0    # tokens between KV snapshots (0=off)
+    checkpoint_gbps: float = 0.0    # snapshot link speed (0 => serve cfg)
+    checkpoint_store_blocks: int = 0    # parked-KV budget (0 = unbounded)
 
 
 class RequestChannel:
@@ -110,6 +126,9 @@ class RequestChannel:
         self.next_index = 0          # next un-seen token index
         self.closed = False          # terminal event passed through
         self.paused = False
+        self.stalled = False         # fault injection: consumer wedged
+        self.dup_tokens = 0          # replayed indices suppressed (failover)
+        self.gap_tokens = 0          # ahead-of-stream indices (wire loss)
 
     def offer(self, ev) -> bool:
         """Deliver ``ev``; False when it was a duplicate (replayed token
@@ -118,11 +137,18 @@ class RequestChannel:
             return False
         if isinstance(ev, TokenEvent):
             if ev.index != self.next_index:
-                return False         # replayed (failover) or out of order
+                # replayed (failover) or out of order; the split counter
+                # is the recovery cost metric: dup_tokens is exactly the
+                # tokens the failover re-computed for this request
+                if ev.index < self.next_index:
+                    self.dup_tokens += 1
+                else:
+                    self.gap_tokens += 1
+                return False
             self.next_index += 1
         if isinstance(ev, TERMINAL_EVENTS):
             self.closed = True
-        if self._consumer is not None:
+        if self._consumer is not None and not self.stalled:
             self._consumer(ev)
             return True
         self.buf.append(ev)
@@ -146,6 +172,21 @@ class RequestChannel:
         self.buf.clear()
         self._maybe_resume()
         return out
+
+    def stall(self) -> None:
+        """Fault injection: wedge the consumer — even inline consumers
+        start buffering, so the backpressure watermark (pause/evict)
+        engages exactly as for a genuinely slow reader."""
+        self.stalled = True
+
+    def unstall(self) -> None:
+        """Un-wedge: flush everything buffered during the stall to the
+        inline consumer (pull-mode consumers drain themselves)."""
+        self.stalled = False
+        if self._consumer is not None:
+            while self.buf:
+                self._consumer(self.buf.popleft())
+        self._maybe_resume()
 
     def _maybe_resume(self) -> None:
         if self.paused and len(self.buf) <= self.resume_at:
@@ -183,6 +224,7 @@ class WorkerRegistry:
         self._on_death = on_death
         self._keep_alive = keep_alive
         self._tick_armed = False
+        self.fenced_beats = 0        # beats refused from dead/unknown wids
 
     def register(self, w: ReplicaWorker) -> None:
         self.workers[w.wid] = w
@@ -199,6 +241,15 @@ class WorkerRegistry:
             self.last_beat.pop(wid, None)
 
     def heartbeat(self, wid: int) -> None:
+        """Record a beat — unless the sender was already declared dead
+        (or never registered).  Fencing: a worker that went silent past
+        ``heartbeat_timeout_s`` had its requests failed over; letting a
+        late beat resurrect it would double-serve them.  A fenced worker
+        can only rejoin as a *fresh* worker via ``add_worker``."""
+        w = self.workers.get(wid)
+        if w is None or w.state in (WorkerState.DEAD, WorkerState.RETIRED):
+            self.fenced_beats += 1
+            return
         self.last_beat[wid] = self.clock.now
 
     def healthy(self) -> List[ReplicaWorker]:
@@ -253,6 +304,11 @@ class _RequestState:
     orig_prefix: int = 0         # trace's optimistic cached_prefix_len
     paused: bool = False         # consumer fell behind
     evicted: bool = False        # removed from its engine while paused
+    orig_prompt: int = 0         # original prompt_len (clones may extend)
+    orig_max_new: int = 0        # original max_new_tokens budget
+    token_base: int = 0          # absolute index of the clone's token 0
+    ckpt_inflight: bool = False  # a snapshot copy is on the wire
+    resume_ckpt: Optional[KVCheckpoint] = None   # stage at next dispatch
 
 
 class Gateway:
@@ -262,12 +318,15 @@ class Gateway:
                  hw: HardwareSpec = TPU_V5E, clock=None,
                  policy: Optional[GatewayPolicy] = None,
                  admission: Optional[AdmissionPolicy] = None,
-                 session_affinity: bool = True):
+                 session_affinity: bool = True,
+                 retry: Optional[RetryPolicy] = None):
         self.cfg = cfg
         self.serve = serve
         self.hw = hw
         self.clock = clock if clock is not None else EventLoop()
         self.policy = policy if policy is not None else GatewayPolicy()
+        self.retry = retry if retry is not None else \
+            RetryPolicy(max_retries=self.policy.max_retries)
         self.router = make_router(router, cfg, serve, hw)
         self.admission = AdmissionController(
             admission if admission is not None else AdmissionPolicy())
@@ -287,6 +346,12 @@ class Gateway:
         self._submitted = 0
         self._expected = 0           # serve_trace() arrivals not yet in
         self.migrations = 0
+        self.checkpoints = CheckpointStore(
+            serve.page_size, self.policy.checkpoint_store_blocks)
+        self.resumes = 0             # failovers restored from a snapshot
+        self.replayed_tokens = 0     # tokens re-computed across failovers
+        self.cancellations = 0
+        self._wire_taps: List[Callable] = []     # fault injection hooks
         self._t0: Optional[float] = None
         self._idle = False           # ticks disarmed; resume on submit
         for m in modes:
@@ -311,8 +376,12 @@ class Gateway:
     def kill_worker(self, wid: int) -> None:
         """Simulate an abrupt crash: the engine halts and heartbeats
         stop.  Failover happens when the health tick detects the
-        silence, ``heartbeat_timeout_s`` later — not instantly."""
-        self.registry.workers[wid].kill()
+        silence, ``heartbeat_timeout_s`` later — not instantly.
+        Killing an unknown or already-dead worker is a no-op (fault
+        plans may race a scripted crash against a real death)."""
+        w = self.registry.workers.get(wid)
+        if w is not None:
+            w.kill()
 
     def next_rid(self) -> int:
         self._next_rid += 1
@@ -337,7 +406,9 @@ class Gateway:
                             on_pause=self._channel_pause,
                             on_resume=self._channel_resume)
         st = _RequestState(request=r, channel=ch,
-                           orig_prefix=r.cached_prefix_len)
+                           orig_prefix=r.cached_prefix_len,
+                           orig_prompt=r.prompt_len,
+                           orig_max_new=r.max_new_tokens)
         self._live[r.rid] = st
         self._submitted += 1
         if self._idle:
@@ -392,14 +463,89 @@ class Gateway:
 
     # -- event fan-in -------------------------------------------------------
 
+    def add_wire_tap(self, fn: Callable) -> None:
+        """Fault-injection hook on the worker→gateway event wire:
+        ``fn(worker, event)`` returns the event (possibly mutated) to
+        pass it on, or None to drop the line."""
+        self._wire_taps.append(fn)
+
+    def remove_wire_tap(self, fn: Callable) -> None:
+        if fn in self._wire_taps:
+            self._wire_taps.remove(fn)
+
     def _on_worker_event(self, w: ReplicaWorker, ev) -> None:
         st = self._live.get(ev.rid)
         if st is None or st.worker is not w:
             return                   # stale worker / already terminal
+        for tap in list(self._wire_taps):
+            ev = tap(w, ev)
+            if ev is None:
+                return               # injected wire drop
+        if st.token_base:
+            ev = self._rebase(st, ev)
         if st.channel.offer(ev):     # False => deduped replay
             self.stream.emit(ev)
+            if isinstance(ev, TokenEvent):
+                self._maybe_checkpoint(st, ev)
         if isinstance(ev, TERMINAL_EVENTS):
             self._finish(st)
+
+    def _rebase(self, st: _RequestState, ev):
+        """Translate a resumed clone's events into the request's
+        absolute coordinates: the clone's token 0 is really token
+        ``token_base``, and its (extended) prompt is really the original
+        prompt plus the restored output prefix."""
+        base = st.token_base
+        if isinstance(ev, TokenEvent):
+            return dataclasses.replace(ev, index=ev.index + base)
+        if isinstance(ev, (FinishedEvent, RejectedEvent)):
+            return dataclasses.replace(ev, output_len=ev.output_len + base,
+                                       prompt_len=st.orig_prompt)
+        return ev
+
+    # -- KV checkpointing ---------------------------------------------------
+
+    def _ckpt_seconds(self, kv_tokens: int) -> float:
+        gbps = self.policy.checkpoint_gbps or self.serve.kv_transfer_gbps
+        return kv_migration_seconds(self.cfg, kv_tokens, gbps)
+
+    def _maybe_checkpoint(self, st: _RequestState, ev: TokenEvent) -> None:
+        """Kick off an async KV snapshot every ``checkpoint_interval``
+        delivered tokens.  The copy takes perfmodel transfer time; it
+        only commits if the source worker is still alive when it ends —
+        an in-flight copy dies with its worker (crash consistency)."""
+        interval = self.policy.checkpoint_interval
+        if interval <= 0 or st.ckpt_inflight:
+            return
+        g = ev.index + 1             # absolute tokens delivered so far
+        if g % interval != 0:
+            return
+        w = st.worker
+        if w is None or w.crashed:
+            return
+        rid = st.request.rid
+        kv_tokens = st.orig_prompt + g - 1   # prompt KV + decode appends
+        st.ckpt_inflight = True
+        self.clock.after(
+            self._ckpt_seconds(kv_tokens),
+            lambda: self._commit_checkpoint(rid, w, g, kv_tokens))
+
+    def _commit_checkpoint(self, rid: int, src: ReplicaWorker,
+                           g: int, kv_tokens: int) -> None:
+        st = self._live.get(rid)
+        if st is not None:
+            st.ckpt_inflight = False
+        if st is None or st.worker is not src:
+            return                   # finished / failed over mid-copy
+        if src.crashed or src.state in (WorkerState.DEAD,
+                                        WorkerState.RETIRED):
+            return                   # source died mid-copy: not durable
+        ok = self.checkpoints.put(KVCheckpoint(
+            rid=rid, generated=g, kv_tokens=kv_tokens, t=self.clock.now))
+        if ok:
+            ev = PhaseEvent(rid, self.clock.now, "checkpoint")
+            if st.channel.offer(ev):
+                self.stream.emit(ev)
 
     def _reject(self, st: _RequestState, reason: str) -> None:
         r = st.request
@@ -413,13 +559,23 @@ class Gateway:
         self._finish(st)
 
     def _finish(self, st: _RequestState) -> None:
-        self._live.pop(st.request.rid, None)
-        self._paused.discard(st.request.rid)
+        rid = st.request.rid
+        self._live.pop(rid, None)
+        self._paused.discard(rid)
+        self.replayed_tokens += st.channel.dup_tokens
+        self.checkpoints.drop(rid)       # parked KV freed immediately
+        st.resume_ckpt = None
+        if st.worker is not None:
+            st.worker.engine.kv.clear_restore(rid)
 
     # -- crash failover -----------------------------------------------------
 
     def _on_worker_death(self, w: ReplicaWorker) -> None:
-        """Re-home every request that was on ``w`` when it died."""
+        """Re-home every request that was on ``w`` when it died.  With a
+        parked checkpoint the clone *resumes* (restored KV, bounded
+        replay); otherwise it re-prefills from scratch.  Re-dispatch is
+        delayed by the retry policy's backoff plus the snapshot restore
+        transfer time."""
         for st in [s for s in self._live.values() if s.worker is w]:
             r = st.request
             if r in w.replica.assigned:
@@ -427,34 +583,129 @@ class Gateway:
             if st.evicted:
                 st.worker = None     # resume will route it fresh
                 continue
-            clone = self._clone_for_retry(st)
+            ckpt = self.checkpoints.get(r.rid)
+            clone = self._clone_for_retry(st, ckpt)
             st.request = clone
+            st.resume_ckpt = ckpt
+            st.token_base = ckpt.generated if ckpt is not None else 0
             healthy = [x for x in self.registry.healthy()
                        if x.wid != w.wid]
-            if clone.retries > self.policy.max_retries or not healthy:
+            if clone.retries > self.retry.max_retries or not healthy:
+                st.resume_ckpt = None
                 self._reject(st, "worker_lost")
                 continue
             if st.paused:
                 st.evicted = True    # hold until the consumer drains
                 st.worker = None
                 continue
-            self._dispatch(st, self._choose(clone, healthy))
+            st.worker = None
+            delay = self.retry.delay(clone.retries)
+            if ckpt is not None:
+                delay += self._ckpt_seconds(ckpt.kv_tokens)
+            rid = r.rid
+            self.clock.after(delay, lambda rid=rid: self._redispatch(rid))
 
-    def _clone_for_retry(self, st: _RequestState) -> Request:
-        """A fresh copy for re-submission: token/prefill progress resets
-        (the new worker re-prefills from scratch; a session-affine
-        target may shortcut via its parked prefix), identity and
-        accounting carry over.  The channel's index dedupe hides the
-        replayed tokens from the consumer."""
+    def _redispatch(self, rid: int) -> None:
+        """Backoff expired: place the failover clone on a healthy
+        worker (health may have changed while we waited)."""
+        st = self._live.get(rid)
+        if st is None or st.worker is not None or st.paused or st.evicted:
+            return
+        healthy = self.registry.healthy()
+        if not healthy:
+            self._reject(st, "worker_lost")
+            return
+        self._dispatch_fresh(st, self._choose(st.request, healthy))
+
+    def _dispatch_fresh(self, st: _RequestState, w: ReplicaWorker) -> None:
+        """Dispatch after a failover/eviction gap: stage the pending
+        checkpoint restore (if any) on the target's KV manager so its
+        admission clamp skips prefill compute for the restored context."""
+        ckpt, st.resume_ckpt = st.resume_ckpt, None
+        if ckpt is not None:
+            if getattr(w.engine.scheduler, "prefill_route", "join") \
+                    == "join":
+                w.engine.kv.stage_restore(st.request.rid, ckpt.kv_tokens)
+            # transfer-route (disagg) targets re-prefill the extended
+            # context instead: their prefill pool never holds restored
+            # KV (same rule as the session cache) — still strictly
+            # cheaper than re-decoding token by token
+            self.resumes += 1
+            ev = PhaseEvent(st.request.rid, self.clock.now, "resume")
+            if st.channel.offer(ev):
+                self.stream.emit(ev)
+        self._dispatch(st, w)
+
+    def _clone_for_retry(self, st: _RequestState,
+                         ckpt: Optional[KVCheckpoint] = None) -> Request:
+        """A fresh copy for re-submission.  Without a checkpoint,
+        token/prefill progress resets (the new worker re-prefills from
+        scratch; a session-affine target may shortcut via its parked
+        prefix).  With one, the restored context becomes the clone's
+        "prompt" (original prompt + ``generated`` output tokens — same
+        shape as preemption's recompute-on-resume) and the token budget
+        shrinks by what the snapshot already covers; the gateway rebases
+        the clone's token indices by ``token_base`` so the channel's
+        index dedupe bounds the visible replay to the tokens generated
+        after the snapshot.  Identity and accounting carry over."""
         r = st.request
-        c = Request(rid=r.rid, arrival=r.arrival, prompt_len=r.prompt_len,
-                    max_new_tokens=r.max_new_tokens, slo_class=r.slo_class,
-                    session_id=r.session_id,
-                    cached_prefix_len=st.orig_prefix)
+        if ckpt is None:
+            c = Request(rid=r.rid, arrival=r.arrival,
+                        prompt_len=st.orig_prompt,
+                        max_new_tokens=st.orig_max_new,
+                        slo_class=r.slo_class, session_id=r.session_id,
+                        cached_prefix_len=st.orig_prefix)
+        else:
+            c = Request(rid=r.rid, arrival=r.arrival,
+                        prompt_len=st.orig_prompt + ckpt.generated,
+                        max_new_tokens=max(
+                            st.orig_max_new - ckpt.generated, 1),
+                        slo_class=r.slo_class, session_id=r.session_id,
+                        cached_prefix_len=0)
         c.preemptions = r.preemptions
         c.truncated = r.truncated
         c.retries = r.retries + 1
         return c
+
+    # -- client cancellation ------------------------------------------------
+
+    def cancel(self, rid: int, reason: str = "client_cancel") -> bool:
+        """Explicit client cancel / disconnect: emit the terminal
+        ``CancelledEvent`` immediately, free the parked checkpoint, and
+        reap the engine slot — no waiting out the slow-consumer eviction
+        path.  Returns False when the request is not live (already
+        terminal or never submitted)."""
+        st = self._live.get(rid)
+        if st is None:
+            return False
+        r = st.request
+        w, evicted = st.worker, st.evicted
+        ev = CancelledEvent(rid=rid, t=self.clock.now, arrival=r.arrival,
+                            prompt_len=st.orig_prompt,
+                            output_len=st.channel.next_index,
+                            preemptions=r.preemptions,
+                            slo_class=r.slo_class, retries=r.retries,
+                            reason=reason)
+        st.channel.offer(ev)
+        self.stream.emit(ev)
+        self.cancellations += 1
+        self._finish(st)
+        if w is not None and not evicted:
+            self._reap(w, r)
+        return True
+
+    def _reap(self, w: ReplicaWorker, r: Request) -> None:
+        """Free a cancelled request's engine slot, retrying while it is
+        pinned inside an in-flight lane step.  Stops when the worker is
+        gone (its KV died with it) or the request reached a terminal
+        engine state on its own."""
+        if w.crashed or w.state in (WorkerState.DEAD, WorkerState.RETIRED):
+            return
+        if r.state in (State.FINISHED, State.REJECTED):
+            return
+        if not w.evict(r):
+            self.clock.after(self.policy.evict_retry_s,
+                             lambda: self._reap(w, r))
 
     # -- slow-consumer backpressure -----------------------------------------
 
@@ -478,6 +729,7 @@ class Gateway:
             return                   # drain/death paths own it now
         if w.evict(st.request):
             st.evicted = True
+            w.engine.kv.clear_restore(rid)   # unconsumed restore staging
         else:                        # pinned inside an in-flight step
             self.clock.after(self.policy.evict_retry_s,
                              lambda: self._do_pause(rid))
@@ -503,7 +755,7 @@ class Gateway:
                 self._reject(st, "worker_lost")
                 return
             w = self._choose(st.request, healthy)
-        self._dispatch(st, w)
+        self._dispatch_fresh(st, w)
 
     # -- drain / rolling upgrade --------------------------------------------
 
@@ -622,5 +874,10 @@ class Gateway:
                                   fleet_records=self.metrics.records,
                                   loop_stats=self.clock.stats)
         summary["fleet"]["migrations"] = self.migrations
+        summary["fleet"]["checkpoints"] = self.checkpoints.taken
+        summary["fleet"]["resumes"] = self.resumes
+        summary["fleet"]["replayed_tokens"] = self.replayed_tokens
+        summary["fleet"]["cancelled"] = self.cancellations
+        summary["fleet"]["fenced_beats"] = self.registry.fenced_beats
         summary["admission"] = dict(self.admission.stats)
         return summary

@@ -8,16 +8,28 @@ fastapi, and the protocol needs are tiny:
     "cached_prefix_len"?: int}``.  Streams the request's typed event
     stream as newline-delimited JSON (``application/x-ndjson``, one
     ``core.events`` event per line via ``event_to_json``) and closes
-    after the terminal ``finished`` / ``rejected`` line.
+    after the terminal ``finished`` / ``rejected`` / ``cancelled`` line.
+  * ``POST /v1/cancel``  — JSON body ``{"rid": int}``; cancels a live
+    request (terminal ``cancelled`` line on its stream, engine slot and
+    parked checkpoint freed).  Response says whether it was still live.
   * ``GET /healthz``  — gateway + worker states.
   * ``GET /metrics``  — ``fleet_summarize`` output (incl. event-loop
-    ``clamped`` / ``peak_heap`` counters).
+    ``clamped`` / ``peak_heap`` counters and the fault-tolerance
+    counters: checkpoints, resumes, replayed_tokens, cancelled,
+    fenced_beats).
 
 Streaming backpressure composes with the gateway's channel watermarks:
 the writer task only ``take()``s another event after
 ``await writer.drain()`` returns, so a slow client stops draining its
 channel, the channel pauses, and the gateway evicts that one request
 from its engine until the client catches up — other streams unaffected.
+
+Robustness contract (pinned in tests/test_gateway.py): malformed bodies
+and header junk are 400s, unexpected handler failures are 500s — never
+an exception escaping the handler task — and a client that disconnects
+mid-stream gets its request *cancelled* (slot + checkpoint freed
+immediately) instead of generating into a dead socket until the
+slow-consumer eviction path notices.
 """
 from __future__ import annotations
 
@@ -69,6 +81,8 @@ async def _read_request(reader) -> Tuple[str, str, bytes]:
                 length = int(value.strip())
             except ValueError:
                 raise HTTPError(400, "bad Content-Length") from None
+    if length < 0 or length > 1_000_000:
+        raise HTTPError(400, "unreasonable Content-Length")
     body = await reader.readexactly(length) if length else b""
     return method.upper(), path, body
 
@@ -81,6 +95,9 @@ class GatewayHTTPServer:
         self.host = host
         self.port = port
         self._server = None
+        # fault injection (serving/faults.line_corruptor): bytes->bytes
+        # hook applied to each outgoing NDJSON line
+        self.line_hook = None
 
     async def start(self) -> None:
         loop = asyncio.get_running_loop()
@@ -110,11 +127,14 @@ class GatewayHTTPServer:
                 method, path, body = await _read_request(reader)
                 if method == "POST" and path == "/v1/generate":
                     await self._generate(body, writer)
+                elif method == "POST" and path == "/v1/cancel":
+                    self._cancel(body, writer)
                 elif method == "GET" and path == "/healthz":
                     self._send_json(writer, self.gateway.health())
                 elif method == "GET" and path == "/metrics":
                     self._send_json(writer, self.gateway.metrics_summary())
-                elif path in ("/v1/generate", "/healthz", "/metrics"):
+                elif path in ("/v1/generate", "/v1/cancel", "/healthz",
+                              "/metrics"):
                     raise HTTPError(405, f"{method} not allowed on {path}")
                 else:
                     raise HTTPError(404, f"no route for {path}")
@@ -122,8 +142,22 @@ class GatewayHTTPServer:
                 self._send_json(writer, {"error": e.message},
                                 status=e.status)
             except (asyncio.IncompleteReadError, ConnectionError):
-                return
-            await writer.drain()
+                return               # client went away; nothing to send
+            except (ValueError, asyncio.LimitOverrunError) as e:
+                # oversized/undecodable header lines etc. — client error
+                self._send_json(writer, {"error": f"malformed request: {e}"},
+                                status=400)
+            except Exception as e:   # noqa: BLE001 — last-resort 500:
+                # an exception must never escape the handler task (it
+                # would be swallowed by asyncio and kill this stream)
+                self._send_json(
+                    writer,
+                    {"error": f"internal error: {type(e).__name__}"},
+                    status=500)
+            try:
+                await writer.drain()
+            except ConnectionError:
+                pass
         finally:
             writer.close()
             try:
@@ -148,35 +182,59 @@ class GatewayHTTPServer:
         try:
             prompt_len = int(spec["prompt_len"])
             max_new = int(spec["max_new_tokens"])
+            prefix = int(spec.get("cached_prefix_len", 0))
         except (KeyError, TypeError, ValueError):
             raise HTTPError(
-                400, "prompt_len and max_new_tokens (ints) required"
-            ) from None
-        if prompt_len < 1 or max_new < 1:
-            raise HTTPError(400, "prompt_len and max_new_tokens must be >=1")
+                400, "prompt_len, max_new_tokens (ints) required; "
+                     "cached_prefix_len must be an int") from None
+        if prompt_len < 1 or max_new < 1 or prefix < 0:
+            raise HTTPError(400, "prompt_len and max_new_tokens must be "
+                                 ">=1, cached_prefix_len >=0")
+        session_id = spec.get("session_id")
+        if session_id is not None and not isinstance(session_id, str):
+            raise HTTPError(400, "session_id must be a string")
         gw = self.gateway
         r = Request(rid=gw.next_rid(), arrival=gw.clock.now,
                     prompt_len=prompt_len, max_new_tokens=max_new,
                     slo_class=str(spec.get("slo_class", "interactive")),
-                    session_id=spec.get("session_id"),
-                    cached_prefix_len=int(spec.get("cached_prefix_len", 0)))
+                    session_id=session_id,
+                    cached_prefix_len=prefix)
         wake = asyncio.Event()
         channel = gw.submit(r, notify=wake.set)
         writer.write(_response_head(200, "application/x-ndjson"))
-        await writer.drain()
-        while not channel.done:
-            ev = channel.take()
-            if ev is None:
-                wake.clear()
-                if channel.closed and not channel.buf:
-                    break
-                await wake.wait()
-                continue
-            writer.write((event_to_json(ev) + "\n").encode())
-            # drain before taking the next event: a slow client parks us
-            # here, the channel fills, and the gateway backpressures this
-            # one request out of its engine
+        try:
             await writer.drain()
+            while not channel.done:
+                ev = channel.take()
+                if ev is None:
+                    wake.clear()
+                    if channel.closed and not channel.buf:
+                        break
+                    await wake.wait()
+                    continue
+                line = (event_to_json(ev) + "\n").encode()
+                if self.line_hook is not None:
+                    line = self.line_hook(line)
+                writer.write(line)
+                # drain before taking the next event: a slow client parks
+                # us here, the channel fills, and the gateway
+                # backpressures this one request out of its engine
+                await writer.drain()
+        except (ConnectionError, asyncio.CancelledError):
+            # mid-stream client abort: cancel instead of generating into
+            # a dead socket (frees the engine slot + parked checkpoint)
+            gw.cancel(r.rid, reason="disconnect")
+            raise
+
+    def _cancel(self, body: bytes, writer) -> None:
+        try:
+            spec = json.loads(body or b"{}")
+            rid = int(spec["rid"])
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+            raise HTTPError(400, "body must be JSON with an int rid") \
+                from None
+        ok = self.gateway.cancel(rid, reason="client_cancel")
+        self._send_json(writer, {"rid": rid, "cancelled": ok})
 
 
 def run_http(gateway, host: str = "127.0.0.1", port: int = 8080) -> None:

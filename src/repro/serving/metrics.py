@@ -22,7 +22,8 @@ from typing import Dict, Iterable, List, Optional, Sequence
 import numpy as np
 
 from repro.config import SLOConfig
-from repro.core.events import FinishedEvent, RejectedEvent, TokenEvent
+from repro.core.events import (CancelledEvent, FinishedEvent, RejectedEvent,
+                               TokenEvent)
 from repro.core.request import Request, State
 
 
@@ -65,6 +66,7 @@ class RequestRecord:
     reject_reason: Optional[str] = None
     retries: int = 0          # gateway failovers after worker crashes
     truncated: bool = False   # admission capped max_new_tokens to fit
+    cancelled: bool = False   # client cancel / disconnect mid-stream
 
     @classmethod
     def from_request(cls, r: Request) -> "RequestRecord":
@@ -125,6 +127,20 @@ class StreamMetrics:
                 finish=None, preemptions=ev.preemptions, rejected=True,
                 slo_class=ev.slo_class, reject_reason=ev.reason,
                 retries=ev.retries))
+        elif isinstance(ev, CancelledEvent):
+            # terminal but neither success nor rejection: the partial
+            # stream the client walked away from.  finish=None keeps it
+            # out of completion/goodput; TTFT/ITL reflect what it saw.
+            ts = self._token_times.pop(ev.rid, [])
+            itls = [b - a for a, b in zip(ts, ts[1:])]
+            self.records.append(RequestRecord(
+                rid=ev.rid, arrival=ev.arrival, prompt_len=ev.prompt_len,
+                output_len=ev.output_len,
+                ttft=ts[0] - ev.arrival if ts else None,
+                itl_p95=percentile_linear(itls, 95) if itls else None,
+                finish=None, preemptions=ev.preemptions, rejected=False,
+                slo_class=ev.slo_class, retries=ev.retries,
+                cancelled=True))
 
     def finished_since(self, t_lo: float) -> List[RequestRecord]:
         """Records that finished at or after ``t_lo`` (windowed view)."""
@@ -195,6 +211,7 @@ def summarize(records: List[RequestRecord], slo: SLOConfig,
         "preemptions": sum(r.preemptions for r in done),
         "retries": sum(r.retries for r in records),
         "truncated": sum(1 for r in done if r.truncated),
+        "cancelled": sum(1 for r in records if r.cancelled),
     }
 
 

@@ -69,6 +69,7 @@ class ReplicaWorker:
         self._beat_armed = False
         self.crashed = False         # ground truth; state lags detection
         self.death_handled = False   # gateway's failover-ran-once latch
+        self._suppressed_beats = 0   # fault injection: heartbeat flap
         engine.subscribe(self._forward)
 
     # -- identity / views ---------------------------------------------------
@@ -158,11 +159,22 @@ class ReplicaWorker:
             self._beat_armed = True
             self.clock.after(self.heartbeat_s, self._beat)
 
+    def suppress_beats(self, n: int) -> None:
+        """Fault injection: swallow the next ``n`` heartbeats while the
+        worker keeps running (GC pause / network flap).  If ``n *
+        heartbeat_s`` stays under the registry's ``heartbeat_timeout_s``
+        the flap must be invisible — no failover (pinned in
+        tests/test_gateway_churn.py)."""
+        self._suppressed_beats = max(self._suppressed_beats, n)
+
     def _beat(self) -> None:
         self._beat_armed = False
         if self.crashed or self.state in (WorkerState.DEAD,
                                           WorkerState.RETIRED):
             return                      # crashed workers fall silent
-        self._heartbeat(self.wid)
+        if self._suppressed_beats > 0:
+            self._suppressed_beats -= 1     # flapping: alive but silent
+        else:
+            self._heartbeat(self.wid)
         if self._keep_alive():
             self.ensure_beat()

@@ -27,7 +27,8 @@ _HYPOTHESIS_MODULES = ["test_engines.py", "test_training.py",
                        "test_router_properties.py",
                        "test_engine_accounting_properties.py",
                        "test_liveness_properties.py",
-                       "test_wire_properties.py"]
+                       "test_wire_properties.py",
+                       "test_chaos_properties.py"]
 
 collect_ignore = [] if _HAS_HYPOTHESIS else list(_HYPOTHESIS_MODULES)
 

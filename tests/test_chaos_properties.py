@@ -1,0 +1,149 @@
+"""Chaos property suite (hypothesis; skipped when it is not installed).
+
+The gateway's robustness contract, stated once and checked under
+*arbitrary* deterministic fault schedules drawn by hypothesis:
+
+    Every accepted request terminates **exactly once** — one terminal
+    ``finished`` / ``rejected`` / ``cancelled`` event, as the last event
+    on its stream — no matter what combination of worker crashes,
+    replacement workers, heartbeat flaps, wire loss/corruption, consumer
+    stalls and client cancels the schedule throws at it.
+
+Supporting invariants ride along: every consumer sees one contiguous
+token-index prefix (the channel dedupes failover replay and discards
+out-of-order wire survivors), ``worker_lost`` rejections report exactly
+the partial output the client actually received, and the fleet metrics
+account for every request exactly once.
+
+Fault times, fleet shape and the checkpoint interval are all drawn by
+hypothesis, but each individual run is bit-deterministic (simulated
+clock), so every shrunk counterexample replays.
+"""
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core.events import (CancelledEvent, FinishedEvent, RejectedEvent,
+                               TERMINAL_EVENTS, TokenEvent)
+from repro.core.request import Request
+from repro.serving import Fault, FaultInjector, FaultPlan, Gateway, \
+    GatewayPolicy
+
+CFG = get_config("llama3-70b")
+N_WORKERS = 2
+N_RIDS = 5            # requests per run (rids 0..N_RIDS-1)
+
+
+def _serve(chips=16):
+    return ServeConfig(mode="rapid", chips=chips,
+                       slo=SLOConfig(itl_ms=100.0), chunk_size=512,
+                       disagg_split=(chips // 2, chips // 2),
+                       max_batch_slots=64)
+
+
+_T = st.floats(min_value=0.05, max_value=4.0)
+_WID = st.integers(min_value=0, max_value=N_WORKERS)    # may not exist: ok
+_RID = st.integers(min_value=-1, max_value=N_RIDS - 1)
+
+_FAULT = st.one_of(
+    st.builds(Fault, kind=st.just("crash"), t=_T, wid=_WID),
+    st.builds(Fault, kind=st.just("restart"), t=_T),
+    st.builds(Fault, kind=st.just("flap"), t=_T, wid=_WID,
+              count=st.integers(min_value=1, max_value=6)),
+    st.builds(Fault, kind=st.just("drop"), t=_T, rid=_RID,
+              count=st.integers(min_value=1, max_value=4)),
+    st.builds(Fault, kind=st.just("corrupt"), t=_T, rid=_RID,
+              count=st.integers(min_value=1, max_value=4)),
+    st.builds(Fault, kind=st.just("stall"), t=_T,
+              rid=st.integers(min_value=0, max_value=N_RIDS - 1),
+              duration=st.floats(min_value=0.1, max_value=2.0)),
+)
+
+_PLAN = st.lists(_FAULT, max_size=6).map(
+    lambda fs: FaultPlan(tuple(sorted(fs, key=lambda f: f.t))))
+
+_CANCELS = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=N_RIDS - 1),
+              st.floats(min_value=0.1, max_value=3.0)),
+    max_size=2)
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(plan=_PLAN, cancels=_CANCELS,
+       interval=st.sampled_from([0, 16]),
+       max_new=st.integers(min_value=20, max_value=80))
+def test_every_accepted_request_terminates_exactly_once(
+        plan, cancels, interval, max_new):
+    gw = Gateway(CFG, _serve(), modes=["rapid"] * N_WORKERS,
+                 router="round_robin",
+                 policy=GatewayPolicy(checkpoint_interval=interval))
+    FaultInjector(gw, plan).arm()
+    for rid, t in cancels:
+        gw.clock.at(t, lambda rid=rid: gw.cancel(rid))
+    seen = {}
+    reqs = [Request(rid=i, arrival=0.05 * i, prompt_len=128,
+                    max_new_tokens=max_new) for i in range(N_RIDS)]
+    gw._expected = len(reqs)
+    for r in reqs:
+        def go(r=r):
+            seen[r.rid] = []
+            gw.submit(r, consumer=seen[r.rid].append)
+        gw.clock.at(r.arrival, go)
+    gw.clock.run()           # termination of the sim loop IS liveness
+
+    assert set(seen) == set(range(N_RIDS))
+    lossy = any(f.kind in ("drop", "corrupt") for f in plan)
+    for rid, evs in seen.items():
+        terminals = [e for e in evs if isinstance(e, TERMINAL_EVENTS)]
+        # the contract: exactly one terminal, and nothing after it
+        assert len(terminals) == 1, (rid, [type(e).__name__ for e in evs])
+        assert evs[-1] is terminals[0], rid
+        term = terminals[0]
+        idxs = [e.index for e in evs if isinstance(e, TokenEvent)]
+        # contiguous prefix: dedupe kills replays, wire loss only thins
+        # the tail (later survivors are discarded as out-of-order)
+        assert idxs == list(range(len(idxs))), (rid, idxs)
+        if isinstance(term, (RejectedEvent, CancelledEvent)):
+            # partial progress reported = tokens actually delivered
+            assert term.output_len == len(idxs), rid
+        else:
+            assert isinstance(term, FinishedEvent)
+            assert term.output_len == max_new, rid
+            if not lossy:
+                assert len(idxs) == max_new, rid
+    # fleet accounting: each request exactly once
+    recs = [r for r in gw.metrics.records]
+    assert sorted(r.rid for r in recs) == list(range(N_RIDS))
+    fleet = gw.metrics_summary()["fleet"]
+    assert (fleet["completed"] + fleet["rejected"] + fleet["cancelled"]
+            == N_RIDS)
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       crashes=st.integers(min_value=1, max_value=4))
+def test_crash_storms_lose_nothing_and_checkpoints_bound_replay(
+        seed, crashes):
+    """Pure crash storms (always with replacement workers, so failover
+    targets exist): nothing is lost, and the checkpointed arm never
+    replays more than the re-prefill arm on the identical storm."""
+    replayed = {}
+    for interval in (0, 16):
+        gw = Gateway(CFG, _serve(), modes=["rapid"] * (N_WORKERS + 1),
+                     router="round_robin",
+                     policy=GatewayPolicy(checkpoint_interval=interval))
+        plan = FaultPlan.crash_storm(seed=seed, workers=N_WORKERS + 1,
+                                     t0=0.5, t1=4.0, crashes=crashes,
+                                     restart_after=1.0)
+        FaultInjector(gw, plan).arm()
+        reqs = [Request(rid=i, arrival=0.05 * i, prompt_len=128,
+                        max_new_tokens=80) for i in range(N_RIDS)]
+        recs, _ = gw.serve_trace(reqs)
+        assert len(recs) == N_RIDS
+        assert sorted(r.rid for r in recs) == list(range(N_RIDS))
+        fleet = gw.metrics_summary()["fleet"]
+        assert fleet["completed"] + fleet["rejected"] == N_RIDS
+        replayed[interval] = gw.replayed_tokens
+    assert replayed[16] <= replayed[0]

@@ -14,10 +14,10 @@ import pytest
 
 from repro.config import SLOConfig, ServeConfig, get_config
 from repro.core import make_engine
-from repro.core.events import (FinishedEvent, PhaseEvent, RejectedEvent,
-                               TokenEvent, WIRE_TYPES, event_from_json,
-                               event_from_wire, event_to_json,
-                               event_to_wire)
+from repro.core.events import (CancelledEvent, FinishedEvent, PhaseEvent,
+                               RejectedEvent, TokenEvent, WIRE_TYPES,
+                               event_from_json, event_from_wire,
+                               event_to_json, event_to_wire)
 from repro.core.request import Request
 
 SAMPLES = [
@@ -33,6 +33,10 @@ SAMPLES = [
                   reason="worker_lost", output_len=17, preemptions=1,
                   slo_class="best_effort", retries=3),
     RejectedEvent(rid=4, t=0.25, arrival=0.25, prompt_len=64),
+    CancelledEvent(rid=5, t=2.5, arrival=1.0, prompt_len=128,
+                   output_len=37, preemptions=1, slo_class="interactive",
+                   retries=1, reason="disconnect"),
+    CancelledEvent(rid=6, t=0.5, arrival=0.5, prompt_len=32),
 ]
 
 

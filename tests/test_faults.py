@@ -1,0 +1,328 @@
+"""Fault injection, retry policy, and KV checkpoint-resume recovery.
+
+Everything here runs on the simulated clock, so crash timing, snapshot
+commits and failover replay counts are bit-deterministic.  The headline
+golden test pins the PR's bounded-replay guarantee: a crash mid-decode
+with ``checkpoint_interval=N`` re-computes **at most N tokens** (the
+channel's ``dup_tokens`` counts exactly the replayed indices), where the
+re-prefill fallback replays the full generated prefix.
+"""
+import pytest
+
+from repro.config import SLOConfig, ServeConfig, get_config
+from repro.core.events import (CancelledEvent, FinishedEvent, PhaseEvent,
+                               RejectedEvent, TokenEvent)
+from repro.core.request import Request
+from repro.kvcache import CheckpointStore, KVCheckpoint
+from repro.serving import (Fault, FaultInjector, FaultPlan, Gateway,
+                           GatewayPolicy, RetryPolicy, line_corruptor)
+
+CFG = get_config("llama3-70b")
+
+
+def _serve(chips=16):
+    return ServeConfig(mode="rapid", chips=chips,
+                       slo=SLOConfig(itl_ms=100.0), chunk_size=512,
+                       disagg_split=(chips // 2, chips // 2),
+                       max_batch_slots=64)
+
+
+def _tokens(evs):
+    return [e.index for e in evs if isinstance(e, TokenEvent)]
+
+
+def _phases(evs, name):
+    return [e for e in evs if isinstance(e, PhaseEvent) and e.phase == name]
+
+
+# ---------------------------------------------------------------------------
+# retry policy
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_truncated_exponential_backoff():
+    p = RetryPolicy(max_retries=3, backoff_base_s=0.1, backoff_mult=2.0,
+                    backoff_max_s=0.35)
+    assert p.delay(0) == 0.0
+    assert p.delay(1) == pytest.approx(0.1)
+    assert p.delay(2) == pytest.approx(0.2)
+    assert p.delay(3) == pytest.approx(0.35)      # capped
+    assert p.delay(9) == pytest.approx(0.35)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint store
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_store_newest_wins_and_budget():
+    store = CheckpointStore(page_size=16, budget_blocks=40)
+    assert store.put(KVCheckpoint(rid=0, generated=32, kv_tokens=256, t=1.0))
+    assert store.put(KVCheckpoint(rid=0, generated=64, kv_tokens=288, t=2.0))
+    assert store.get(0).generated == 64           # newest wins per rid
+    assert len(store) == 1 and store.taken == 2
+    # a snapshot bigger than the whole budget is refused outright
+    assert not store.put(KVCheckpoint(rid=1, generated=8,
+                                      kv_tokens=16 * 41, t=3.0))
+    assert store.refused == 1 and store.get(1) is None
+    # filling past the budget evicts the oldest-committed other request
+    # (rid 0 holds 18 pages; 23 more would overflow the 40-page budget)
+    assert store.put(KVCheckpoint(rid=2, generated=8, kv_tokens=368, t=4.0))
+    assert store.evicted == 1 and store.get(0) is None
+    assert store.get(2) is not None
+    assert store.blocks <= 40
+    store.drop(2)
+    assert len(store) == 0 and store.blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-resume failover (the tentpole golden test)
+# ---------------------------------------------------------------------------
+
+def _crash_recovery(interval, kill_at=3.0):
+    """One long decode on worker 0 of 2; kill it mid-stream.  Returns
+    the gateway, the consumer's event list, and a snapshot of
+    (tokens delivered, newest committed checkpoint) taken at the kill."""
+    gw = Gateway(CFG, _serve(), modes=["rapid", "rapid"],
+                 router="round_robin",
+                 policy=GatewayPolicy(checkpoint_interval=interval))
+    evs = []
+    r = Request(rid=0, arrival=0.0, prompt_len=256, max_new_tokens=300)
+    gw._expected = 1
+    gw.clock.at(0.0, lambda: gw.submit(r, consumer=evs.append))
+    gw.clock.at(kill_at, lambda: gw.kill_worker(0))
+    snap = {}
+
+    def grab():
+        ck = gw.checkpoints.get(0)
+        snap["delivered"] = gw._live[0].channel.next_index
+        snap["last_g"] = ck.generated if ck is not None else 0
+
+    gw.clock.at(kill_at + 1e-6, grab)
+    gw.clock.run()
+    return gw, evs, snap
+
+
+def test_checkpoint_resume_bounds_replay_to_interval():
+    interval = 50
+    gw, evs, snap = _crash_recovery(interval)
+    fin = evs[-1]
+    assert isinstance(fin, FinishedEvent)
+    assert fin.retries == 1
+    # rebasing restores the request's absolute coordinates
+    assert fin.output_len == 300 and fin.prompt_len == 256
+    assert _tokens(evs) == list(range(300))       # contiguous, exactly once
+    # the crash landed mid-interval: the newest snapshot covers all full
+    # intervals delivered before the kill
+    assert snap["delivered"] > interval
+    assert snap["last_g"] == interval * (snap["delivered"] // interval)
+    # bounded replay: the resumed clone re-computed exactly the tokens
+    # generated after the snapshot — never more than one interval
+    assert gw.replayed_tokens == snap["delivered"] - snap["last_g"]
+    assert 0 < gw.replayed_tokens <= interval
+    assert gw.resumes == 1
+    assert len(_phases(evs, "checkpoint")) == snap["last_g"] // interval
+    assert len(_phases(evs, "resume")) == 1
+    fleet = gw.metrics_summary()["fleet"]
+    assert fleet["resumes"] == 1 and fleet["retries"] == 1
+    assert fleet["replayed_tokens"] == gw.replayed_tokens
+
+
+def test_reprefill_fallback_replays_full_prefix():
+    """checkpoint_interval=0 (default): same crash, but the failover
+    clone re-decodes every token the dead worker had produced."""
+    gw, evs, snap = _crash_recovery(interval=0)
+    fin = evs[-1]
+    assert isinstance(fin, FinishedEvent) and fin.retries == 1
+    assert _tokens(evs) == list(range(300))
+    assert snap["last_g"] == 0
+    assert gw.replayed_tokens == snap["delivered"]    # the whole prefix
+    assert gw.resumes == 0 and gw.checkpoints.taken == 0
+    assert not _phases(evs, "checkpoint") and not _phases(evs, "resume")
+
+
+def test_resume_beats_reprefill_on_replayed_tokens():
+    _, _, snap = _crash_recovery(interval=50)
+    gw_ck, _, _ = _crash_recovery(interval=50)
+    gw_rp, _, _ = _crash_recovery(interval=0)
+    assert gw_ck.replayed_tokens < gw_rp.replayed_tokens
+    assert snap["delivered"] == gw_rp.replayed_tokens
+
+
+def test_inflight_checkpoint_dies_with_its_worker():
+    """A snapshot copy that is on the wire when the source crashes must
+    not commit (crash consistency): kill right after the interval
+    boundary token, on a link so slow the transfer cannot finish."""
+    gw = Gateway(CFG, _serve(), modes=["rapid", "rapid"],
+                 router="round_robin",
+                 policy=GatewayPolicy(checkpoint_interval=200,
+                                      checkpoint_gbps=0.001))
+    out = []
+
+    def consume(ev):
+        out.append(ev)
+        if isinstance(ev, TokenEvent) and ev.index == 205:
+            # copy of the g=200 snapshot is mid-flight on the slow link
+            gw.clock.after(0, lambda: gw.kill_worker(0))
+
+    gw._expected = 1
+    gw.clock.at(0.0, lambda: gw.submit(
+        Request(rid=0, arrival=0.0, prompt_len=256, max_new_tokens=300),
+        consumer=consume))
+    gw.clock.run()
+    fin = out[-1]
+    assert isinstance(fin, FinishedEvent) and fin.retries == 1
+    assert _tokens(out) == list(range(300))
+    # the only snapshot never committed -> pure re-prefill failover
+    assert gw.checkpoints.taken == 0 and gw.resumes == 0
+    assert not _phases(out, "checkpoint")
+
+
+# ---------------------------------------------------------------------------
+# fault plans / injector
+# ---------------------------------------------------------------------------
+
+def test_fault_kind_validated():
+    with pytest.raises(ValueError):
+        Fault(kind="meteor", t=1.0)
+
+
+def test_crash_storm_is_deterministic_and_paired():
+    a = FaultPlan.crash_storm(seed=7, workers=3, t0=1.0, t1=9.0, crashes=4)
+    b = FaultPlan.crash_storm(seed=7, workers=3, t0=1.0, t1=9.0, crashes=4)
+    assert a == b and len(a) == 8
+    ts = [f.t for f in a]
+    assert ts == sorted(ts)
+    kinds = sorted(f.kind for f in a)
+    assert kinds == ["crash"] * 4 + ["restart"] * 4
+    for f in a:
+        if f.kind == "crash":
+            assert 1.0 <= f.t < 9.0 and 0 <= f.wid < 3
+    assert a != FaultPlan.crash_storm(seed=8, workers=3, t0=1.0, t1=9.0,
+                                      crashes=4)
+
+
+def test_injector_wire_drop_and_corrupt_only_hit_tokens():
+    """Lossy wire: dropped/corrupted *token* lines thin the stream (the
+    channel counts them as gaps) but the terminal always arrives — the
+    consumer still sees one contiguous prefix and exactly one terminal."""
+    gw = Gateway(CFG, _serve(), modes=["rapid"], router="round_robin")
+    plan = FaultPlan((Fault(kind="drop", t=0.5, rid=0, count=3),
+                      Fault(kind="corrupt", t=1.0, rid=0, count=2)))
+    inj = FaultInjector(gw, plan).arm()
+    evs = []
+    r = Request(rid=0, arrival=0.0, prompt_len=128, max_new_tokens=200)
+    gw._expected = 1
+    gw.clock.at(0.0, lambda: gw.submit(r, consumer=evs.append))
+    gw.clock.run()
+
+    assert inj.dropped_lines == 3 and inj.corrupted_lines == 2
+    assert inj.injected["drop"] == 1 and inj.injected["corrupt"] == 1
+    fin = evs[-1]
+    assert isinstance(fin, FinishedEvent)         # terminals are reliable
+    assert fin.output_len == 200                  # engine-side truth
+    idxs = _tokens(evs)
+    assert idxs == list(range(len(idxs)))         # contiguous prefix
+    assert len(idxs) < 200                        # the wire really lost lines
+    st_gap = 200 - len(idxs)
+    assert st_gap >= 3                            # at least the dropped ones
+
+
+def test_injector_stall_engages_backpressure_and_recovers():
+    """A stalled consumer wedges its channel mid-decode: the gateway's
+    slow-consumer machinery evicts that one request; unstall drains and
+    the request completes with a contiguous stream."""
+    gw = Gateway(CFG, _serve(), modes=["rapid"], router="round_robin")
+    plan = FaultPlan((Fault(kind="stall", t=0.5, rid=0, duration=4.0),))
+    FaultInjector(gw, plan).arm()
+    slow, fast = [], []
+    gw._expected = 2
+    gw.clock.at(0.0, lambda: gw.submit(
+        Request(rid=0, arrival=0.0, prompt_len=128, max_new_tokens=300),
+        consumer=slow.append))
+    gw.clock.at(0.0, lambda: gw.submit(
+        Request(rid=1, arrival=0.0, prompt_len=128, max_new_tokens=300),
+        consumer=fast.append))
+    gw.clock.run()
+
+    slow_fin, fast_fin = slow[-1], fast[-1]
+    assert isinstance(slow_fin, FinishedEvent)
+    assert isinstance(fast_fin, FinishedEvent)
+    assert slow_fin.preemptions >= 1              # it WAS parked
+    assert fast_fin.preemptions == 0              # isolation
+    assert _tokens(slow) == list(range(300))
+    assert _tokens(fast) == list(range(300))
+
+
+def test_injector_flap_and_restart_fire():
+    gw = Gateway(CFG, _serve(), modes=["rapid", "rapid"],
+                 router="round_robin")
+    plan = FaultPlan((Fault(kind="flap", t=0.3, wid=1, count=2),
+                      Fault(kind="restart", t=0.6, mode="rapid"),
+                      Fault(kind="crash", t=0.9, wid=99)))   # unknown: no-op
+    inj = FaultInjector(gw, plan).arm()
+    recs, _ = gw.serve_trace(
+        [Request(rid=i, arrival=0.02 * i, prompt_len=128,
+                 max_new_tokens=150) for i in range(4)])
+    assert inj.injected == {"crash": 1, "restart": 1, "flap": 1,
+                            "drop": 0, "corrupt": 0, "stall": 0}
+    assert all(r.finish is not None for r in recs)
+    assert sum(r.retries for r in recs) == 0      # flap under the timeout
+    assert len(gw.registry.workers) == 3          # the restart joined
+
+
+# ---------------------------------------------------------------------------
+# client cancellation
+# ---------------------------------------------------------------------------
+
+def test_cancel_frees_slot_checkpoint_and_counts():
+    gw = Gateway(CFG, _serve(), modes=["rapid"], router="round_robin",
+                 policy=GatewayPolicy(checkpoint_interval=50))
+    evs, other = [], []
+    gw._expected = 2
+    gw.clock.at(0.0, lambda: gw.submit(
+        Request(rid=0, arrival=0.0, prompt_len=128, max_new_tokens=400),
+        consumer=evs.append))
+    gw.clock.at(0.0, lambda: gw.submit(
+        Request(rid=1, arrival=0.0, prompt_len=128, max_new_tokens=400),
+        consumer=other.append))
+    state = {}
+
+    def do_cancel():
+        state["had_ckpt"] = gw.checkpoints.get(0) is not None
+        assert gw.cancel(0, reason="client_cancel")
+        state["ckpt_after"] = gw.checkpoints.get(0)
+        state["delivered"] = len(_tokens(evs))
+
+    gw.clock.at(4.0, do_cancel)
+    gw.clock.run()
+
+    term = evs[-1]
+    assert isinstance(term, CancelledEvent)
+    assert term.reason == "client_cancel"
+    assert term.output_len == state["delivered"] > 0
+    assert state["had_ckpt"] and state["ckpt_after"] is None
+    # the survivor ran to completion on the freed capacity
+    assert isinstance(other[-1], FinishedEvent)
+    assert _tokens(other) == list(range(400))
+    assert gw.cancellations == 1
+    assert not gw._live and gw.health()["live_requests"] == 0
+    # cancelling a non-live rid is a polite no-op
+    assert not gw.cancel(0) and not gw.cancel(12345)
+    s = gw.metrics_summary()["fleet"]
+    assert s["cancelled"] == 1 and s["completed"] == 1
+    rec = {r.rid: r for r in gw.metrics.records}
+    assert rec[0].cancelled and not rec[0].rejected
+    assert rec[0].output_len == state["delivered"]
+    assert not rec[1].cancelled
+
+
+# ---------------------------------------------------------------------------
+# NDJSON line corruptor (HTTP-side fault hook)
+# ---------------------------------------------------------------------------
+
+def test_line_corruptor_deterministic_and_rate_zero_passthrough():
+    import random
+    line = b'{"type": "token", "rid": 1, "t": 0.5, "index": 3}\n'
+    assert line_corruptor(rate=0.0)(line) == line
+    a = line_corruptor(random.Random(3), rate=1.0)(line)
+    b = line_corruptor(random.Random(3), rate=1.0)(line)
+    assert a == b != line and len(a) == len(line)

@@ -279,6 +279,212 @@ def test_http_generate_healthz_metrics():
     asyncio.run(asyncio.wait_for(scenario(), timeout=60))
 
 
+def test_http_malformed_inputs_get_400_and_server_survives():
+    """Robustness contract: junk bodies, junk headers and junk request
+    lines are client errors (400/405), never an exception escaping the
+    handler — the server keeps answering afterwards."""
+    import asyncio
+    import json as _json
+
+    from repro.serving import GatewayHTTPServer, RealTimeClock
+
+    async def scenario():
+        gw = Gateway(CFG, _serve(), modes=["rapid"], clock=RealTimeClock())
+        server = GatewayHTTPServer(gw, host="127.0.0.1", port=0)
+        try:
+            await server.start()
+        except OSError as e:
+            pytest.skip(f"cannot bind localhost: {e}")
+        port = server._server.sockets[0].getsockname()[1]
+
+        async def raw(payload: bytes):
+            reader, writer = await asyncio.open_connection("127.0.0.1",
+                                                           port)
+            writer.write(payload)
+            await writer.drain()
+            data = await reader.read()
+            writer.close()
+            await writer.wait_closed()
+            header, _, body = data.partition(b"\r\n\r\n")
+            return int(header.split()[1]), body
+
+        async def call(method, path, body=b""):
+            head = (f"{method} {path} HTTP/1.1\r\nHost: x\r\n"
+                    f"Content-Length: {len(body)}\r\n\r\n").encode()
+            return await raw(head + body)
+
+        bad_bodies = [
+            b"{bad json",                                  # not JSON
+            b"[1, 2, 3]",                                  # not an object
+            b'{"max_new_tokens": 4}',                      # missing field
+            b'{"prompt_len": "x", "max_new_tokens": 4}',   # wrong type
+            b'{"prompt_len": 0, "max_new_tokens": 4}',     # out of range
+            b'{"prompt_len": 8, "max_new_tokens": 4, "cached_prefix_len": -1}',
+            b'{"prompt_len": 8, "max_new_tokens": 4, "session_id": 5}',
+        ]
+        for body in bad_bodies:
+            status, _ = await call("POST", "/v1/generate", body)
+            assert status == 400, body
+        for body in [b"notjson", b'{"rid": "x"}', b"{}"]:
+            status, _ = await call("POST", "/v1/cancel", body)
+            assert status == 400, body
+        # cancel of an unknown rid is a clean "no"
+        status, payload = await call("POST", "/v1/cancel", b'{"rid": 99}')
+        assert status == 200
+        assert _json.loads(payload) == {"rid": 99, "cancelled": False}
+        # junk request line / headers
+        status, _ = await raw(b"GARBAGE\r\n\r\n")
+        assert status == 400
+        status, _ = await raw(b"POST /v1/generate HTTP/1.1\r\n"
+                              b"Content-Length: -5\r\n\r\n")
+        assert status == 400
+        status, _ = await raw(b"POST /v1/generate HTTP/1.1\r\n"
+                              b"Content-Length: 9999999\r\n\r\n")
+        assert status == 400
+        status, _ = await call("GET", "/v1/generate")
+        assert status == 405
+        # the server is still healthy after all of that
+        status, payload = await call("GET", "/healthz")
+        assert status == 200
+        assert _json.loads(payload)["status"] == "ok"
+        await server.close()
+
+    asyncio.run(asyncio.wait_for(scenario(), timeout=60))
+
+
+def test_http_cancel_route_and_midstream_disconnect():
+    """Streaming cancellation end to end: POST /v1/cancel terminates a
+    live stream with a typed ``cancelled`` NDJSON line, and a client
+    that disconnects mid-stream gets its request cancelled server-side
+    (engine slot freed) instead of decoding into a dead socket."""
+    import asyncio
+    import json as _json
+
+    from repro.core.events import CancelledEvent, event_from_json
+    from repro.serving import GatewayHTTPServer, RealTimeClock
+
+    async def scenario():
+        gw = Gateway(CFG, _serve(), modes=["rapid"], clock=RealTimeClock())
+        server = GatewayHTTPServer(gw, host="127.0.0.1", port=0)
+        try:
+            await server.start()
+        except OSError as e:
+            pytest.skip(f"cannot bind localhost: {e}")
+        port = server._server.sockets[0].getsockname()[1]
+
+        async def post(path, body):
+            reader, writer = await asyncio.open_connection("127.0.0.1",
+                                                           port)
+            head = (f"POST {path} HTTP/1.1\r\nHost: x\r\n"
+                    f"Content-Length: {len(body)}\r\n\r\n").encode()
+            writer.write(head + body)
+            await writer.drain()
+            await reader.readuntil(b"\r\n\r\n")      # response headers
+            return reader, writer
+
+        # -- explicit cancel via the API (request rid 0) --------------
+        body = _json.dumps({"prompt_len": 64,
+                            "max_new_tokens": 4000}).encode()
+        reader, writer = await post("/v1/generate", body)
+        for _ in range(3):                           # stream is live
+            await reader.readline()
+        c_reader, c_writer = await post("/v1/cancel",
+                                        _json.dumps({"rid": 0}).encode())
+        resp = _json.loads(await c_reader.read())
+        assert resp == {"rid": 0, "cancelled": True}
+        c_writer.close()
+        await c_writer.wait_closed()
+        tail = await asyncio.wait_for(reader.read(), timeout=30)
+        last = tail.decode().splitlines()[-1]
+        term = event_from_json(last)
+        assert isinstance(term, CancelledEvent)
+        assert term.reason == "client_cancel" and term.rid == 0
+        writer.close()
+        await writer.wait_closed()
+
+        # -- abrupt disconnect mid-stream (request rid 1) -------------
+        reader, writer = await post("/v1/generate", body)
+        for _ in range(3):
+            await reader.readline()
+        writer.transport.abort()                     # RST, no goodbye
+        for _ in range(400):                         # server notices on
+            if gw.cancellations >= 2:                # its next write
+                break
+            await asyncio.sleep(0.05)
+        assert gw.cancellations == 2
+        recs = {r.rid: r for r in gw.metrics.records}
+        assert recs[0].cancelled and recs[1].cancelled
+        assert gw.health()["live_requests"] == 0
+        s = gw.metrics_summary()["fleet"]
+        assert s["cancelled"] == 2
+        await server.close()
+
+    asyncio.run(asyncio.wait_for(scenario(), timeout=60))
+
+
+def test_http_worker_lost_streams_partial_then_typed_reject():
+    """Crash round-trip over the wire: the NDJSON stream carries the
+    partial tokens generated before the crash, then the terminal
+    ``rejected`` line with reason=worker_lost and the partial
+    ``output_len`` — never a hung socket or a bare EOF."""
+    import asyncio
+    import json as _json
+
+    from repro.core.events import event_from_json
+    from repro.serving import (GatewayHTTPServer, GatewayPolicy,
+                               RealTimeClock)
+
+    async def scenario():
+        # fast heartbeats so death detection fits in test time
+        policy = GatewayPolicy(heartbeat_s=0.05, heartbeat_timeout_s=0.2,
+                               health_check_s=0.05)
+        gw = Gateway(CFG, _serve(), modes=["rapid"], clock=RealTimeClock(),
+                     policy=policy)
+        server = GatewayHTTPServer(gw, host="127.0.0.1", port=0)
+        try:
+            await server.start()
+        except OSError as e:
+            pytest.skip(f"cannot bind localhost: {e}")
+        port = server._server.sockets[0].getsockname()[1]
+
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        body = _json.dumps({"prompt_len": 64,
+                            "max_new_tokens": 4000}).encode()
+        head = (f"POST /v1/generate HTTP/1.1\r\nHost: x\r\n"
+                f"Content-Length: {len(body)}\r\n\r\n").encode()
+        writer.write(head + body)
+        await writer.drain()
+        await reader.readuntil(b"\r\n\r\n")
+
+        events, killed = [], False
+        while True:
+            line = await reader.readline()
+            if not line:
+                break
+            if not line.strip():
+                continue
+            ev = event_from_json(line.decode())
+            events.append(ev)
+            if (not killed and isinstance(ev, TokenEvent)
+                    and ev.index >= 3):
+                killed = True
+                gw.kill_worker(0)        # sole worker: no failover target
+        writer.close()
+        await writer.wait_closed()
+        await server.close()
+
+        assert killed, "stream never produced tokens"
+        term = events[-1]
+        assert isinstance(term, RejectedEvent)
+        assert term.reason == "worker_lost"
+        assert term.retries == 1             # one failover attempt made
+        toks = [e for e in events if isinstance(e, TokenEvent)]
+        assert [e.index for e in toks] == list(range(len(toks)))
+        assert term.output_len == len(toks)  # partial progress reported
+
+    asyncio.run(asyncio.wait_for(scenario(), timeout=60))
+
+
 # ---------------------------------------------------------------------------
 # real-time clock (no asyncio loop started; just the adapter contract)
 # ---------------------------------------------------------------------------

@@ -111,6 +111,65 @@ def test_worker_restart_after_crash_restores_service():
     assert gw.health()["status"] == "ok"
 
 
+def test_heartbeat_flap_under_timeout_is_invisible():
+    """A worker that misses beats for *less* than the registry timeout
+    (GC pause, transient partition) must not trigger failover: defaults
+    are 0.5 s beats with a 1.75 s timeout, so a 2-beat flap stays a full
+    beat under the line."""
+    gw = Gateway(CFG, _serve(), modes=["rapid", "rapid"],
+                 router="round_robin")
+    seen = {}
+    reqs = [Request(rid=i, arrival=0.01 * i, prompt_len=256,
+                    max_new_tokens=300) for i in range(6)]
+    _capture(gw, reqs, seen)
+    gw.clock.at(0.3, lambda: gw.registry.workers[0].suppress_beats(2))
+    gw.clock.run()
+
+    for rid, evs in seen.items():
+        fin = _terminal(evs)
+        assert isinstance(fin, FinishedEvent), rid
+        assert fin.retries == 0, rid
+        assert _token_indices(evs) == list(range(300)), rid
+    assert gw.registry.workers[0].state is WorkerState.UP
+    assert gw.registry.fenced_beats == 0
+
+
+def test_heartbeat_flap_past_timeout_fails_over_and_fences():
+    """A flap *longer* than the timeout is indistinguishable from a
+    crash: the worker is declared dead, its requests fail over, and —
+    fencing — a late beat from the zombie can never resurrect it (its
+    requests were already re-homed; resurrection would double-serve)."""
+    gw = Gateway(CFG, _serve(), modes=["rapid", "rapid"],
+                 router="round_robin")
+    seen = {}
+    reqs = [Request(rid=i, arrival=0.01 * i, prompt_len=256,
+                    max_new_tokens=300) for i in range(6)]
+    _capture(gw, reqs, seen)
+    # 6 missed beats = 3.0 s of silence >> 1.75 s timeout
+    gw.clock.at(0.3, lambda: gw.registry.workers[0].suppress_beats(6))
+    late = []
+    def zombie_beat():
+        gw.registry.heartbeat(0)             # late beat from the "dead"
+        late.append(gw.registry.workers[0].state)
+    gw.clock.at(4.0, zombie_beat)
+    gw.clock.run()
+
+    retried = 0
+    for rid, evs in seen.items():
+        fin = _terminal(evs)
+        assert isinstance(fin, FinishedEvent), rid
+        assert _token_indices(evs) == list(range(300)), rid
+        retried += fin.retries
+    assert retried == 3                      # round_robin: half the trace
+    assert gw.registry.workers[0].state is WorkerState.DEAD
+    assert late == [WorkerState.DEAD]        # the beat did NOT revive it
+    assert gw.registry.fenced_beats >= 1
+    assert gw.metrics_summary()["fleet"]["fenced_beats"] >= 1
+    # a fenced worker only rejoins as a *fresh* worker
+    w = gw.add_worker("rapid")
+    assert w.wid == 2 and len(gw.registry.healthy()) == 2
+
+
 def test_drain_completes_in_flight_without_retries():
     """A drained worker finishes its in-flight decodes in place (no
     crash-style retries), hands queued work to peers, then retires and
